@@ -1,0 +1,18 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import tables
+
+    print("name,us_per_call,derived")
+    tables.table_lenet_memory()       # paper §3
+    tables.table_deployment()         # paper §4
+    tables.table_cmsis_comparison()   # paper §5 / Table 1
+    tables.table_kernels()            # kernel microbench (CPU ref + TPU derived)
+    tables.table_roofline()           # §Roofline summary from dry-run artifacts
+
+
+if __name__ == "__main__":
+    main()

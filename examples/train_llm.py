@@ -1,0 +1,97 @@
+"""Training driver: LM on the synthetic token stream with checkpoint/restart.
+
+Demonstrates the full substrate: config-driven model, AdamW, microbatching,
+data pipeline, checkpoint manager, straggler detection, preemption drain.
+Default model is CPU-sized; ``--dmodel/--layers`` scale it up (the ~100M
+configuration is ``--dmodel 768 --layers 12`` — the paper's kind is
+inference, so serving (serve_llm.py) is the primary end-to-end driver and
+this one defaults to a fast demonstration).
+
+    PYTHONPATH=src python examples/train_llm.py [--steps N] [--resume]
+"""
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import tokens as tok
+from repro.models.transformer import Model
+from repro.train import optimizer as opt
+from repro.train.loop import LoopConfig, run
+from repro.train.step import TrainStepConfig, make_train_step
+
+
+def lm_config(d_model: int, layers: int, vocab: int) -> ModelConfig:
+    return ModelConfig(
+        name=f"train-demo-{d_model}x{layers}",
+        family="dense",
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=max(d_model // 64, 2),
+        num_kv_heads=max(d_model // 128, 1),
+        head_dim=64,
+        d_ff=4 * d_model,
+        vocab_size=vocab,
+        block_pattern=("attn",),
+        mlp_act="swiglu",
+        norm="rmsnorm",
+        tie_embeddings=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--dmodel", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = lm_config(args.dmodel, args.layers, args.vocab)
+    model = Model(cfg, xent_impl="seq_chunked", xent_seq_chunk=64)
+    n = cfg.param_count()
+    print(f"model: {cfg.name} (~{n/1e6:.1f}M params analytic)")
+
+    pipe = tok.TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch
+    )
+    scfg = TrainStepConfig(
+        microbatches=args.microbatches,
+        adamw=opt.AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=args.steps),
+    )
+    train_step = jax.jit(make_train_step(model, scfg), donate_argnums=(0, 1))
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro-train-")
+    print(f"checkpoints: {ckpt_dir}")
+
+    def init_state():
+        from repro.train.loop import LoopState
+
+        params = model.init_params(jax.random.PRNGKey(0))
+        return LoopState(step=0, params=params, opt_state=opt.init_state(params))
+
+    def batch_at(step):
+        b = tok.batch_at_step(pipe, step)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    lcfg = LoopConfig(total_steps=args.steps, ckpt_dir=ckpt_dir, ckpt_every=20,
+                      log_every=10)
+    state = run(lcfg, train_step, init_state, batch_at)
+    uniform = float(np.log(cfg.vocab_size))
+    print(f"finished at step {state.step}; uniform-entropy floor would be "
+          f"{uniform:.3f} nats — the structured stream should train well below it.")
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

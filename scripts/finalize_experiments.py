@@ -1,0 +1,65 @@
+"""Render dry-run/roofline/perf tables into EXPERIMENTS.md.
+
+Replaces the <!-- DRYRUN_TABLE --> / <!-- ROOFLINE_TABLE --> markers with the
+report tables and rebuilds the §Perf iteration table from
+benchmarks/results/perf/*.json.
+
+    PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.launch import report  # noqa: E402
+
+
+def perf_rows(perf_dir: Path, base_dir: Path) -> str:
+    rows = [
+        "| cell | variant | compute s | memory s | collective s | dominant Δ | bottleneck |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    files = sorted(perf_dir.glob("*.json"))
+    for p in files:
+        rec = json.loads(p.read_text())
+        if rec.get("failed") or rec.get("skipped"):
+            continue
+        arch, shape = rec["arch"], rec["shape"]
+        variant = p.stem.split("__")[-1]
+        r = rec["roofline"]
+        base_p = base_dir / f"{arch}__{shape}__16x16.json"
+        delta = ""
+        if base_p.exists():
+            b = json.loads(base_p.read_text())
+            if not b.get("skipped") and not b.get("failed"):
+                br = b["roofline"]
+                dom_b = max(br["compute_s"], br["memory_s"], br["collective_s"])
+                dom_r = max(r["compute_s"], r["memory_s"], r["collective_s"])
+                delta = f"{(dom_r - dom_b) / dom_b * 100:+.1f}%"
+        rows.append(
+            f"| {arch}×{shape} | {variant} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {delta} | "
+            f"{r['bottleneck']} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    recs = report.load(Path("benchmarks/results/dryrun"))
+    exp = Path("EXPERIMENTS.md").read_text()
+    exp = exp.replace("<!-- DRYRUN_TABLE -->", report.dryrun_table(recs))
+    exp = exp.replace(
+        "<!-- ROOFLINE_TABLE -->",
+        report.roofline_table(recs) + "\n\n### Planner (§3.2) vs XLA temp allocation\n\n"
+        + report.planner_table(recs),
+    )
+    perf_dir = Path("benchmarks/results/perf")
+    if perf_dir.exists():
+        exp = exp.replace("<!-- PERF_TABLE -->", perf_rows(perf_dir, Path("benchmarks/results/dryrun")))
+    Path("EXPERIMENTS.md").write_text(exp)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration driver (§Perf): re-lower one cell under named variants and
+diff the roofline terms against the cell's baseline.
+
+    PYTHONPATH=src python scripts/hillclimb.py --arch gemma3-1b --shape train_4k \
+        --variant seqce xent_impl=seq_chunked
+
+Variant specs are ``key=value`` pairs routed by prefix:
+    model.*   → Model(...) fields           (model.xent_impl=seq_chunked)
+    cfg.*     → dataclasses.replace(config) (cfg.param_dtype=bfloat16)
+    policy.*  → ShardingPolicy fields       (policy.zero1=False)
+    microbatches=N
+Results land in benchmarks/results/perf/<cell>__<variant>.json.
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import lower_cell  # noqa: E402
+
+
+def parse_kv(pairs):
+    model_o, cfg_o, policy_o = {}, {}, {}
+    micro = 1
+    for pair in pairs:
+        k, v = pair.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        if k.startswith("model."):
+            model_o[k[6:]] = v
+        elif k.startswith("cfg."):
+            cfg_o[k[4:]] = v
+        elif k.startswith("policy."):
+            policy_o[k[7:]] = v
+        elif k == "microbatches":
+            micro = int(v)
+        else:
+            model_o[k] = v
+    return model_o, cfg_o, policy_o, micro
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, help="short name for this iteration")
+    ap.add_argument("--baseline", default="benchmarks/results/dryrun")
+    ap.add_argument("--out", default="benchmarks/results/perf")
+    ap.add_argument("--no-analysis", action="store_true")
+    ap.add_argument("overrides", nargs="*", help="key=value override pairs")
+    args = ap.parse_args()
+
+    model_o, cfg_o, policy_o, micro = parse_kv(args.overrides)
+    print(f"variant {args.variant}: model={model_o} cfg={cfg_o} policy={policy_o} "
+          f"microbatches={micro}", flush=True)
+
+    rec, _ = lower_cell(
+        args.arch, args.shape,
+        model_overrides=model_o, config_overrides=cfg_o, policy_overrides=policy_o,
+        microbatches=micro, analysis=not args.no_analysis,
+    )
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    tag = f"{args.arch}__{args.shape}__{args.variant}"
+    (out / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+
+    base_path = Path(args.baseline) / f"{args.arch}__{args.shape}__16x16.json"
+    r = rec["roofline"]
+    print(f"\n{tag}:")
+    print(f"  compute_s    = {r['compute_s']:.4f}")
+    print(f"  memory_s     = {r['memory_s']:.4f}")
+    print(f"  collective_s = {r['collective_s']:.4f}")
+    print(f"  bottleneck   = {r['bottleneck']}  useful={r['useful_flops_ratio']:.3f}")
+    if base_path.exists():
+        base = json.loads(base_path.read_text())
+        if not base.get("skipped") and not base.get("failed"):
+            b = base["roofline"]
+            for k in ("compute_s", "memory_s", "collective_s"):
+                delta = (r[k] - b[k]) / b[k] * 100 if b[k] else float("nan")
+                print(f"  {k}: baseline {b[k]:.4f} -> {r[k]:.4f}  ({delta:+.1f}%)")
+            dom_b = max(b["compute_s"], b["memory_s"], b["collective_s"])
+            dom_r = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            print(f"  dominant term: {dom_b:.4f} -> {dom_r:.4f} "
+                  f"({(dom_r-dom_b)/dom_b*100:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,394 @@
+"""C code generation — the paper's actual deliverable (§1, §4).
+
+    "The final purpose is to develop a tool consuming PyTorch model with
+     trained network weights, and it turns into an optimized inference
+     engine (forward pass) in C/C++ for low memory (kilobyte level)
+     microcontrollers."
+
+Here the tool consumes a *JAX* model (graph + params) and emits a
+self-contained C translation unit:
+
+  * weights as ``static const`` arrays → the compiler places them in
+    ``.text``/``.rodata`` (flash), paper §3.3;
+  * one static arena sized exactly by the memory plan → ``.bss`` (SRAM);
+  * the fused conv+activation+maxpool loop nest is a faithful rendering of
+    the paper's Algorithm 1 (running max, no conv output buffer);
+  * optional ``main()`` harness (stdin → forward → stdout) used by the tests
+    to validate the C engine bit-for-bit against the JAX oracle.
+
+Float (LeNet-5 path, paper §3/§4) and int8 (CIFAR test-net path, paper §5)
+backends are provided.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.graph import (
+    Conv2d,
+    Flatten,
+    FusedConvPool,
+    FusedLinear,
+    Input,
+    Linear,
+    MaxPool2d,
+    ReLU,
+    SequentialGraph,
+)
+from repro.core.planner import MemoryPlan
+from repro.core.quantize import QuantizedModel
+
+
+def _ident(name: str) -> str:
+    return re.sub(r"[^0-9a-zA-Z_]", "_", name)
+
+
+def _fmt_array(vals: np.ndarray, ctype: str, name: str) -> str:
+    flat = vals.reshape(-1)
+    if ctype == "float":
+        body = ",".join(f"{float(v):.9g}f" for v in flat)
+    else:
+        body = ",".join(str(int(v)) for v in flat)
+    return f"static const {ctype} {name}[{flat.size}] = {{{body}}};"
+
+
+class _Emitter:
+    def __init__(self) -> None:
+        self.decls: List[str] = []
+        self.body: List[str] = []
+
+    def decl(self, s: str) -> None:
+        self.decls.append(s)
+
+    def emit(self, s: str) -> None:
+        self.body.append(s)
+
+
+def _conv_pool_loops(
+    e: _Emitter,
+    tag: str,
+    *,
+    ctype: str,
+    acc_type: str,
+    ic: int,
+    ih: int,
+    iw: int,
+    oc: int,
+    k: int,
+    cs: int,
+    pad: int,
+    ph: int,
+    pw: int,
+    pk: int,
+    ps: int,
+    in_off: int,
+    out_off: int,
+    has_bias: bool,
+    activation: str,
+    requant: Optional[str],
+) -> None:
+    """Emit the paper's Algorithm 1: fused conv + activation + max-pool."""
+    zero = "0" if acc_type.startswith("int") else "0.0f"
+    neg_inf = "-3.4e38f" if ctype == "float" else "-128"
+    init = zero if activation == "relu" else neg_inf  # Alg.1 inits max to 0 (ReLU)
+    e.emit(f"  /* {tag}: fused conv{k}x{k}/s{cs}/p{pad} + {activation} + maxpool{pk}/s{ps} (Alg. 1) */")
+    e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
+    e.emit(f"    for (int c = 0; c < {oc}; ++c)")
+    e.emit(f"      for (int y = 0; y < {ph}; ++y)")
+    e.emit(f"        for (int x = 0; x < {pw}; ++x) {{")
+    e.emit(f"          {acc_type} mx = {init};")
+    e.emit(f"          for (int i = 0; i < {pk}; ++i)")
+    e.emit(f"            for (int j = 0; j < {pk}; ++j) {{")
+    e.emit(f"              const int oy = y*{ps} + i, ox = x*{ps} + j;")
+    bias = f"B_{tag}[c]" if has_bias else zero
+    e.emit(f"              {acc_type} sum = {bias};")
+    e.emit(f"              for (int z = 0; z < {ic}; ++z)")
+    e.emit(f"                for (int t = 0; t < {k}; ++t)")
+    e.emit(f"                  for (int u = 0; u < {k}; ++u) {{")
+    e.emit(f"                    const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
+    e.emit(f"                    if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
+    e.emit(
+        f"                      sum += ({acc_type})in[(z*{ih} + iy)*{iw} + ix] * "
+        f"({acc_type})W_{tag}[((c*{ic} + z)*{k} + t)*{k} + u];"
+    )
+    e.emit(f"                  }}")
+    if activation == "relu":
+        e.emit(f"              if (sum < {zero}) sum = {zero};")
+    e.emit(f"              if (sum > mx) mx = sum;")
+    e.emit(f"            }}")
+    if requant is None:
+        e.emit(f"          out[(c*{ph} + y)*{pw} + x] = mx;")
+    else:
+        e.emit(f"          out[(c*{ph} + y)*{pw} + x] = {requant.format(acc='mx', tag=tag)};")
+    e.emit(f"        }}")
+    e.emit(f"  }}")
+
+
+def _conv_loops(e, tag, *, ctype, acc_type, ic, ih, iw, oc, oh, ow, k, cs, pad,
+                in_off, out_off, has_bias, requant):
+    zero = "0" if acc_type.startswith("int") else "0.0f"
+    e.emit(f"  /* {tag}: conv{k}x{k}/s{cs}/p{pad} */")
+    e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
+    e.emit(f"    for (int c = 0; c < {oc}; ++c)")
+    e.emit(f"      for (int oy = 0; oy < {oh}; ++oy)")
+    e.emit(f"        for (int ox = 0; ox < {ow}; ++ox) {{")
+    bias = f"B_{tag}[c]" if has_bias else zero
+    e.emit(f"          {acc_type} sum = {bias};")
+    e.emit(f"          for (int z = 0; z < {ic}; ++z)")
+    e.emit(f"            for (int t = 0; t < {k}; ++t)")
+    e.emit(f"              for (int u = 0; u < {k}; ++u) {{")
+    e.emit(f"                const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
+    e.emit(f"                if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
+    e.emit(
+        f"                  sum += ({acc_type})in[(z*{ih} + iy)*{iw} + ix] * "
+        f"({acc_type})W_{tag}[((c*{ic} + z)*{k} + t)*{k} + u];"
+    )
+    e.emit(f"              }}")
+    out = "sum" if requant is None else requant.format(acc="sum", tag=tag)
+    e.emit(f"          out[(c*{oh} + oy)*{ow} + ox] = {out};")
+    e.emit(f"        }}")
+    e.emit(f"  }}")
+
+
+def _linear_loops(e, tag, *, ctype, acc_type, n_in, n_out, in_off, out_off,
+                  has_bias, relu, requant):
+    zero = "0" if acc_type.startswith("int") else "0.0f"
+    e.emit(f"  /* {tag}: linear {n_in} -> {n_out}{' + relu' if relu else ''} */")
+    e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
+    e.emit(f"    for (int o = 0; o < {n_out}; ++o) {{")
+    bias = f"B_{tag}[o]" if has_bias else zero
+    e.emit(f"      {acc_type} sum = {bias};")
+    e.emit(f"      for (int i = 0; i < {n_in}; ++i) sum += ({acc_type})in[i] * ({acc_type})W_{tag}[o*{n_in} + i];")
+    if relu:
+        e.emit(f"      if (sum < {zero}) sum = {zero};")
+    out = "sum" if requant is None else requant.format(acc="sum", tag=tag)
+    e.emit(f"      out[o] = {out};")
+    e.emit(f"    }}")
+    e.emit(f"  }}")
+
+
+def _maxpool_loops(e, tag, *, ctype, c, ih, iw, oh, ow, pk, ps, in_off, out_off):
+    neg = "-3.4e38f" if ctype == "float" else "-128"
+    e.emit(f"  /* {tag}: maxpool{pk}/s{ps} */")
+    e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
+    e.emit(f"    for (int z = 0; z < {c}; ++z)")
+    e.emit(f"      for (int y = 0; y < {oh}; ++y)")
+    e.emit(f"        for (int x = 0; x < {ow}; ++x) {{")
+    e.emit(f"          {ctype} mx = {neg};")
+    e.emit(f"          for (int i = 0; i < {pk}; ++i)")
+    e.emit(f"            for (int j = 0; j < {pk}; ++j) {{")
+    e.emit(f"              const {ctype} v = in[(z*{ih} + y*{ps}+i)*{iw} + x*{ps}+j];")
+    e.emit(f"              if (v > mx) mx = v;")
+    e.emit(f"            }}")
+    e.emit(f"          out[(z*{oh} + y)*{ow} + x] = mx;")
+    e.emit(f"        }}")
+    e.emit(f"  }}")
+
+
+def _relu_inplace(e, tag, *, ctype, n, off):
+    zero = "0" if ctype != "float" else "0.0f"
+    e.emit(f"  /* {tag}: relu in-place */")
+    e.emit(f"  {{ {ctype}* b = arena + {off};")
+    e.emit(f"    for (int i = 0; i < {n}; ++i) if (b[i] < {zero}) b[i] = {zero};")
+    e.emit(f"  }}")
+
+
+def _walk_and_emit(
+    graph: SequentialGraph,
+    plan: MemoryPlan,
+    e: _Emitter,
+    *,
+    ctype: str,
+    acc_type: str,
+    weights: dict,
+    requants: Optional[dict],
+) -> int:
+    """Emit the full layer chain.  Returns output element count."""
+    shapes = graph.shapes()
+    cur_shape: tuple = ()
+    buf_idx = 0
+    for layer, out_shape in zip(graph.layers, shapes):
+        name = layer.name or layer.kind
+        tag = _ident(name)
+        if isinstance(layer, Input):
+            cur_shape = out_shape
+            continue
+        src = plan.buffers[buf_idx]
+        if isinstance(layer, ReLU):
+            n = int(np.prod(cur_shape))
+            _relu_inplace(e, tag, ctype=ctype, n=n, off=src.offset_elems)
+            cur_shape = out_shape
+            continue
+        if isinstance(layer, Flatten):
+            cur_shape = out_shape
+            continue  # contiguous arena: flatten is a no-op
+        dst = plan.buffers[buf_idx + 1]
+        rq = None
+        if requants is not None:
+            rq = requants.get(name)
+        if isinstance(layer, FusedConvPool):
+            conv = layer.conv
+            ic, ih, iw = cur_shape
+            oc, ch, cw = conv.out_shape(cur_shape)
+            _, ph, pw = out_shape
+            _conv_pool_loops(
+                e, tag, ctype=ctype, acc_type=acc_type, ic=ic, ih=ih, iw=iw,
+                oc=oc, k=conv.kernel_size, cs=conv.stride, pad=conv.padding,
+                ph=ph, pw=pw, pk=layer.pool_kernel, ps=layer.pool_stride,
+                in_off=src.offset_elems, out_off=dst.offset_elems,
+                has_bias="b" in weights[name], activation=layer.activation,
+                requant=rq,
+            )
+        elif isinstance(layer, Conv2d):
+            ic, ih, iw = cur_shape
+            oc, oh, ow = out_shape
+            _conv_loops(
+                e, tag, ctype=ctype, acc_type=acc_type, ic=ic, ih=ih, iw=iw,
+                oc=oc, oh=oh, ow=ow, k=layer.kernel_size, cs=layer.stride,
+                pad=layer.padding, in_off=src.offset_elems,
+                out_off=dst.offset_elems, has_bias="b" in weights[name],
+                requant=rq,
+            )
+        elif isinstance(layer, MaxPool2d):
+            c, ih, iw = cur_shape
+            _, oh, ow = out_shape
+            _maxpool_loops(
+                e, tag, ctype=ctype, c=c, ih=ih, iw=iw, oh=oh, ow=ow,
+                pk=layer.kernel_size, ps=layer.stride,
+                in_off=src.offset_elems, out_off=dst.offset_elems,
+            )
+        elif isinstance(layer, (Linear, FusedLinear)):
+            lin = layer.linear if isinstance(layer, FusedLinear) else layer
+            _linear_loops(
+                e, tag, ctype=ctype, acc_type=acc_type, n_in=lin.in_features,
+                n_out=lin.out_features, in_off=src.offset_elems,
+                out_off=dst.offset_elems, has_bias="b" in weights[name],
+                relu=isinstance(layer, FusedLinear) and layer.activation == "relu",
+                requant=rq,
+            )
+        else:
+            raise TypeError(f"cannot emit C for layer {layer!r}")
+        buf_idx += 1
+        cur_shape = out_shape
+    return int(np.prod(shapes[-1]))
+
+
+_PREAMBLE = """\
+/* Generated by repro.core.export_c — reproduction of
+ * "Efficient Neural Network Deployment for Microcontroller" (Unlu, 2020).
+ * Weights are const -> .rodata/.text (flash, paper §3.3).
+ * The single static arena below is the planned SRAM footprint (paper §3.2).
+ */
+#include <stdint.h>
+#include <math.h>
+"""
+
+
+def generate_c(
+    graph: SequentialGraph,
+    plan: MemoryPlan,
+    params,
+    with_main: bool = False,
+) -> str:
+    """Float32 C engine (the paper's LeNet-5 deployment, §3/§4)."""
+    e = _Emitter()
+    weights = {}
+    for layer in graph.layers:
+        name = layer.name or layer.kind
+        if name in params:
+            tag = _ident(name)
+            w = np.asarray(params[name]["w"], np.float32)
+            e.decl(_fmt_array(w, "float", f"W_{tag}"))
+            weights[name] = {"w": w}
+            if "b" in params[name] and params[name]["b"] is not None:
+                b = np.asarray(params[name]["b"], np.float32)
+                e.decl(_fmt_array(b, "float", f"B_{tag}"))
+                weights[name]["b"] = b
+
+    in_elems = plan.buffers[0].size_elems
+    e.emit(f"static float arena[{plan.arena_elems}];")
+    e.emit("")
+    e.emit("void nn_forward(const float* input, float* output) {")
+    e.emit(f"  for (int i = 0; i < {in_elems}; ++i) arena[{plan.buffers[0].offset_elems} + i] = input[i];")
+    out_elems = _walk_and_emit(
+        graph, plan, e, ctype="float", acc_type="float", weights=weights, requants=None
+    )
+    final = plan.buffers[-1]
+    e.emit(f"  for (int i = 0; i < {out_elems}; ++i) output[i] = arena[{final.offset_elems} + i];")
+    e.emit("}")
+
+    src = _PREAMBLE + "\n".join(e.decls) + "\n\n" + "\n".join(e.body) + "\n"
+    if with_main:
+        src += _main_harness("float", in_elems, out_elems)
+    return src
+
+
+def generate_c_int8(
+    qm: QuantizedModel,
+    plan: MemoryPlan,
+    with_main: bool = False,
+) -> str:
+    """Int8 C engine (the paper's §5 CMSIS-NN comparison path).
+
+    Requantization uses a float multiplier with round-half-to-even
+    (``nearbyintf`` under the default FE_TONEAREST mode), matching
+    ``repro.core.quantize.simulate_int8_forward`` bit-for-bit.
+    """
+    graph = qm.graph
+    e = _Emitter()
+    weights = {}
+    requants = {}
+    for layer in graph.layers:
+        name = layer.name or layer.kind
+        if name in qm.layers:
+            q = qm.layers[name]
+            tag = _ident(name)
+            e.decl(_fmt_array(q.w_q, "int8_t", f"W_{tag}"))
+            weights[name] = {"w": q.w_q}
+            if q.b_q is not None:
+                e.decl(_fmt_array(q.b_q, "int32_t", f"B_{tag}"))
+                weights[name]["b"] = q.b_q
+            m = q.in_scale * q.w_scale / q.out_scale
+            e.decl(f"static const float M_{tag} = {m:.9g}f;")
+            requants[name] = "rq({acc}, M_{tag})"
+
+    in_elems = plan.buffers[0].size_elems
+    e.decl("""
+static int8_t rq(int32_t acc, float m) {
+  float v = nearbyintf((float)acc * m);
+  if (v > 127.0f) return 127;
+  if (v < -128.0f) return -128;
+  return (int8_t)v;
+}""")
+    e.emit(f"static int8_t arena[{plan.arena_elems}];")
+    e.emit("")
+    e.emit("void nn_forward(const int8_t* input, int8_t* output) {")
+    e.emit(f"  for (int i = 0; i < {in_elems}; ++i) arena[{plan.buffers[0].offset_elems} + i] = input[i];")
+    out_elems = _walk_and_emit(
+        graph, plan, e, ctype="int8_t", acc_type="int32_t", weights=weights,
+        requants=requants,
+    )
+    final = plan.buffers[-1]
+    e.emit(f"  for (int i = 0; i < {out_elems}; ++i) output[i] = arena[{final.offset_elems} + i];")
+    e.emit("}")
+
+    src = _PREAMBLE + "\n".join(e.decls) + "\n\n" + "\n".join(e.body) + "\n"
+    if with_main:
+        src += _main_harness("int8_t", in_elems, out_elems)
+    return src
+
+
+def _main_harness(ctype: str, in_elems: int, out_elems: int) -> str:
+    return f"""
+#include <stdio.h>
+int main(void) {{
+  static {ctype} input[{in_elems}];
+  static {ctype} output[{out_elems}];
+  if (fread(input, sizeof({ctype}), {in_elems}, stdin) != {in_elems}) return 1;
+  nn_forward(input, output);
+  fwrite(output, sizeof({ctype}), {out_elems}, stdout);
+  return 0;
+}}
+"""

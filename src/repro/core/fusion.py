@@ -1,0 +1,96 @@
+"""Fusion pass: paper §3.1 (fused in-place max-pooling) + §7 extension.
+
+Detects ``Conv2d → ReLU → MaxPool2d`` windows and rewrites them into a single
+:class:`~repro.core.graph.FusedConvPool` layer.  The paper's condition for the
+zero-extra-memory fusion is ``pool.stride >= pool.kernel_size``: every pooling
+window is then mutually exclusive, so the running max can be written straight
+to the (reduced) output line buffer and the conv output is never materialized.
+
+The paper's §7 future work — ``stride < kernel_size`` — is also implemented:
+pooling windows then overlap by ``kernel_size - stride`` rows/cols, which the
+fused loop handles by keeping a line buffer of that many *pooled* rows.  The
+planner accounts that scratch; it is strictly smaller than the conv output.
+
+``Linear → ReLU`` windows fuse to :class:`FusedLinear` (the paper folds
+activations into the producing layer: "ReLU layer can be part of the
+convolution layer").
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.graph import (
+    Conv2d,
+    FusedConvPool,
+    FusedLinear,
+    Linear,
+    MaxPool2d,
+    ReLU,
+    SequentialGraph,
+)
+
+_ACTIVATIONS = {"ReLU": "relu"}
+
+
+def fuse(graph: SequentialGraph, allow_line_buffer: bool = True) -> SequentialGraph:
+    """Return a new graph with conv/act/pool and linear/act windows fused.
+
+    Args:
+      graph: the unfused sequential graph.
+      allow_line_buffer: if True, also fuse pooling with ``stride <
+        kernel_size`` using the §7 line-buffer scheme.  If False, only the
+        paper's main ``stride >= kernel_size`` condition fuses (pure Alg. 1).
+    """
+    layers = list(graph.layers)
+    out: List = []
+    i = 0
+    while i < len(layers):
+        layer = layers[i]
+        nxt = layers[i + 1] if i + 1 < len(layers) else None
+        nxt2 = layers[i + 2] if i + 2 < len(layers) else None
+
+        if (
+            isinstance(layer, Conv2d)
+            and nxt is not None
+            and nxt.kind in _ACTIVATIONS
+            and isinstance(nxt2, MaxPool2d)
+            and nxt2.padding == 0
+        ):
+            if nxt2.stride >= nxt2.kernel_size:
+                line_rows = 0
+            elif allow_line_buffer:
+                line_rows = nxt2.kernel_size - nxt2.stride
+            else:
+                out.append(layer)
+                i += 1
+                continue
+            out.append(
+                FusedConvPool(
+                    conv=layer,
+                    activation=_ACTIVATIONS[nxt.kind],
+                    pool_kernel=nxt2.kernel_size,
+                    pool_stride=nxt2.stride,
+                    line_buffer_rows=line_rows,
+                    name=f"{layer.name or 'conv'}+{nxt2.name or 'pool'}",
+                )
+            )
+            i += 3
+            continue
+
+        if isinstance(layer, Linear) and nxt is not None and nxt.kind in _ACTIVATIONS:
+            out.append(
+                FusedLinear(
+                    linear=layer,
+                    activation=_ACTIVATIONS[nxt.kind],
+                    name=f"{layer.name or 'fc'}+{nxt.name or 'act'}",
+                )
+            )
+            i += 2
+            continue
+
+        out.append(layer)
+        i += 1
+
+    fused = SequentialGraph(out)
+    fused.validate()
+    return fused

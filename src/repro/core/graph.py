@@ -1,0 +1,309 @@
+"""Sequential layer-graph IR for the paper's deployment pipeline.
+
+The paper ("Efficient Neural Network Deployment for Microcontroller", Unlu 2020)
+treats a network as a strictly sequential chain of layers, each producing one
+output buffer consumed by the next layer.  This module is the IR that the fusion
+pass (`repro.core.fusion`), the memory planner (`repro.core.planner`), the
+ping-pong executor (`repro.core.pingpong`) and the C exporter
+(`repro.core.export_c`) all operate on.
+
+Sizes are expressed in *elements*; the planner multiplies by dtype width.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence, Tuple
+
+Shape = Tuple[int, ...]
+
+
+def _prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Base class: a layer maps an input shape to an output shape."""
+
+    name: str = dataclasses.field(default="", kw_only=True)
+
+    def out_shape(self, in_shape: Shape) -> Shape:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def param_count(self) -> int:
+        return 0
+
+    def weight_count(self) -> int:
+        """Parameters excluding biases (the paper's §5 counting convention)."""
+        return self.param_count()
+
+    @property
+    def kind(self) -> str:
+        return type(self).__name__
+
+
+@dataclasses.dataclass(frozen=True)
+class Input(LayerSpec):
+    """Pseudo-layer holding the network input buffer (paper counts it)."""
+
+    shape: Shape = ()
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        return self.shape
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv2d(LayerSpec):
+    """2D convolution, CHW layout (paper uses PyTorch semantics)."""
+
+    in_channels: int = 0
+    out_channels: int = 0
+    kernel_size: int = 1
+    stride: int = 1
+    padding: int = 0
+    bias: bool = True
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        c, h, w = in_shape
+        if c != self.in_channels:
+            raise ValueError(
+                f"{self.name or 'Conv2d'}: expected {self.in_channels} input "
+                f"channels, got shape {in_shape}"
+            )
+        oh = (h + 2 * self.padding - self.kernel_size) // self.stride + 1
+        ow = (w + 2 * self.padding - self.kernel_size) // self.stride + 1
+        return (self.out_channels, oh, ow)
+
+    def param_count(self) -> int:
+        n = self.out_channels * self.in_channels * self.kernel_size**2
+        if self.bias:
+            n += self.out_channels
+        return n
+
+    def weight_count(self) -> int:
+        return self.out_channels * self.in_channels * self.kernel_size**2
+
+
+@dataclasses.dataclass(frozen=True)
+class ReLU(LayerSpec):
+    def out_shape(self, in_shape: Shape) -> Shape:
+        return in_shape
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxPool2d(LayerSpec):
+    kernel_size: int = 2
+    stride: int = 2
+    padding: int = 0
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        c, h, w = in_shape
+        oh = (h + 2 * self.padding - self.kernel_size) // self.stride + 1
+        ow = (w + 2 * self.padding - self.kernel_size) // self.stride + 1
+        return (c, oh, ow)
+
+
+@dataclasses.dataclass(frozen=True)
+class Flatten(LayerSpec):
+    def out_shape(self, in_shape: Shape) -> Shape:
+        return (_prod(in_shape),)
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear(LayerSpec):
+    in_features: int = 0
+    out_features: int = 0
+    bias: bool = True
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        if _prod(in_shape) != self.in_features:
+            raise ValueError(
+                f"{self.name or 'Linear'}: expected {self.in_features} inputs, "
+                f"got shape {in_shape}"
+            )
+        return (self.out_features,)
+
+    def param_count(self) -> int:
+        n = self.in_features * self.out_features
+        if self.bias:
+            n += self.out_features
+        return n
+
+    def weight_count(self) -> int:
+        return self.in_features * self.out_features
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedConvPool(LayerSpec):
+    """Paper §3.1: conv + activation + max-pool fused in one pass (Algorithm 1).
+
+    Produced by the fusion pass when ``pool.stride >= pool.kernel_size`` —
+    the conv output is reduced *in flight*, so only the pooled output
+    (``m*n/s²`` instead of ``m*n``) is ever buffered.
+
+    ``line_buffer_rows`` supports the paper's §7 future-work extension: for
+    ``stride < kernel_size`` the fusion still applies but needs a line buffer
+    of ``kernel_size - stride`` pooled rows (accounted by the planner as
+    scratch, not as an inter-layer buffer).
+    """
+
+    conv: Conv2d = None  # type: ignore[assignment]
+    activation: str = "relu"
+    pool_kernel: int = 2
+    pool_stride: int = 2
+    line_buffer_rows: int = 0
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        conv_out = self.conv.out_shape(in_shape)
+        c, h, w = conv_out
+        oh = (h - self.pool_kernel) // self.pool_stride + 1
+        ow = (w - self.pool_kernel) // self.pool_stride + 1
+        return (c, oh, ow)
+
+    def conv_out_shape(self, in_shape: Shape) -> Shape:
+        return self.conv.out_shape(in_shape)
+
+    def scratch_elements(self, in_shape: Shape) -> int:
+        """Extra scratch needed beyond the output buffer (paper §7 case)."""
+        if self.line_buffer_rows == 0:
+            return 0
+        _, _, ow_conv = self.conv.out_shape(in_shape)
+        return self.line_buffer_rows * ow_conv * self.conv.out_channels
+
+    def param_count(self) -> int:
+        return self.conv.param_count()
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedLinear(LayerSpec):
+    """Linear + activation fused (no interim pre-activation buffer)."""
+
+    linear: Linear = None  # type: ignore[assignment]
+    activation: str = "relu"
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        return self.linear.out_shape(in_shape)
+
+    def param_count(self) -> int:
+        return self.linear.param_count()
+
+
+@dataclasses.dataclass(frozen=True)
+class OpaqueLayer(LayerSpec):
+    """Escape hatch for arbitrary layers (used to plan LM blocks: the planner
+    only needs output sizes, which is exactly the paper's abstraction)."""
+
+    out_fn: Callable[[Shape], Shape] = None  # type: ignore[assignment]
+    params: int = 0
+    scratch: int = 0
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        return self.out_fn(in_shape)
+
+    def param_count(self) -> int:
+        return self.params
+
+
+# Layers whose output physically aliases their input buffer (zero-copy views /
+# elementwise in-place ops).  The planner assigns them no new buffer.
+_INPLACE_KINDS = ("ReLU", "Flatten")
+
+
+@dataclasses.dataclass
+class SequentialGraph:
+    """A strictly sequential network: ``layers[0]`` must be :class:`Input`."""
+
+    layers: list
+
+    def __post_init__(self) -> None:
+        if not self.layers or not isinstance(self.layers[0], Input):
+            raise ValueError("SequentialGraph must start with an Input layer")
+
+    # -- structural queries --------------------------------------------------
+    def shapes(self) -> list:
+        """Output shape of every layer, including the input pseudo-layer."""
+        out = []
+        cur: Shape = ()
+        for layer in self.layers:
+            cur = layer.out_shape(cur)
+            out.append(cur)
+        return out
+
+    def materialized_layers(self) -> list:
+        """(layer, out_shape) for layers that own a distinct buffer.
+
+        ReLU / Flatten are views over their input (the paper folds ReLU into
+        the conv layer: "ReLU layer can be part of the convolution layer, so
+        there is no additional memory needed for it").
+        """
+        out = []
+        for layer, shape in zip(self.layers, self.shapes()):
+            if layer.kind in _INPLACE_KINDS:
+                continue
+            out.append((layer, shape))
+        return out
+
+    def buffer_sizes(self) -> list:
+        """Element count of every materialized inter-layer buffer, in order.
+
+        This is the list the paper calls ``L`` in §3.2.
+        """
+        return [_prod(s) for _, s in self.materialized_layers()]
+
+    def param_count(self) -> int:
+        return sum(layer.param_count() for layer in self.layers)
+
+    def weight_count(self) -> int:
+        """Bias-free parameter count (paper's §5 convention)."""
+        return sum(layer.weight_count() for layer in self.layers)
+
+    def param_bytes(self, dtype_bytes: int = 4) -> int:
+        return self.param_count() * dtype_bytes
+
+    def validate(self) -> None:
+        self.shapes()  # raises on any shape mismatch
+
+
+def lenet5() -> SequentialGraph:
+    """The paper's §3 LeNet-5 (exact PyTorch layout from the paper)."""
+    return SequentialGraph(
+        [
+            Input(shape=(1, 32, 32), name="input"),
+            Conv2d(1, 6, kernel_size=5, stride=1, name="conv1"),
+            ReLU(name="relu1"),
+            MaxPool2d(kernel_size=2, stride=2, name="maxpool1"),
+            Conv2d(6, 16, kernel_size=5, stride=1, name="conv2"),
+            ReLU(name="relu2"),
+            MaxPool2d(kernel_size=2, stride=2, name="maxpool2"),
+            Flatten(name="flatten"),
+            Linear(400, 120, name="fc1"),
+            ReLU(name="relu3"),
+            Linear(120, 84, name="fc2"),
+            ReLU(name="relu4"),
+            Linear(84, 10, name="fc3"),
+        ]
+    )
+
+
+def cifar_testnet() -> SequentialGraph:
+    """The paper's §5 test network (CMSIS-NN comparison, int8)."""
+    return SequentialGraph(
+        [
+            Input(shape=(3, 32, 32), name="input"),
+            Conv2d(3, 32, kernel_size=5, stride=1, padding=2, name="conv1"),
+            ReLU(name="relu1"),
+            MaxPool2d(kernel_size=2, stride=2, name="maxpool1"),
+            Conv2d(32, 16, kernel_size=5, stride=1, padding=2, name="conv2"),
+            ReLU(name="relu2"),
+            MaxPool2d(kernel_size=2, stride=2, name="maxpool2"),
+            Conv2d(16, 32, kernel_size=5, stride=1, padding=2, name="conv3"),
+            ReLU(name="relu3"),
+            MaxPool2d(kernel_size=2, stride=2, name="maxpool3"),
+            Flatten(name="flatten"),
+            Linear(512, 10, name="fc1"),
+        ]
+    )

@@ -1,0 +1,140 @@
+"""Pure-jnp numerics for the paper's layer set (the functional oracle).
+
+These are the reference semantics for the microcontroller-side networks
+(LeNet-5, CIFAR test net): PyTorch-compatible Conv2d/MaxPool2d/Linear in CHW
+layout.  The Pallas kernel in ``repro.kernels.conv_pool`` and the generated C
+code are both validated against these functions.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import (
+    Conv2d,
+    Flatten,
+    FusedConvPool,
+    FusedLinear,
+    Input,
+    Linear,
+    MaxPool2d,
+    ReLU,
+    SequentialGraph,
+)
+
+Params = Dict[str, Dict[str, jax.Array]]
+
+
+def conv2d(x: jax.Array, w: jax.Array, b, stride: int = 1, padding: int = 0) -> jax.Array:
+    """x: (C,H,W) or (N,C,H,W); w: (O,I,k,k); b: (O,) or None."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        out = out + b[None, :, None, None]
+    return out[0] if squeeze else out
+
+
+def maxpool2d(x: jax.Array, kernel: int, stride: int) -> jax.Array:
+    """x: (C,H,W) or (N,C,H,W)."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        init = -jnp.inf
+    else:
+        init = np.asarray(jnp.iinfo(x.dtype).min, dtype=x.dtype)
+    out = jax.lax.reduce_window(
+        x,
+        init,
+        jax.lax.max,
+        window_dimensions=(1, 1, kernel, kernel),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+    return out[0] if squeeze else out
+
+
+def linear(x: jax.Array, w: jax.Array, b) -> jax.Array:
+    """x: (..., in); w: (out, in) [PyTorch layout]; b: (out,) or None."""
+    out = x @ w.T
+    if b is not None:
+        out = out + b
+    return out
+
+
+_ACT = {"relu": jax.nn.relu, "none": lambda x: x}
+
+
+def init_params(graph: SequentialGraph, rng: jax.Array, dtype=jnp.float32) -> Params:
+    """Kaiming-uniform init matching PyTorch defaults (fan_in based)."""
+    params: Params = {}
+    for layer in graph.layers:
+        name = layer.name or layer.kind
+        inner = layer
+        if isinstance(layer, FusedConvPool):
+            inner = layer.conv
+        elif isinstance(layer, FusedLinear):
+            inner = layer.linear
+        if isinstance(inner, Conv2d):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            fan_in = inner.in_channels * inner.kernel_size**2
+            bound = 1.0 / np.sqrt(fan_in)
+            w = jax.random.uniform(
+                k1,
+                (inner.out_channels, inner.in_channels, inner.kernel_size, inner.kernel_size),
+                dtype,
+                -bound,
+                bound,
+            )
+            b = jax.random.uniform(k2, (inner.out_channels,), dtype, -bound, bound) if inner.bias else None
+            params[name] = {"w": w} | ({"b": b} if b is not None else {})
+        elif isinstance(inner, Linear):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            bound = 1.0 / np.sqrt(inner.in_features)
+            w = jax.random.uniform(k1, (inner.out_features, inner.in_features), dtype, -bound, bound)
+            b = jax.random.uniform(k2, (inner.out_features,), dtype, -bound, bound) if inner.bias else None
+            params[name] = {"w": w} | ({"b": b} if b is not None else {})
+    return params
+
+
+def apply_layer(layer, p, x: jax.Array) -> jax.Array:
+    """Apply one layer functionally.  ``p`` is the layer's param dict."""
+    if isinstance(layer, Input):
+        return x
+    if isinstance(layer, Conv2d):
+        return conv2d(x, p["w"], p.get("b"), layer.stride, layer.padding)
+    if isinstance(layer, ReLU):
+        return jax.nn.relu(x)
+    if isinstance(layer, MaxPool2d):
+        return maxpool2d(x, layer.kernel_size, layer.stride)
+    if isinstance(layer, Flatten):
+        return x.reshape(x.shape[:-3] + (-1,)) if x.ndim > 3 else x.reshape(-1)
+    if isinstance(layer, Linear):
+        return linear(x, p["w"], p.get("b"))
+    if isinstance(layer, FusedConvPool):
+        c = layer.conv
+        y = conv2d(x, p["w"], p.get("b"), c.stride, c.padding)
+        y = _ACT[layer.activation](y)
+        return maxpool2d(y, layer.pool_kernel, layer.pool_stride)
+    if isinstance(layer, FusedLinear):
+        return _ACT[layer.activation](linear(x, p["w"], p.get("b")))
+    raise TypeError(f"unknown layer {layer!r}")
+
+
+def forward(graph: SequentialGraph, params: Params, x: jax.Array) -> jax.Array:
+    """Functional forward pass (the oracle the arena executor is tested on)."""
+    for layer in graph.layers:
+        name = layer.name or layer.kind
+        x = apply_layer(layer, params.get(name, {}), x)
+    return x

@@ -1,0 +1,98 @@
+"""Arena executor: runs a sequential graph *inside the planned arena*.
+
+This is the executable proof of the paper's §3.2 claim.  The network is
+evaluated with every inter-layer tensor living at its planned offset in one
+flat arena array of exactly ``plan.arena_elems`` elements.  If the plan were
+wrong (two live buffers overlapping), the executor would compute garbage; the
+tests assert byte-exact agreement with the functional oracle
+(:func:`repro.core.nn.forward`) for ping-pong and optimal-arena plans.
+
+On TPU the same discipline is realized by ``lax.scan`` over stacked layer
+weights with a donated carry (two alternating HBM buffers) — see
+``repro.models.transformer`` and DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Input, SequentialGraph
+from repro.core.nn import Params, apply_layer
+from repro.core.planner import MemoryPlan
+
+
+def _prod(shape) -> int:
+    out = 1
+    for d in shape:
+        out *= int(d)
+    return out
+
+
+def run_with_arena(
+    graph: SequentialGraph,
+    plan: MemoryPlan,
+    params: Params,
+    x: jax.Array,
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """Execute ``graph`` storing every materialized buffer in the plan arena.
+
+    Returns (output, stats).  ``stats['arena_elems']`` is the peak memory the
+    execution actually used — by construction equal to the plan's arena size.
+
+    The graph must be in the same (fused / unfused) form the plan was built
+    from, so that materialized layers line up 1:1 with plan buffers.
+    """
+    rows = [l for l in graph.layers if l.kind not in ("ReLU", "Flatten")]
+    if len(rows) != len(plan.buffers):
+        raise ValueError(
+            f"plan has {len(plan.buffers)} buffers but graph materializes "
+            f"{len(rows)} — fuse the graph with the same options as the plan"
+        )
+
+    arena = jnp.zeros((plan.arena_elems,), dtype=x.dtype)
+
+    # Place the input at its planned offset.
+    in_buf = plan.buffers[0]
+    if _prod(x.shape) != in_buf.size_elems:
+        raise ValueError(f"input size {x.shape} != planned {in_buf.size_elems}")
+    arena = jax.lax.dynamic_update_slice(arena, x.reshape(-1), (in_buf.offset_elems,))
+
+    shapes = graph.shapes()
+    cur_shape = x.shape
+    buf_idx = 0
+    # Walk layers; view layers (ReLU/Flatten standalone) operate on the
+    # current buffer in place — exactly as the paper folds them.
+    for layer, out_shape in zip(graph.layers, shapes):
+        name = layer.name or layer.kind
+        if isinstance(layer, Input):
+            cur_shape = out_shape
+            continue
+        src = plan.buffers[buf_idx]
+        cur = jax.lax.dynamic_slice(arena, (src.offset_elems,), (src.size_elems,))
+        cur = cur.reshape(cur_shape)
+        if layer.kind in ("ReLU", "Flatten"):
+            out = apply_layer(layer, {}, cur)
+            arena = jax.lax.dynamic_update_slice(
+                arena, out.reshape(-1), (src.offset_elems,)
+            )
+            cur_shape = out.shape
+            continue
+        out = apply_layer(layer, params.get(name, {}), cur)
+        buf_idx += 1
+        dst = plan.buffers[buf_idx]
+        if _prod(out.shape) != dst.size_elems:
+            raise ValueError(
+                f"layer {name}: produced {out.shape} but plan expects "
+                f"{dst.size_elems} elements"
+            )
+        arena = jax.lax.dynamic_update_slice(
+            arena, out.reshape(-1), (dst.offset_elems,)
+        )
+        cur_shape = out.shape
+
+    final = plan.buffers[-1]
+    out = jax.lax.dynamic_slice(arena, (final.offset_elems,), (final.size_elems,))
+    stats = {"arena_elems": int(plan.arena_elems), "buffers": len(plan.buffers)}
+    return out.reshape(shapes[-1]), stats

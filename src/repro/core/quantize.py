@@ -1,0 +1,172 @@
+"""Post-training int8 quantization (paper §5 quantizes the test net to int8).
+
+Symmetric per-tensor quantization, CMSIS-NN-compatible flavour:
+  * weights:      int8, scale = max|w| / 127
+  * activations:  int8, scale calibrated from a calibration batch (max |x|)
+  * accumulation: int32, requantized to int8 between layers
+
+``simulate_int8_forward`` runs the quantized network in JAX with genuine
+int8 storage / int32 accumulation so the C deployment numerics can be
+validated bit-for-bit against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import (
+    Conv2d,
+    Flatten,
+    FusedConvPool,
+    FusedLinear,
+    Input,
+    Linear,
+    MaxPool2d,
+    ReLU,
+    SequentialGraph,
+)
+from repro.core import nn
+
+
+@dataclasses.dataclass
+class QuantizedLayer:
+    name: str
+    w_q: np.ndarray  # int8
+    b_q: np.ndarray | None  # int32 (bias in accumulator scale)
+    w_scale: float
+    in_scale: float
+    out_scale: float
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    graph: SequentialGraph
+    input_scale: float
+    layers: Dict[str, QuantizedLayer]
+
+    def param_bytes(self) -> int:
+        total = 0
+        for q in self.layers.values():
+            total += q.w_q.size  # int8
+            if q.b_q is not None:
+                total += q.b_q.size * 4
+        return total
+
+    def weight_bytes(self) -> int:
+        return sum(q.w_q.size for q in self.layers.values())
+
+
+def _calibrate_scales(graph: SequentialGraph, params, xs) -> Dict[str, float]:
+    """Max-abs output scale for every layer, from a calibration batch."""
+    scales: Dict[str, float] = {}
+    x = xs
+    for layer in graph.layers:
+        name = layer.name or layer.kind
+        x = nn.apply_layer(layer, params.get(name, {}), x)
+        scales[name] = max(float(jnp.max(jnp.abs(x))), 1e-8) / 127.0
+    return scales
+
+
+def quantize(graph: SequentialGraph, params, calibration_x) -> QuantizedModel:
+    """Quantize a (fused) graph's parameters given a calibration batch.
+
+    ``calibration_x``: (N, C, H, W) float batch used for activation ranges.
+    """
+    act_scales = _calibrate_scales(graph, params, calibration_x)
+    input_scale = max(float(jnp.max(jnp.abs(calibration_x))), 1e-8) / 127.0
+
+    layers: Dict[str, QuantizedLayer] = {}
+    in_scale = input_scale
+    for layer in graph.layers:
+        name = layer.name or layer.kind
+        out_scale = act_scales[name]
+        if name in params:
+            w = np.asarray(params[name]["w"], np.float32)
+            w_scale = max(float(np.max(np.abs(w))), 1e-8) / 127.0
+            w_q = np.clip(np.round(w / w_scale), -127, 127).astype(np.int8)
+            b = params[name].get("b")
+            b_q = None
+            if b is not None:
+                # bias lives in the int32 accumulator scale: in_scale*w_scale
+                b_q = np.round(np.asarray(b, np.float32) / (in_scale * w_scale)).astype(
+                    np.int32
+                )
+            layers[name] = QuantizedLayer(
+                name=name,
+                w_q=w_q,
+                b_q=b_q,
+                w_scale=w_scale,
+                in_scale=in_scale,
+                out_scale=out_scale,
+            )
+        in_scale = out_scale
+    return QuantizedModel(graph=graph, input_scale=input_scale, layers=layers)
+
+
+def _requant(acc_i32: jax.Array, in_scale: float, w_scale: float, out_scale: float) -> jax.Array:
+    """int32 accumulator → int8 output (float rescale, round-to-nearest)."""
+    m = in_scale * w_scale / out_scale
+    return jnp.clip(jnp.round(acc_i32.astype(jnp.float32) * m), -128, 127).astype(jnp.int8)
+
+
+def quantize_input(qm: QuantizedModel, x: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(x / qm.input_scale), -128, 127).astype(jnp.int8)
+
+
+def simulate_int8_forward(qm: QuantizedModel, x_q: jax.Array) -> jax.Array:
+    """Run the int8 network (int8 tensors, int32 accumulation) in JAX.
+
+    Returns the final layer's int8 output.  Matches the generated C engine.
+    """
+    g = qm.graph
+    x = x_q
+    for layer in g.layers:
+        name = layer.name or layer.kind
+        if isinstance(layer, Input):
+            continue
+        if isinstance(layer, ReLU):
+            x = jnp.maximum(x, 0)
+            continue
+        if isinstance(layer, Flatten):
+            x = x.reshape(-1) if x.ndim == 3 else x.reshape(x.shape[0], -1)
+            continue
+        if isinstance(layer, MaxPool2d):
+            x = nn.maxpool2d(x, layer.kernel_size, layer.stride)
+            continue
+        q = qm.layers[name]
+        if isinstance(layer, (Conv2d, FusedConvPool)):
+            conv = layer.conv if isinstance(layer, FusedConvPool) else layer
+            acc = jax.lax.conv_general_dilated(
+                x.astype(jnp.int32)[None] if x.ndim == 3 else x.astype(jnp.int32),
+                jnp.asarray(q.w_q, jnp.int32),
+                window_strides=(conv.stride, conv.stride),
+                padding=[(conv.padding, conv.padding)] * 2,
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )
+            if x.ndim == 3:
+                acc = acc[0]
+            if q.b_q is not None:
+                bias = jnp.asarray(q.b_q, jnp.int32)
+                acc = acc + (bias[:, None, None] if acc.ndim == 3 else bias[None, :, None, None])
+            if isinstance(layer, FusedConvPool):
+                acc = jnp.maximum(acc, 0)  # relu in accumulator domain
+                y = _requant(acc, q.in_scale, q.w_scale, q.out_scale)
+                x = nn.maxpool2d(y, layer.pool_kernel, layer.pool_stride)
+            else:
+                x = _requant(acc, q.in_scale, q.w_scale, q.out_scale)
+            continue
+        if isinstance(layer, (Linear, FusedLinear)):
+            lin = layer.linear if isinstance(layer, FusedLinear) else layer
+            acc = x.astype(jnp.int32) @ jnp.asarray(q.w_q, jnp.int32).T
+            if q.b_q is not None:
+                acc = acc + jnp.asarray(q.b_q, jnp.int32)
+            if isinstance(layer, FusedLinear) and layer.activation == "relu":
+                acc = jnp.maximum(acc, 0)
+            x = _requant(acc, q.in_scale, q.w_scale, q.out_scale)
+            continue
+        raise TypeError(f"unsupported layer for int8 simulation: {layer!r}")
+    return x

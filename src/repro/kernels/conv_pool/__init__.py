@@ -1,0 +1,7 @@
+"""Fused conv2d + activation + max-pool — the paper's Algorithm 1 on TPU.
+
+MCU version: running max in a register, conv output never written to SRAM.
+TPU version (kernel.py): conv rows staged in VMEM, activation + pooling
+reduction applied before writeback — the conv output never reaches HBM, so
+HBM write traffic drops by s² exactly as SRAM usage did in the paper.
+"""

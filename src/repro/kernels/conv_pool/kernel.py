@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: fused conv2d + activation + max-pool (Algorithm 1).
+
+Grid: one program per pooled output row.  The program stages the
+``(pool_k−1)·conv_stride + k`` input rows it needs in VMEM, computes the
+``pool_k`` conv rows with MXU dot products, applies the activation, and
+reduces the pooling window *before* anything is written back — the conv
+output exists only in VMEM/VREGs, never in HBM (the paper's in-place
+running max, moved one level up the memory hierarchy).
+
+The input/weights use whole-array BlockSpecs (MCU-scale nets fit VMEM
+comfortably: 32×32×32 int8/float is KBs); the output is blocked by pooled
+row.  For large images the same kernel structure tiles H via the halo
+pattern (documented in ops.py) — out of scope for the paper's networks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
+            k, activation, out_w):
+    py = pl.program_id(0)
+    row0 = py * pool_stride * conv_stride
+    rows_needed = (pool_k - 1) * conv_stride + k
+    x = x_ref[...]  # (H, W, Cin) in VMEM
+    w = w_ref[...]  # (k, k, Cin, Cout)
+    cout = w.shape[-1]
+
+    # conv for the pool_k rows of this pooled row, one MXU dot per (dz, dt)
+    acc = jnp.zeros((pool_k, out_w, cout), jnp.float32)
+    for pr in range(pool_k):  # static loops: unrolled into the kernel body
+        r = row0 + pr * conv_stride
+        for dz in range(k):
+            row = jax.lax.dynamic_slice_in_dim(x, r + dz, 1, axis=0)[0]  # (W, Cin)
+            for dt in range(k):
+                cols = jax.lax.dynamic_slice_in_dim(row, dt, (out_w - 1) * conv_stride + 1, axis=0)
+                cols = cols[:: conv_stride]  # (out_w, Cin)
+                acc = acc.at[pr].add(
+                    jax.lax.dot_general(
+                        cols.astype(jnp.float32),
+                        w[dz, dt].astype(jnp.float32),
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32,
+                    )
+                )
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.float32)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    # pooling reduction in VMEM: (pool_k, PW, pool_stride→, Cout) max
+    pw = out_w // pool_stride if pool_stride else out_w
+    pw = (out_w - pool_k) // pool_stride + 1
+    # gather the pool_k columns per pooled x via strided slices (static)
+    pooled = None
+    for pc in range(pool_k):
+        col = jax.lax.dynamic_slice_in_dim(acc, pc, (pw - 1) * pool_stride + 1, axis=1)
+        col = col[:, :: pool_stride]  # (pool_k, PW, Cout)
+        m = jnp.max(col, axis=0)  # rows of the window
+        pooled = m if pooled is None else jnp.maximum(pooled, m)
+    o_ref[0] = pooled.astype(o_ref.dtype)
+
+
+def conv_pool(
+    x: jax.Array,  # (H, W, Cin) pre-padded
+    w: jax.Array,  # (k, k, Cin, Cout)
+    b: jax.Array | None,
+    *,
+    conv_stride: int = 1,
+    pool_k: int = 2,
+    pool_stride: int = 2,
+    activation: str = "relu",
+    interpret: bool = True,
+) -> jax.Array:
+    H, W, cin = x.shape
+    k = w.shape[0]
+    cout = w.shape[-1]
+    oh = (H - k) // conv_stride + 1
+    ow = (W - k) // conv_stride + 1
+    ph = (oh - pool_k) // pool_stride + 1
+    pw = (ow - pool_k) // pool_stride + 1
+
+    kern = functools.partial(
+        _kernel, conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride,
+        k=k, activation=activation, out_w=ow,
+    )
+    args = [x, w]
+    in_specs = [
+        pl.BlockSpec(x.shape, lambda py: (0, 0, 0)),  # whole input resident
+        pl.BlockSpec(w.shape, lambda py: (0, 0, 0, 0)),
+    ]
+    if b is not None:
+        args.append(b)
+        in_specs.append(pl.BlockSpec(b.shape, lambda py: (0,)))
+    else:
+        kern = functools.partial(kern)
+
+    def wrapper(*refs):
+        if b is not None:
+            x_ref, w_ref, b_ref, o_ref = refs
+        else:
+            x_ref, w_ref, o_ref = refs
+            b_ref = None
+        kern(x_ref, w_ref, b_ref, o_ref)
+
+    return pl.pallas_call(
+        wrapper,
+        grid=(ph,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, pw, cout), lambda py: (py, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ph, pw, cout), x.dtype),
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,63 @@
+"""jit'd wrapper for the fused conv+act+pool kernel.
+
+Handles layout (the paper's nets are CHW; the kernel is HWC = TPU lanes-last),
+padding, batching (vmap over images), and the ref fallback.
+
+Halo note: the kernel keeps the whole (padded) input resident in VMEM, which
+is exact for MCU-scale nets (≤ tens of KB).  For large images the grid adds
+an H-tile dimension and the input BlockSpec maps overlapping row windows
+(block index → row-block with a (pool_k−1)·stride+k−1 halo); the reduction
+structure — act+pool before writeback — is unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv_pool import kernel as _k
+from repro.kernels.conv_pool import ref as _ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("conv_stride", "padding", "pool_k", "pool_stride",
+                     "activation", "impl", "interpret"),
+)
+def fused_conv_pool(
+    x: jax.Array,  # (Cin, H, W) or (N, Cin, H, W) — paper/PyTorch layout
+    w: jax.Array,  # (Cout, Cin, k, k)
+    b: jax.Array | None = None,
+    *,
+    conv_stride: int = 1,
+    padding: int = 0,
+    pool_k: int = 2,
+    pool_stride: int = 2,
+    activation: str = "relu",
+    impl: str = "pallas",  # "pallas" | "ref"
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (Cout, PH, PW) or (N, Cout, PH, PW)."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    xh = jnp.transpose(x, (0, 2, 3, 1))  # NHWC
+    if padding:
+        xh = jnp.pad(xh, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    wh = jnp.transpose(w, (2, 3, 1, 0))  # HWIO
+
+    if impl == "pallas":
+        fn = functools.partial(
+            _k.conv_pool, conv_stride=conv_stride, pool_k=pool_k,
+            pool_stride=pool_stride, activation=activation, interpret=interpret,
+        )
+        out = jax.vmap(lambda img: fn(img, wh, b))(xh)
+    else:
+        fn = functools.partial(
+            _ref.conv_pool_ref, conv_stride=conv_stride, pool_k=pool_k,
+            pool_stride=pool_stride, activation=activation,
+        )
+        out = jax.vmap(lambda img: fn(img, wh, b))(xh)
+    out = jnp.transpose(out, (0, 3, 1, 2))  # NCHW
+    return out[0] if squeeze else out

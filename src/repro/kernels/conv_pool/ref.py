@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fused conv+act+pool kernel (NHWC)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_pool_ref(
+    x: jax.Array,  # (H, W, Cin)   — already padded
+    w: jax.Array,  # (k, k, Cin, Cout)
+    b: jax.Array | None,  # (Cout,)
+    *,
+    conv_stride: int = 1,
+    pool_k: int = 2,
+    pool_stride: int = 2,
+    activation: str = "relu",
+) -> jax.Array:
+    """Returns (PH, PW, Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(conv_stride, conv_stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    if b is not None:
+        out = out + b
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    out = jax.lax.reduce_window(
+        out,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(pool_k, pool_k, 1),
+        window_strides=(pool_stride, pool_stride, 1),
+        padding="VALID",
+    )
+    return out

@@ -1,0 +1,3 @@
+"""Online-softmax (flash) attention — the paper's fused in-place reduction
+generalized to the softmax: the (S×S) score matrix is reduced block-by-block
+in VMEM with running (max, sum, acc) statistics and never reaches HBM."""

@@ -1,0 +1,130 @@
+"""Pallas TPU flash-attention kernel (fwd), GQA-aware, causal/windowed.
+
+Grid: (B·H, S/bq, T/bk) with the k-block axis innermost ("arbitrary"
+semantics → sequential on TPU), carrying running (m, l, acc) statistics in
+VMEM scratch across k-blocks — the online-softmax realization of the paper's
+Algorithm-1 running max.
+
+GQA without materializing repeated KV: the k/v BlockSpec index_map divides
+the fused batch·head index by the group size, so each q-head group reads its
+shared KV block straight from HBM (no repeat, no copy).
+
+Block sizes default to (128, 128) — MXU-aligned (128 lanes) and small enough
+that q, k, v, acc tiles fit VMEM at any head_dim ≤ 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.3819763e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, bq, bk, nk):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, h)
+    k = k_ref[0].astype(jnp.float32)  # (bk, h)
+    v = v_ref[0].astype(jnp.float32)  # (bk, h)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_ids = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_ids = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_ids <= q_ids
+    if window:
+        mask &= k_ids > q_ids - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows: exp(NEG_INF - NEG_INF) → use where
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows → zeros
+        o_ref[0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (B, S, H, h)
+    k: jax.Array,  # (B, T, K, h)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, H, h = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = h ** -0.5
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+
+    # fuse batch & head: (B·H, S, h); KV stays (B·K, T, h)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, h)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, T, h)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, T, h)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, nk=nk,
+    )
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        kern,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, h), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, h), lambda bh, iq, ik, G=G: (bh // G, ik, 0)),
+            pl.BlockSpec((1, bk, h), lambda bh, iq, ik, G=G: (bh // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, h), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, h), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, h).transpose(0, 2, 1, 3)

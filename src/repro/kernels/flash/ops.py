@@ -1,0 +1,65 @@
+"""jit'd wrapper for flash attention with custom VJP.
+
+Forward: Pallas online-softmax kernel.  Backward: rematerialized reference
+attention VJP (flash-style recompute — the scores are never stored, matching
+the memory discipline; a dedicated bwd kernel is the standard production
+follow-up and slots in behind this interface).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash import kernel as _k
+from repro.kernels.flash import ref as _ref
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def _flash(q, k, v, causal, window, scale, softcap):
+    return _k.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, scale=scale, softcap=softcap
+    )
+
+
+def _fwd(q, k, v, causal, window, scale, softcap):
+    out = _flash(q, k, v, causal, window, scale, softcap)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, scale, softcap, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: _ref.attention_ref(
+            q, k, v, causal=causal, window=window, scale=scale, softcap=softcap
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale", "softcap", "impl"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    softcap: float = 0.0,
+    impl: str = "pallas",
+) -> jax.Array:
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if impl == "ref":
+        return _ref.attention_ref(
+            q, k, v, causal=causal, window=window, scale=scale, softcap=softcap
+        )
+    return _flash(q, k, v, causal, window, scale, softcap)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for flash attention (GQA, causal / sliding-window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(
+    q: jax.Array,  # (B, S, H, h)
+    k: jax.Array,  # (B, T, K, h)
+    v: jax.Array,  # (B, T, K, h)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, S, H, h = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = h ** -0.5
+    qg = q.reshape(B, S, K, G, h)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qi = jax.lax.broadcasted_iota(jnp.int32, (S, T), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, h).astype(q.dtype)

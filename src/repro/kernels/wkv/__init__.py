@@ -1,0 +1,7 @@
+"""RWKV6 wkv recurrence — chunked linear attention with data-dependent decay.
+
+The paper's fused-reduction idea applied to the SSM hotspot: the per-chunk
+(C×C×hk) pair tensor and the running state S live in VMEM scratch; only the
+(C, hv) outputs reach HBM.  kernel.py + ops.py + ref (repro.models.rwkv6
+`wkv_chunked`/`wkv_step` serve as the oracle).
+"""

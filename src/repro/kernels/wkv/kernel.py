@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: chunked wkv6 forward.
+
+Grid: (B·H, n_chunks) with the chunk axis sequential ("arbitrary"), carrying
+the (hk, hv) state in VMEM scratch across chunks.  All chunk exponents are
+log-decay differences with t ≥ s, hence ≤ 0 — numerically safe in fp32
+(same derivation as repro.models.rwkv6.wkv_chunked, the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref, s_scr, *,
+            chunk, nc):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)  # (C, hk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # (C, hv)
+    w = w_ref[0].astype(jnp.float32)  # (C, hk) log decay ≤ 0
+    u = u_ref[0].astype(jnp.float32)  # (hk,)
+
+    la = jnp.cumsum(w, axis=0)  # (C, hk)
+    la_prev = la - w
+    s = s_scr[...]
+
+    # history read: o_t += (r_t ⊙ exp(la_{t-1})) @ S
+    r_dec = r * jnp.exp(la_prev)
+    o = jax.lax.dot_general(r_dec, s, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (C, hv)
+
+    # intra-chunk: attn[t,s<t] = Σ_i r_t[i] k_s[i] exp(la_{t-1}[i] − la_s[i])
+    expo = la_prev[:, None, :] - la[None, :, :]  # (C, C, hk), ≤ 0 for s<t
+    pair = jnp.einsum("ck,sk,csk->cs", r, k, jnp.exp(jnp.minimum(expo, 0.0)))
+    ci = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    pair = jnp.where(ci > cj, pair, 0.0)
+    o = o + jax.lax.dot_general(pair, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # bonus diagonal: o_t += (r_t · (u ⊙ k_t)) v_t
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)  # (C,)
+    o = o + diag[:, None] * v
+
+    # state update: S ← diag(exp(la_C)) S + Σ_s diag(exp(la_C − la_s)) k_s v_sᵀ
+    la_end = la[-1]  # (hk,)
+    k_dec = k * jnp.exp(la_end[None, :] - la)
+    s_new = s * jnp.exp(la_end)[:, None] + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_scr[...] = s_new
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        s_out_ref[0] = s_new.astype(s_out_ref.dtype)
+
+
+def wkv_fwd(
+    r: jax.Array,  # (B, S, H, hk)
+    k: jax.Array,
+    v: jax.Array,  # (B, S, H, hv)
+    logw: jax.Array,  # (B, S, H, hk)
+    u: jax.Array,  # (H, hk)
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+):
+    """Returns (o: (B,S,H,hv) fp32, s_final: (B,H,hk,hv) fp32).  Zero init state."""
+    B, S, H, hk = r.shape
+    hv = v.shape[-1]
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+
+    def flat(x, d):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+
+    rf, kf, vf, wf = flat(r, hk), flat(k, hk), flat(v, hv), flat(logw, hk)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kern = functools.partial(_kernel, chunk=c, nc=nc)
+    o, s_final = pl.pallas_call(
+        kern,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, hk), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, c, hk), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, c, hv), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, c, hk), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, hk), lambda bh, ic, H=H: (bh % H, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, hv), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, hk, hv), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, hv), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, hk, hv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hk, hv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(rf, kf, vf, wf, u)
+    o = o.reshape(B, H, S, hv).transpose(0, 2, 1, 3)
+    return o, s_final.reshape(B, H, hk, hv)

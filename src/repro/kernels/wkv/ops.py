@@ -1,0 +1,33 @@
+"""jit'd wrapper for the wkv6 Pallas kernel (oracle: repro.models.rwkv6)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv import kernel as _k
+from repro.models import rwkv6 as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def wkv(
+    r: jax.Array,  # (B, S, H, hk)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: jax.Array,  # (H, hk)
+    *,
+    chunk: int = 64,
+    impl: str = "pallas",  # "pallas" | "ref"
+):
+    """Chunked wkv6 forward from zero state → (o, s_final), fp32."""
+    S = r.shape[1]
+    c = min(chunk, S)
+    while S % c:  # largest divisor of S not exceeding the requested chunk
+        c -= 1
+    if impl == "ref":
+        B, S, H, hk = r.shape
+        s0 = jnp.zeros((B, H, hk, v.shape[-1]), jnp.float32)
+        return _ref.wkv_chunked(r, k, v, logw.astype(jnp.float32), u, s0, chunk=c)
+    return _k.wkv_fwd(r, k, v, logw, u, chunk=c)

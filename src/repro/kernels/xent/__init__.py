@@ -1,0 +1,8 @@
+"""Fused cross-entropy: vocab-chunked streaming logsumexp.
+
+The (B,S,V) logits tensor (269 GB for llama3-8b @ train_4k bf16) is never
+materialized — the paper's "fuse the consumer's reduction into the producer"
+idea applied to the LM loss.  ``ref.py`` is the pure-jnp oracle (also used as
+the model's default loss path); ``kernel.py`` is the Pallas TPU kernel;
+``ops.py`` the jit'd dispatch wrapper.
+"""

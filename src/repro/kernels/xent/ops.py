@@ -1,0 +1,54 @@
+"""jit'd wrapper for the fused CE kernel, with a memory-disciplined VJP.
+
+Backward recomputes per sequence chunk (the seq-chunked ref), so neither
+forward nor backward ever materializes (N, V).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.xent import kernel as _k
+from repro.kernels.xent import ref as _ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _xent(x, w, targets, softcap):
+    B, S, D = x.shape
+    out = _k.fused_xent_fwd(x.reshape(B * S, D), w, targets.reshape(-1), softcap=softcap)
+    return out.reshape(B, S)
+
+
+def _fwd(x, w, targets, softcap):
+    return _xent(x, w, targets, softcap), (x, w, targets)
+
+
+def _bwd(softcap, res, g):
+    x, w, targets = res
+    _, vjp = jax.vjp(
+        lambda x, w: _ref.seq_chunked_xent(x, w, targets, softcap=softcap), x, w
+    )
+    dx, dw = vjp(g)
+    return dx, dw, None
+
+
+_xent.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "impl"))
+def fused_xent(
+    x: jax.Array,  # (B, S, D)
+    w: jax.Array,  # (V, D)
+    targets: jax.Array,  # (B, S) int32
+    *,
+    softcap: float = 0.0,
+    impl: str = "pallas",
+) -> jax.Array:
+    """Per-token CE (B, S) without materializing logits."""
+    if impl == "ref":
+        return _ref.seq_chunked_xent(
+            x.astype(jnp.float32), w.astype(jnp.float32), targets, softcap=softcap
+        )
+    return _xent(x.astype(jnp.float32), w.astype(jnp.float32), targets, softcap)

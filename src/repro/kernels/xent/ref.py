@@ -1,0 +1,103 @@
+"""Pure-jnp oracle: vocab-chunked streaming cross-entropy.
+
+Computes per-token ``logsumexp(x·Wᵀ) − (x·Wᵀ)[target]`` while only ever
+holding one (B,S,chunk) logits slab; the running (max, sumexp, target-logit)
+triple is the paper's "running max" generalized to a softmax reduction.
+The chunk body is rematerialized on the backward pass so the memory saving
+survives AD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def naive_xent(x: jax.Array, w: jax.Array, targets: jax.Array, softcap: float = 0.0) -> jax.Array:
+    """Materializes (B,S,V) — the baseline the chunked path is tested against."""
+    logits = jnp.einsum("bsd,vd->bsv", x, w).astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse - tgt
+
+
+def chunked_xent(
+    x: jax.Array,  # (B,S,D) fp32
+    w: jax.Array,  # (V,D) fp32
+    targets: jax.Array,  # (B,S) int32
+    chunk: int = 8192,
+    softcap: float = 0.0,
+    unroll: bool = False,
+) -> jax.Array:
+    """Per-token CE, streaming over vocab chunks.  Returns (B,S) fp32."""
+    B, S, D = x.shape
+    V = w.shape[0]
+    chunk = min(chunk, V)
+    n = -(-V // chunk)
+    pad = n * chunk - V
+    wp = jnp.pad(w, ((0, pad), (0, 0))) if pad else w
+    wc = wp.reshape(n, chunk, D)
+    bases = jnp.arange(n, dtype=jnp.int32) * chunk
+
+    def body(carry, xs):
+        m, s, t = carry
+        w_blk, base = xs
+        logits = jnp.einsum("bsd,cd->bsc", x, w_blk).astype(jnp.float32)
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        vocab_ids = base + jnp.arange(chunk, dtype=jnp.int32)
+        logits = jnp.where(vocab_ids[None, None, :] < V, logits, -jnp.inf)
+        cm = jnp.max(logits, axis=-1)
+        new_m = jnp.maximum(m, cm)
+        # exp(-inf - -inf) guards: new_m can stay -inf only if all masked
+        s = s * jnp.exp(m - new_m) + jnp.sum(jnp.exp(logits - new_m[..., None]), axis=-1)
+        loc = targets - base
+        in_blk = (loc >= 0) & (loc < chunk)
+        tl = jnp.take_along_axis(logits, jnp.clip(loc, 0, chunk - 1)[..., None], axis=-1)[..., 0]
+        t = jnp.where(in_blk, tl, t)
+        return (new_m, s, t), None
+
+    init = (
+        jnp.full((B, S), -jnp.inf, jnp.float32),
+        jnp.zeros((B, S), jnp.float32),
+        jnp.zeros((B, S), jnp.float32),
+    )
+    (m, s, t), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (wc, bases), unroll=n if unroll else 1
+    )
+    return m + jnp.log(s) - t
+
+
+def seq_chunked_xent(
+    x: jax.Array,  # (B,S,D) fp32
+    w: jax.Array,  # (V,D) fp32
+    targets: jax.Array,  # (B,S) int32
+    chunk: int = 256,
+    softcap: float = 0.0,
+    unroll: bool = False,
+) -> jax.Array:
+    """Per-token CE, streaming over *sequence* chunks.
+
+    TP-aware variant: chunking the tokens (not the vocab) leaves the vocab
+    dimension of ``w`` intact, so a model-axis-sharded unembedding stays
+    sharded — each chip computes only its vocab shard of each chunk's logits
+    and GSPMD inserts the small (B,chunk) max/sum all-reduces.  Fixes the
+    16× CE compute replication the vocab-chunked form suffers under TP
+    (EXPERIMENTS.md §Perf iteration 1).  Peak logits slab: (B,chunk,V/tp).
+    """
+    B, S, D = x.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    xc = x.reshape(B, n, c, D).transpose(1, 0, 2, 3)  # (n,B,c,D)
+    tc = targets.reshape(B, n, c).transpose(1, 0, 2)  # (n,B,c)
+
+    def body(_, xs):
+        xb, tb = xs
+        ce = naive_xent(xb, w, tb, softcap=softcap)
+        return None, ce
+
+    _, ces = jax.lax.scan(jax.checkpoint(body), None, (xc, tc), unroll=n if unroll else 1)
+    return ces.transpose(1, 0, 2).reshape(B, S)

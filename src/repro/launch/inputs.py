@@ -1,0 +1,81 @@
+"""Abstract inputs for every (arch × shape) cell: ShapeDtypeStruct stand-ins.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these.  Modality frontends are STUBS per the assignment: [audio]/
+[vlm] cells receive precomputed frame/patch embeddings of the backbone width.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import Model
+from repro.train import optimizer as opt
+
+# enc-dec auxiliary sequence lengths (DESIGN.md §4): for seamless cells the
+# assigned seq_len applies to the dominant sequence; the other side uses:
+ENCDEC_DECODER_PREFILL = 1024  # decoder prompt length in prefill cells
+ENCDEC_MEMORY_LEN = 4096  # encoder memory length in decode cells
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.is_encdec:
+        return {
+            "src_embeds": sds((B, S, cfg.d_model), cd),
+            "tokens": sds((B, S), jnp.int32),
+            "targets": sds((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        return {
+            "embeds": sds((B, S, cfg.d_model), cd),
+            "targets": sds((B, S), jnp.int32),
+        }
+    return {
+        "tokens": sds((B, S), jnp.int32),
+        "targets": sds((B, S), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.is_encdec:
+        return {
+            "src_embeds": sds((B, S, cfg.d_model), cd),
+            "tokens": sds((B, ENCDEC_DECODER_PREFILL), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        return {"embeds": sds((B, S, cfg.d_model), cd)}
+    return {"tokens": sds((B, S), jnp.int32)}
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(aparams):
+    return jax.eval_shape(opt.init_state, aparams)
+
+
+def abstract_cache(model: Model, batch: int, max_seq: int):
+    return jax.eval_shape(functools.partial(model.init_cache, batch, max_seq))
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Any, ...]:
+    """(tokens, pos[, memory]) abstract inputs for one decode step."""
+    B = shape.global_batch
+    cd = jnp.dtype(cfg.compute_dtype)
+    out = [sds((B, 1), jnp.int32), sds((B,), jnp.int32)]
+    if cfg.is_encdec:
+        out.append(sds((B, ENCDEC_MEMORY_LEN, cfg.d_model), cd))
+    return tuple(out)

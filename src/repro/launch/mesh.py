@@ -1,0 +1,31 @@
+"""Production mesh construction (assignment-mandated shape).
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state.  The single-pod mesh is (16, 16) = 256 chips ("data",
+"model"); the multi-pod mesh adds a leading "pod" axis: (2, 16, 16) = 512.
+
+The "pod" axis composes with "data" for batch sharding: only the gradient
+all-reduce crosses pods (DCN-friendly).  ``launch/pipeline.py`` can instead
+use the pod axis as a 2-stage pipeline (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch (pod folds into data-parallelism)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,234 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Three terms (seconds), per chip, vs TPU v5e constants:
+
+    compute    = HLO_FLOPs / PEAK_FLOPS          (197 TF/s bf16 per chip)
+    memory     = HLO_bytes / HBM_BW              (819 GB/s per chip)
+    collective = collective_bytes / ICI_BW       (~50 GB/s/link; we charge
+                 the sum of per-chip collective operand bytes against one
+                 link-bandwidth worth of ICI, a deliberately conservative
+                 single-term model — stated in EXPERIMENTS.md)
+
+``cost_analysis()`` of a GSPMD-partitioned executable reports the per-device
+module, so FLOPs/bytes are already per-chip.  Collective bytes are parsed
+from the post-optimization HLO text (shard shapes → per-chip bytes):
+
+    all-reduce          2·(R−1)/R · bytes   (ring, R = participants)
+    all-gather          (R−1)/R · out_bytes
+    reduce-scatter      (R−1)/R · in_bytes
+    all-to-all          (R−1)/R · bytes
+    collective-permute  bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s effective per chip (one link-direction worth)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "tuple": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_REPL_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_REPL_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _REPL_GROUPS_V2_RE.search(line)
+    if m:  # iota form [num_groups,group_size]
+        return int(m.group(2))
+    m = _REPL_GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len(first.split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, num_devices: int) -> CollectiveStats:
+    """Per-chip collective bytes from post-optimization (partitioned) HLO."""
+    bytes_by: Dict[str, float] = {}
+    count_by: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if m.group(3):  # -start of a start/done pair; count once here
+            pass
+        b = _shape_bytes(shape_str)
+        r = max(_group_size(line, num_devices), 1)
+        if kind == "all-reduce":
+            moved = 2.0 * (r - 1) / r * b
+        elif kind in ("all-gather", "all-to-all"):
+            moved = (r - 1) / r * b
+        elif kind == "reduce-scatter":
+            # parsed shape is the output shard; in_bytes = r·b, moved = (r−1)/r·in
+            moved = (r - 1) * b
+        elif kind == "collective-permute":
+            moved = float(b)
+        else:
+            moved = float(b)
+        bytes_by[kind] = bytes_by.get(kind, 0.0) + moved
+        count_by[kind] = count_by.get(kind, 0) + 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^\n]*\)\s*->", re.M)
+_WHILE_RE = re.compile(r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s*constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """computation name → body text (post-optimization HLO module)."""
+    headers = list(_COMP_HEADER_RE.finditer(hlo_text))
+    comps = {}
+    for i, m in enumerate(headers):
+        end = headers[i + 1].start() if i + 1 < len(headers) else len(hlo_text)
+        comps[m.group(1)] = hlo_text[m.start():end]
+    return comps
+
+
+def parse_collectives_scaled(hlo_text: str, num_devices: int) -> CollectiveStats:
+    """Like :func:`parse_collectives` but multiplies collectives inside while
+    bodies by the loop trip count (XLA counts a body once; scan trip counts
+    are recovered from the `constant(N)` in each condition computation).
+    Nested loops multiply."""
+    comps = _split_computations(hlo_text)
+    entry = next(iter(comps))  # ENTRY is first in post-opt dumps
+    # find ENTRY properly: the header regex loses the ENTRY marker order —
+    # detect via "ENTRY" keyword position
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+    if m:
+        entry = m.group(1)
+
+    trip_of_body = {}
+    parents = {}
+    for cname, ctext in comps.items():
+        for wm in _WHILE_RE.finditer(ctext):
+            cond, body = wm.group(1), wm.group(2)
+            trips = [int(x) for x in _CONST_RE.findall(comps.get(cond, ""))]
+            trip_of_body[body] = max(trips) if trips else 1
+            parents.setdefault(body, cname)
+            parents.setdefault(cond, cname)
+        for cm in _CALLS_RE.finditer(ctext):
+            parents.setdefault(cm.group(1), cname)
+
+    def multiplier(name, depth=0):
+        if name == entry or depth > 32:
+            return 1.0
+        p = parents.get(name)
+        base = multiplier(p, depth + 1) if p else 1.0
+        return base * trip_of_body.get(name, 1)
+
+    bytes_by: Dict[str, float] = {}
+    count_by: Dict[str, int] = {}
+    for cname, ctext in comps.items():
+        mult = multiplier(cname)
+        part = parse_collectives(ctext, num_devices)
+        for k, v in part.bytes_by_kind.items():
+            bytes_by[k] = bytes_by.get(k, 0.0) + v * mult
+        for k, v in part.count_by_kind.items():
+            count_by[k] = count_by.get(k, 0) + v
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_per_chip: float
+    useful_flops_ratio: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def derive(
+    cost: dict,
+    collectives: CollectiveStats,
+    *,
+    num_devices: int,
+    model_flops_total: float,
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    # transcendentals contribute to the VPU, fold at 1:1 into compute FLOPs
+    flops += float(cost.get("transcendentals", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collectives.total_bytes
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    model_pc = model_flops_total / num_devices
+    return Roofline(
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=hbm,
+        collective_bytes_per_chip=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_per_chip=model_pc,
+        useful_flops_ratio=(model_pc / flops) if flops else 0.0,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS per the assignment: 6·N·D (dense), 6·N_active·D (MoE).
+
+    D = tokens processed.  Train counts fwd+bwd (the 6 already does);
+    prefill counts 2·N·D (forward only); decode counts 2·N_active·B tokens.
+    """
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per row
+    return 2.0 * n_active * shape.global_batch

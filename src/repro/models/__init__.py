@@ -1,0 +1,5 @@
+"""Model zoo: one unified assembly (transformer.Model) covering dense GQA,
+MoE, RWKV6, RG-LRU hybrid, enc-dec and VLM/audio-backbone families."""
+from repro.models.transformer import Model
+
+__all__ = ["Model"]

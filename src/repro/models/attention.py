@@ -1,0 +1,238 @@
+"""GQA attention: full / causal / sliding-window / cross, train + decode.
+
+Two interchangeable inner implementations:
+  * ``ref``   — plain jnp einsum softmax (materializes (B,H,S,S) scores).
+  * ``flash`` — the Pallas online-softmax kernel (repro.kernels.flash): the
+                paper's "fused in-place reduction" generalized — the score
+                matrix is reduced in VMEM and never written to HBM.
+
+The KV cache for windowed layers is a **ring buffer of exactly `window`
+slots** with absolute-position tracking — the serving-side realization of the
+paper's bounded-buffer discipline (state stays O(window), not O(seq)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+from repro.models.common import _cdt, _pdt, apply_mrope, apply_rope, dense_init, split_keys
+
+NEG_INF = -2.3819763e38  # large negative for masked logits (bf16-safe)
+
+
+def init_attn_params(cfg, rng, cross: bool = False) -> dict:
+    d, H, K, h = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = split_keys(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, h), _pdt(cfg), fan_in=d),
+        "wk": dense_init(ks[1], (d, K, h), _pdt(cfg), fan_in=d),
+        "wv": dense_init(ks[2], (d, K, h), _pdt(cfg), fan_in=d),
+        "wo": dense_init(ks[3], (H, h, d), _pdt(cfg), fan_in=H * h),
+    }
+    if cfg.attn_bias and not cross:
+        p["bq"] = jnp.zeros((H, h), _pdt(cfg))
+        p["bk"] = jnp.zeros((K, h), _pdt(cfg))
+        p["bv"] = jnp.zeros((K, h), _pdt(cfg))
+    return p
+
+
+def _project_qkv(cfg, p, xq: jax.Array, xkv: jax.Array):
+    cd = _cdt(cfg)
+    q = jnp.einsum("bsd,dnh->bsnh", xq.astype(cd), p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dnh->bsnh", xkv.astype(cd), p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dnh->bsnh", xkv.astype(cd), p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    return q, k, v
+
+
+def _rope(cfg, x, positions, kind: str):
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return apply_mrope(x, pos3, cfg.rope_theta, cfg.mrope_sections)
+    theta = cfg.rope_theta
+    if kind == "attn" and cfg.rope_theta_global:
+        theta = cfg.rope_theta_global  # gemma3: global layers use 1M theta
+    return apply_rope(x, positions, theta)
+
+
+def _sdpa_ref(
+    q: jax.Array,  # (B,S,H,h)
+    k: jax.Array,  # (B,T,K,h)
+    v: jax.Array,  # (B,T,K,h)
+    mask: Optional[jax.Array],  # (B,1,S,T) or (1,1,S,T) bool; True = attend
+    scale: float,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, S, H, h = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, h)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None], scores, NEG_INF)  # (B,K,G,S,T)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H, h)
+
+
+def _causal_mask(S: int, T: int, offset: int = 0) -> jax.Array:
+    """(1,1,S,T) causal mask; query i attends key j iff j <= i + offset."""
+    qi = jax.lax.broadcasted_iota(jnp.int32, (S, T), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
+    return (kj <= qi + offset)[None, None]
+
+
+def _window_mask(S: int, T: int, window: int, offset: int = 0) -> jax.Array:
+    qi = jax.lax.broadcasted_iota(jnp.int32, (S, T), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
+    return ((kj <= qi + offset) & (kj > qi + offset - window))[None, None]
+
+
+def attend_train(
+    cfg,
+    p: dict,
+    x: jax.Array,  # (B,S,D)
+    kind: str,  # "attn" | "swa" | "local" | "enc" | anything with window rule
+    positions: jax.Array,  # (B,S)
+    impl: str = "ref",
+) -> jax.Array:
+    """Self-attention over a full sequence (training / prefill)."""
+    q, k, v = _project_qkv(cfg, p, x, x)
+    q = _rope(cfg, q, positions, kind)
+    k = _rope(cfg, k, positions, kind)
+    S = x.shape[1]
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    if kind == "enc":
+        mask = None
+    elif kind in ("swa", "local") and cfg.window:
+        mask = _window_mask(S, S, cfg.window)
+    else:
+        mask = _causal_mask(S, S)
+    if impl == "flash" and kind != "enc":
+        from repro.kernels.flash import ops as flash_ops
+
+        window = cfg.window if kind in ("swa", "local") else 0
+        out = flash_ops.flash_attention(q, k, v, causal=True, window=window, scale=scale)
+    else:
+        out = _sdpa_ref(q, k, v, mask, scale, cfg.attn_softcap)
+    cd = _cdt(cfg)
+    return jnp.einsum("bsnh,nhd->bsd", out.astype(cd), p["wo"].astype(cd))
+
+
+def attend_cross(
+    cfg,
+    p: dict,
+    x: jax.Array,  # (B,S,D) decoder side
+    memory: jax.Array,  # (B,T,D) encoder output
+    impl: str = "ref",
+) -> jax.Array:
+    q, k, v = _project_qkv(cfg, p, x, memory)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    out = _sdpa_ref(q, k, v, None, scale)
+    cd = _cdt(cfg)
+    return jnp.einsum("bsnh,nhd->bsd", out.astype(cd), p["wo"].astype(cd))
+
+
+# ----------------------------------------------------------------------------
+# Decode path with KV cache
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    """Per-layer cache geometry.  Windowed layers get a ring buffer."""
+
+    length: int  # slots (== window for swa/local, == max_seq for global)
+    ring: bool
+
+
+def cache_spec(cfg, kind: str, max_seq: int) -> KVCacheSpec:
+    if kind in ("swa", "local") and cfg.window and cfg.window < max_seq:
+        return KVCacheSpec(length=cfg.window, ring=True)
+    return KVCacheSpec(length=max_seq, ring=False)
+
+
+def init_kv_cache(cfg, spec: KVCacheSpec, batch: int, dtype, quantized: bool = False) -> dict:
+    """KV cache.  ``quantized`` stores int8 K/V with per-(token, head) scales
+    — the paper's §5 int8 idea applied to serving state (≈2× memory-term
+    reduction on decode, which is param/cache-read bound)."""
+    K, h = cfg.num_kv_heads, cfg.head_dim
+    cache = {
+        # absolute position of each slot; -1 = empty
+        "pos": jnp.full((batch, spec.length), -1, jnp.int32),
+    }
+    if quantized:
+        cache["k"] = jnp.zeros((batch, spec.length, K, h), jnp.int8)
+        cache["v"] = jnp.zeros((batch, spec.length, K, h), jnp.int8)
+        cache["k_scale"] = jnp.zeros((batch, spec.length, K), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, spec.length, K), jnp.float32)
+    else:
+        cache["k"] = jnp.zeros((batch, spec.length, K, h), dtype)
+        cache["v"] = jnp.zeros((batch, spec.length, K, h), dtype)
+    return cache
+
+
+def _quantize_heads(x: jax.Array):
+    """x: (B, S, K, h) → int8 values + per-(B,S,K) scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def attend_decode(
+    cfg,
+    p: dict,
+    x: jax.Array,  # (B,1,D) current token
+    cache: dict,
+    kind: str,
+    pos: jax.Array,  # (B,) int32 — per-row absolute positions
+    spec: KVCacheSpec,
+) -> Tuple[jax.Array, dict]:
+    """One decode step: update ring/linear KV cache, attend over it.
+
+    Positions are per batch row (serving lanes decode at different depths)."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(cfg, p, x, x)
+    positions = pos[:, None].astype(jnp.int32)  # (B,1)
+    q = _rope(cfg, q, positions, kind)
+    k = _rope(cfg, k, positions, kind)
+
+    slot = (pos % spec.length if spec.ring else pos).astype(jnp.int32)  # (B,)
+    rows = jnp.arange(B)
+    new_cache = dict(cache)
+    if "k_scale" in cache:  # int8 KV path
+        kq, ks = _quantize_heads(k)
+        vq, vs = _quantize_heads(v)
+        new_cache["k"] = cache["k"].at[rows, slot].set(kq[:, 0])
+        new_cache["v"] = cache["v"].at[rows, slot].set(vq[:, 0])
+        new_cache["k_scale"] = cache["k_scale"].at[rows, slot].set(ks[:, 0])
+        new_cache["v_scale"] = cache["v_scale"].at[rows, slot].set(vs[:, 0])
+        ck = new_cache["k"].astype(k.dtype) * new_cache["k_scale"][..., None].astype(k.dtype)
+        cv = new_cache["v"].astype(v.dtype) * new_cache["v_scale"][..., None].astype(v.dtype)
+    else:
+        new_cache["k"] = ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        new_cache["v"] = cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[rows, slot].set(pos.astype(jnp.int32))
+    new_cache["pos"] = cpos
+
+    # Valid slots: filled, causal, and (for windows) within the window.
+    valid = (cpos >= 0) & (cpos <= pos[:, None])
+    if kind in ("swa", "local") and cfg.window:
+        valid &= cpos > pos[:, None] - cfg.window
+    mask = valid[:, None, None, :]  # (B,1,1,T)
+
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    out = _sdpa_ref(q, ck, cv, mask, scale, cfg.attn_softcap)
+    cd = _cdt(cfg)
+    y = jnp.einsum("bsnh,nhd->bsd", out.astype(cd), p["wo"].astype(cd))
+    return y, new_cache

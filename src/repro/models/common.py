@@ -1,0 +1,125 @@
+"""Shared model components: norms, RoPE (incl. M-RoPE), initializers.
+
+All modules are pure functions over param pytrees (dicts of jnp arrays);
+no framework magic.  Params are stored in ``param_dtype`` (fp32 by default)
+and cast to ``compute_dtype`` (bf16) at use — the mixed-precision scheme the
+roofline constants assume.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale): zero-init friendly; standard when scale init=1 is
+    # equivalent up to parameterization.  We use plain scale with init 1.
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def make_norm_params(cfg, dim: int, rng=None) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((dim,), _pdt(cfg))}
+    return {"scale": jnp.ones((dim,), _pdt(cfg)), "bias": jnp.zeros((dim,), _pdt(cfg))}
+
+
+def apply_norm(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if "bias" in p:
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def _pdt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    """Inverse frequencies for half the head dim."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, n, h)
+    positions: jax.Array,  # (B, S)
+    theta: float,
+) -> jax.Array:
+    """Standard rotary embedding over the full head dim (half-split layout)."""
+    h = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(h, theta))  # (h/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B,S,h/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,  # (B, S, n, h)
+    positions: jax.Array,  # (3, B, S) — temporal / height / width streams
+    theta: float,
+    sections: Tuple[int, ...],  # half-dim split, sum == h/2
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the half-dim frequency bands are split into
+    (t, h, w) sections, each rotated by its own position stream.  For pure
+    text the three streams are identical and M-RoPE == RoPE."""
+    h = x.shape[-1]
+    half = h // 2
+    assert sum(sections) == half, (sections, half)
+    inv = jnp.asarray(rope_freqs(h, theta))  # (half,)
+    # build per-frequency positions by section
+    parts = []
+    start = 0
+    for sec, pos in zip(sections, positions):
+        parts.append(pos[..., None].astype(jnp.float32) * inv[start : start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Initializers
+# ----------------------------------------------------------------------------
+def dense_init(rng, shape, dtype, fan_in: Optional[int] = None):
+    fi = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(max(fi, 1))
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype):
+    # std 1/√d: unit-variance logits under tied embeddings (and unit-variance
+    # inputs for emb_scale archs, which multiply by √d at the input)
+    std = 1.0 / np.sqrt(shape[-1])
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(rng, n: int):
+    return list(jax.random.split(rng, n))

@@ -1,0 +1,132 @@
+"""Griffin / RecurrentGemma recurrent block (arXiv:2402.19427).
+
+Recurrent block: x → [gate branch: GeLU(W_gate x)] ⊙ RG-LRU(conv1d(W_rec x)),
+projected back to d_model.  The RG-LRU:
+
+    r_t = σ(W_a ξ_t + b_a)                 (recurrence gate)
+    i_t = σ(W_x ξ_t + b_x)                 (input gate)
+    log a_t = −c · softplus(Λ) ⊙ r_t       (c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ ξ_t)
+
+Training evaluates the elementwise linear recurrence with an associative scan
+(O(log S) depth, no S×state materialization beyond the scan tree — the
+bounded-state analog of the paper's buffer discipline).  Decode carries
+(h, conv tail) per layer: O(1) state in sequence length.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import _cdt, _pdt, dense_init, split_keys
+
+_C = 8.0
+
+
+def init_griffin_params(cfg, rng) -> dict:
+    d = cfg.d_model
+    rw = cfg.lru_width or d
+    W = cfg.conv1d_width
+    ks = split_keys(rng, 7)
+    pdt = _pdt(cfg)
+    return {
+        "w_gate": dense_init(ks[0], (d, rw), pdt, fan_in=d),
+        "w_rec": dense_init(ks[1], (d, rw), pdt, fan_in=d),
+        "conv_w": dense_init(ks[2], (W, rw), pdt, fan_in=W),
+        "conv_b": jnp.zeros((rw,), pdt),
+        "w_a": dense_init(ks[3], (rw, rw), pdt, fan_in=rw),
+        "b_a": jnp.zeros((rw,), pdt),
+        "w_x": dense_init(ks[4], (rw, rw), pdt, fan_in=rw),
+        "b_x": jnp.zeros((rw,), pdt),
+        # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, rw)) / _C)), pdt
+        ),
+        "w_out": dense_init(ks[5], (rw, d), pdt, fan_in=rw),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv, width W.  x: (B,S,rw); w: (W,rw).
+
+    Returns (y, new_tail) where tail carries the last W−1 inputs for decode.
+    """
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+W-1, rw)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_tail = xp[:, -(W - 1) :] if W > 1 else tail
+    return y, new_tail
+
+
+def rg_lru(
+    xi: jax.Array,  # (B,S,rw) fp32
+    r_gate: jax.Array,
+    i_gate: jax.Array,
+    log_a_base: jax.Array,  # (rw,) = −c·softplus(Λ) ≤ 0
+    h0: Optional[jax.Array],  # (B,rw) or None
+) -> Tuple[jax.Array, jax.Array]:
+    """Associative-scan evaluation of the RG-LRU recurrence."""
+    log_a = log_a_base * r_gate  # (B,S,rw), ≤ 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a²) computed stably via expm1: 1−a² = −expm1(2·log a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = beta * (i_gate * xi)
+    if h0 is not None:
+        # fold initial state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rg_lru_step(xi, r_gate, i_gate, log_a_base, h):
+    """Single decode step.  xi,r,i: (B,rw); h: (B,rw)."""
+    log_a = log_a_base * r_gate
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    h_new = a * h + beta * (i_gate * xi)
+    return h_new, h_new
+
+
+def griffin_block(
+    cfg,
+    p: dict,
+    x: jax.Array,  # (B,S,D)
+    state: Optional[dict] = None,  # {"h": (B,rw), "conv": (B,W-1,rw)}
+) -> Tuple[jax.Array, dict]:
+    cd = _cdt(cfg)
+    B, S, D = x.shape
+    gate = jax.nn.gelu(x.astype(cd) @ p["w_gate"].astype(cd), approximate=True)
+    xi = x.astype(cd) @ p["w_rec"].astype(cd)
+    xi, conv_tail = causal_conv1d(
+        xi, p["conv_w"].astype(cd), p["conv_b"].astype(cd), None if state is None else state["conv"]
+    )
+    xf = xi.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    log_a_base = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    h0 = None if state is None else state["h"]
+    if S == 1 and state is not None:
+        h_step, h_last = rg_lru_step(xf[:, 0], r_gate[:, 0], i_gate[:, 0], log_a_base, h0)
+        h = h_step[:, None]
+    else:
+        h, h_last = rg_lru(xf, r_gate, i_gate, log_a_base, h0)
+    out = (gate * h.astype(cd)) @ p["w_out"].astype(cd)
+    return out, {"h": h_last, "conv": conv_tail}
+
+
+def init_griffin_state(cfg, batch: int) -> dict:
+    rw = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, rw), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, rw), jnp.dtype(cfg.compute_dtype)),
+    }

@@ -1,0 +1,40 @@
+"""MLP variants: SwiGLU / GeGLU / GELU / squared-ReLU (Nemotron)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import _cdt, _pdt, dense_init, split_keys
+
+
+def init_mlp_params(cfg, rng, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = split_keys(rng, 3)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(ks[0], (d, f), _pdt(cfg), fan_in=d),
+            "wg": dense_init(ks[1], (d, f), _pdt(cfg), fan_in=d),
+            "wo": dense_init(ks[2], (f, d), _pdt(cfg), fan_in=f),
+        }
+    return {
+        "wi": dense_init(ks[0], (d, f), _pdt(cfg), fan_in=d),
+        "wo": dense_init(ks[2], (f, d), _pdt(cfg), fan_in=f),
+    }
+
+
+def apply_mlp(cfg, p: dict, x: jax.Array) -> jax.Array:
+    cd = _cdt(cfg)
+    x = x.astype(cd)
+    h = x @ p["wi"].astype(cd)
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(cd)) * h
+    elif cfg.mlp_act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(cd), approximate=True) * h
+    elif cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(cfg.mlp_act)
+    return h @ p["wo"].astype(cd)

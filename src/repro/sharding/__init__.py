@@ -1,0 +1,3 @@
+from repro.sharding.policy import ShardingPolicy
+
+__all__ = ["ShardingPolicy"]

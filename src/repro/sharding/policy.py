@@ -1,0 +1,250 @@
+"""Sharding policy: logical parameter/activation/cache layouts → mesh axes.
+
+One uniform rule set covers all 10 archs (DESIGN.md §5):
+
+* tensor-parallel ("model" axis): d_ff everywhere (all archs have
+  d_ff % 16 == 0); attention q-heads / kv-heads / MoE expert-ff / RWKV heads /
+  RG-LRU width — each sharded iff divisible by the model-axis size, else
+  replicated (the policy *degrades gracefully* instead of failing: gemma3's
+  4 q-heads stay replicated on a 16-way axis).
+* data-parallel ("pod"+"data"): batch; for batch-1 long-context cells the
+  sequence dimension takes the data axes (sequence parallelism).
+* decode KV caches: kv-heads on "model" when divisible, otherwise the cache
+  *sequence* dimension is sharded over "model" (flash-decoding style — GSPMD
+  inserts the small (B,H) partial-softmax combine collectives).
+* optimizer state: parameter spec + one extra "data"-axis sharding on the
+  first divisible unsharded dim (ZeRO-1); XLA then emits reduce-scatter →
+  sharded update → all-gather.
+
+Everything is expressed as PartitionSpecs over abstract pytrees — no device
+allocation here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# group-stacked subtree keys: "g0", "enc_g0", ... (leading axis = scan groups)
+_STACKED_RE = re.compile(r"^(enc_)?g\d+$")
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return dict(mesh.shape).get(name, 1)  # works for Mesh and AbstractMesh
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    cfg: ModelConfig
+    # toggles (hillclimb levers)
+    zero1: bool = True
+    shard_embed_vocab: bool = True
+    seq_parallel_threshold: int = 1  # batch ≤ threshold → shard seq instead
+
+    def __post_init__(self):
+        self.dp: Tuple[str, ...] = (
+            ("pod", "data") if "pod" in self.mesh.axis_names else ("data",)
+        )
+        self.tp = "model"
+        self.dp_size = _axis_size(self.mesh, self.dp)
+        self.tp_size = _axis_size(self.mesh, self.tp)
+
+    # -- helpers ---------------------------------------------------------------
+    def _m(self, dim: int):
+        """'model' if divisible else None (replicate)."""
+        return self.tp if dim % self.tp_size == 0 else None
+
+    def _d(self, dim: int):
+        return self.dp if dim % self.dp_size == 0 else None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- parameters --------------------------------------------------------------
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        """PartitionSpec for one parameter, keyed by its tree path."""
+        cfg = self.cfg
+        leaf = path.split("/")[-1]
+
+        if leaf in ("embed", "unembed"):
+            v = shape[0]
+            return P(self.tp if (self.shard_embed_vocab and v % self.tp_size == 0) else None, None)
+
+        in_attn = "attn" in path.split("/") or "cross" in path.split("/")
+
+        # attention
+        if in_attn and leaf in ("wq", "wk", "wv"):
+            return P(None, self._m(shape[-2]), None)
+        if in_attn and leaf == "wo":
+            # (H, h, d)
+            return P(self._m(shape[-3]), None, None)
+        if in_attn and leaf in ("bq", "bk", "bv"):
+            return P(self._m(shape[-2]), None)
+
+        # mlp
+        if leaf in ("wi", "wg") and "ffn" in path and len(shape) >= 2 and "router" not in path:
+            if len(shape) == 3 or (len(shape) == 4):  # (E, d, f) stacked or not
+                return P(*([None] * (len(shape) - 1)), self._m(shape[-1]))
+            return P(None, self._m(shape[-1]))
+        if leaf == "wo" and "ffn" in path:
+            if len(shape) >= 3:  # (E, f, d) or stacked (G, f, d)
+                return P(*([None] * (len(shape) - 2)), self._m(shape[-2]), None)
+            return P(self._m(shape[-2]), None)
+        if leaf == "router":
+            return P(None, None)
+        if leaf in ("shared_gate",):
+            return P(None, None)
+
+        in_tm = "tm" in path.split("/")
+        # rwkv time-mix projections (d, d): shard output dim (head space)
+        if in_tm and leaf in ("wr", "wk", "wv", "wg"):
+            return P(None, self._m(shape[-1]))
+        if in_tm and leaf == "wo":
+            return P(self._m(shape[-2]), None)
+        if leaf == "bonus_u":
+            return P(self._m(shape[-2]), None)
+        if leaf in ("cm_wk",):
+            return P(None, self._m(shape[-1]))
+        if leaf in ("cm_wv",):
+            return P(self._m(shape[-2]), None)
+        if leaf in ("cm_wr",):
+            return P(None, self._m(shape[-1]))
+
+        # griffin
+        if leaf in ("w_gate", "w_rec"):
+            return P(None, self._m(shape[-1]))
+        if leaf in ("w_a", "w_x"):
+            return P(None, self._m(shape[-1]))
+        if leaf == "conv_w":
+            return P(None, self._m(shape[-1]))
+        if leaf == "w_out":
+            return P(self._m(shape[-2]), None)
+
+        # 1-D / small leaves: replicate
+        return P(*([None] * len(shape)))
+
+    def param_specs(self, abstract_params) -> Any:
+        """Tree of PartitionSpec matching an abstract param tree.
+
+        Stacked (scan-grouped) params get their leading group axis unsharded;
+        the per-layer rule applies to the trailing dims.
+        """
+
+        def one(path, leaf):
+            pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+            shape = leaf.shape
+            # detect stacked leading group axis: group param paths contain
+            # "g0".."gN" / "enc_g0".. keys; their first dim is the group count.
+            stacked = any(_STACKED_RE.match(part) for part in pstr.split("/"))
+            if stacked and len(shape) >= 1:
+                inner = self.param_spec(pstr, shape[1:])
+                return P(None, *inner)
+            return self.param_spec(pstr, shape)
+
+        return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+    def opt_state_specs(self, param_specs_tree, abstract_params) -> Any:
+        """ZeRO-1: extra 'data' sharding on the first free divisible dim."""
+        if not self.zero1:
+            return param_specs_tree
+
+        def one(spec, leaf):
+            parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            for i, (s, dim) in enumerate(zip(parts, leaf.shape)):
+                if s is None and dim % self.dp_size == 0 and dim >= self.dp_size * 2:
+                    parts[i] = self.dp
+                    return P(*parts)
+            return spec
+
+        return jax.tree.map(one, param_specs_tree, abstract_params)
+
+    # -- activations / batches ----------------------------------------------------
+    def batch_specs(self, shape_cfg: ShapeConfig) -> Dict[str, P]:
+        """Input-batch PartitionSpecs (tokens/targets/embeds...)."""
+        B = shape_cfg.global_batch
+        if B % self.dp_size == 0:
+            tok = P(self.dp, None)
+            emb = P(self.dp, None, None)
+        elif B <= self.seq_parallel_threshold:
+            tok = P(None, self.dp)  # sequence parallelism
+            emb = P(None, self.dp, None)
+        else:
+            tok = P(None, None)
+            emb = P(None, None, None)
+        return {"tokens": tok, "targets": tok, "mask": tok, "embeds": emb, "src_embeds": emb}
+
+    def activation_spec(self) -> P:
+        return P(self.dp, None, None)
+
+    # -- decode caches -------------------------------------------------------------
+    def cache_specs(self, abstract_cache, batch: int) -> Any:
+        """Specs for the decode cache tree (kv ring buffers + recurrent states)."""
+        cfg = self.cfg
+        batch_ax = self.dp if batch % self.dp_size == 0 else None
+
+        def one(path, leaf):
+            pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+            name = pstr.split("/")[-1]
+            shape = leaf.shape
+            stacked = any(_STACKED_RE.match(p) for p in pstr.split("/"))
+            core = shape[1:] if stacked else shape
+            lead = (None,) if stacked else ()
+            if name in ("k", "v"):
+                Bc, L, K, h = core
+                if K % self.tp_size == 0:
+                    spec = (batch_ax, None, self.tp, None)
+                elif batch_ax is None and L % self.tp_size == 0:
+                    # batch-1 long context: flash-decoding over cache length,
+                    # data axes also folded into length when it divides.
+                    ld = (self.dp + (self.tp,)) if L % (self.dp_size * self.tp_size) == 0 else (self.tp,)
+                    spec = (None, ld, None, None)
+                elif L % self.tp_size == 0:
+                    spec = (batch_ax, self.tp, None, None)
+                else:
+                    spec = (batch_ax, None, None, None)
+                return P(*lead, *spec)
+            if name in ("k_scale", "v_scale"):
+                Bc, L, K = core
+                if K % self.tp_size == 0:
+                    return P(*lead, batch_ax, None, self.tp)
+                if batch_ax is None and L % self.tp_size == 0:
+                    ld = (self.dp + (self.tp,)) if L % (self.dp_size * self.tp_size) == 0 else (self.tp,)
+                    return P(*lead, None, ld, None)
+                if L % self.tp_size == 0:
+                    return P(*lead, batch_ax, self.tp, None)
+                return P(*lead, batch_ax, None, None)
+            if name == "pos":
+                Bc, L = core
+                if batch_ax is None and L % self.tp_size == 0:
+                    ld = (self.dp + (self.tp,)) if L % (self.dp_size * self.tp_size) == 0 else (self.tp,)
+                    return P(*lead, None, ld)
+                return P(*lead, batch_ax, None)
+            if name == "s":  # rwkv state (B,H,hk,hv)
+                Bc, H = core[0], core[1]
+                return P(*lead, batch_ax, self._m(H), None, None)
+            if name in ("tm_x", "cm_x"):
+                return P(*lead, batch_ax, None)
+            if name == "h":  # griffin (B, rw)
+                return P(*lead, batch_ax, self._m(core[-1]))
+            if name == "conv":  # (B, W-1, rw)
+                return P(*lead, batch_ax, None, self._m(core[-1]))
+            return P(*([None] * len(shape)))
+
+        return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+    # -- shardings (NamedSharding trees) --------------------------------------------
+    def shardings(self, spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))

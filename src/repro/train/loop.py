@@ -1,0 +1,87 @@
+"""Host training loop: checkpoint/restart, straggler stats, preemption drain.
+
+The loop is deliberately boring — every interesting property (resume
+bit-exactness, preemption flush, straggler flags) is load-bearing and tested
+(tests/test_train_loop.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager, latest_step
+from repro.ft.resilience import PreemptionGuard, StepTimer, StragglerDetector
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    async_ckpt: bool = True
+
+
+@dataclasses.dataclass
+class LoopState:
+    step: int
+    params: Any
+    opt_state: Any
+
+
+def run(
+    cfg: LoopConfig,
+    train_step: Callable,  # (params, opt_state, batch) -> (params, opt_state, metrics)
+    init_state: Callable[[], LoopState],
+    batch_at: Callable[[int], Dict[str, np.ndarray]],
+    *,
+    guard: Optional[PreemptionGuard] = None,
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+) -> LoopState:
+    """Run (or resume) training.  Returns the final state."""
+    mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep, async_save=cfg.async_ckpt)
+    straggler = StragglerDetector()
+    state = init_state()
+
+    start = latest_step(cfg.ckpt_dir)
+    if start is not None:
+        step, tree = mgr.restore_latest({"params": state.params, "opt": state.opt_state})
+        state = LoopState(step=step, params=tree["params"], opt_state=tree["opt"])
+        print(f"[loop] resumed from step {step}", flush=True)
+
+    timer = StepTimer()
+    metrics_log: List[dict] = []
+    step = state.step
+    while step < cfg.total_steps:
+        batch = batch_at(step)
+        params, opt_state, metrics = train_step(state.params, state.opt_state, batch)
+        state = LoopState(step=step + 1, params=params, opt_state=opt_state)
+        step += 1
+
+        dt = timer.lap()
+        if straggler.observe(dt):
+            print(f"[loop] straggler step {step}: {dt:.3f}s "
+                  f"(median {straggler.median:.3f}s)", flush=True)
+        if step % cfg.log_every == 0 or step == cfg.total_steps:
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            m["step_time_s"] = dt
+            metrics_log.append({"step": step, **m})
+            if on_metrics:
+                on_metrics(step, m)
+            print(f"[loop] step {step}: " + " ".join(
+                f"{k}={v:.4g}" for k, v in m.items()), flush=True)
+        if step % cfg.ckpt_every == 0 or step == cfg.total_steps or (
+            guard is not None and guard.preempted
+        ):
+            mgr.save(step, {"params": state.params, "opt": state.opt_state})
+            if guard is not None and guard.preempted:
+                print(f"[loop] preemption drain at step {step}", flush=True)
+                break
+    mgr.wait()
+    return state

@@ -1,0 +1,66 @@
+"""Shape/dtype sweep of the fused conv+pool Pallas kernel vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.conv_pool import ops
+
+
+CASES = [
+    # (H, W, cin, cout, k, conv_stride, padding, pool_k, pool_stride)
+    (32, 32, 1, 6, 5, 1, 0, 2, 2),     # LeNet conv1+pool1
+    (14, 14, 6, 16, 5, 1, 0, 2, 2),    # LeNet conv2+pool2
+    (32, 32, 3, 32, 5, 1, 2, 2, 2),    # CIFAR testnet conv1 (padded)
+    (16, 16, 32, 16, 5, 1, 2, 2, 2),   # CIFAR testnet conv2
+    (16, 16, 4, 8, 3, 1, 0, 3, 3),     # pool 3/3
+    (16, 16, 4, 8, 3, 1, 0, 3, 2),     # overlapping pool (stride < k, §7)
+    (20, 20, 2, 4, 3, 2, 1, 2, 2),     # conv stride 2
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv_pool_matches_ref(case, dtype):
+    H, W, cin, cout, k, cs, pad, pk, ps = case
+    rng = np.random.default_rng(hash(case) % 2**32)
+    x = jnp.asarray(rng.standard_normal((cin, H, W)), dtype)
+    w = jnp.asarray(rng.standard_normal((cout, cin, k, k)) * 0.2, dtype)
+    b = jnp.asarray(rng.standard_normal((cout,)) * 0.1, dtype)
+    out_p = ops.fused_conv_pool(
+        x, w, b, conv_stride=cs, padding=pad, pool_k=pk, pool_stride=ps,
+        impl="pallas",
+    )
+    out_r = ops.fused_conv_pool(
+        x, w, b, conv_stride=cs, padding=pad, pool_k=pk, pool_stride=ps,
+        impl="ref",
+    )
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out_p, np.float32), np.asarray(out_r, np.float32),
+        rtol=tol, atol=tol,
+    )
+    assert out_p.dtype == x.dtype
+
+
+def test_conv_pool_batched_and_no_bias():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((3, 1, 16, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 1, 3, 3)), jnp.float32)
+    out_p = ops.fused_conv_pool(x, w, None, impl="pallas")
+    out_r = ops.fused_conv_pool(x, w, None, impl="ref")
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r), rtol=1e-5, atol=1e-5)
+    assert out_p.shape == (3, 4, 7, 7)
+
+
+def test_conv_pool_matches_paper_oracle():
+    """The HWC kernel must agree with the paper-side CHW oracle (core.nn)."""
+    from repro.core import nn as core_nn
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 32, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((6, 1, 5, 5)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((6,)), jnp.float32)
+    y_kernel = ops.fused_conv_pool(x, w, b, impl="pallas")
+    y_paper = core_nn.maxpool2d(jax.nn.relu(core_nn.conv2d(x, w, b)), 2, 2)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_paper), rtol=1e-5, atol=1e-5)

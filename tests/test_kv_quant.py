@@ -1,0 +1,51 @@
+"""int8 KV cache (paper §5 quantization applied to serving state)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.models.transformer import Model
+
+
+def test_int8_kv_decode_close_to_fp():
+    cfg = cfgbase.get_reduced_config("llama3.2-1b")
+    m_fp = Model(cfg)
+    m_q = Model(cfg, kv_dtype="int8")
+    params = m_fp.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    max_seq = S + 4
+
+    cache_fp, logits_fp = m_fp.prefill(params, {"tokens": tokens}, max_seq)
+    cache_q, logits_q = m_q.prefill(params, {"tokens": tokens}, max_seq)
+    # prefill logits should be close (int8 error ≤ ~1%)
+    np.testing.assert_allclose(
+        np.asarray(logits_q), np.asarray(logits_fp), rtol=0.2, atol=0.15
+    )
+    # argmax agreement on most rows
+    agree = np.mean(
+        np.argmax(np.asarray(logits_q), -1) == np.argmax(np.asarray(logits_fp), -1)
+    )
+    assert agree >= 0.5
+
+    nxt = jnp.argmax(logits_fp, -1)[:, None].astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    ld_fp, _ = m_fp.decode_step(params, cache_fp, nxt, pos, max_seq)
+    ld_q, _ = m_q.decode_step(params, cache_q, nxt, pos, max_seq)
+    np.testing.assert_allclose(np.asarray(ld_q), np.asarray(ld_fp), rtol=0.25, atol=0.2)
+
+
+def test_int8_cache_halves_bytes():
+    cfg = cfgbase.get_reduced_config("llama3-8b")
+    m_fp = Model(cfg)
+    m_q = Model(cfg, kv_dtype="int8")
+
+    def nbytes(c):
+        return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(c))
+
+    c_fp = jax.eval_shape(lambda: m_fp.init_cache(4, 256))
+    c_q = jax.eval_shape(lambda: m_q.init_cache(4, 256))
+    def ab(tree):
+        return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(tree))
+    # int8 cache ≈ half the bf16 cache (+ small scale overhead)
+    assert ab(c_q) < 0.75 * ab(c_fp)

@@ -1,0 +1,190 @@
+"""Model-component unit tests: RoPE, masks, MoE dispatch, recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import attention, common, griffin, moe, rwkv6
+
+
+def cfg_for(**kw):
+    base = dict(
+        name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+        block_pattern=("attn",), mlp_act="swiglu", norm="rmsnorm",
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestRoPE:
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        y = common.apply_rope(x, pos, 10_000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m−n."""
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+
+        def dot_at(m, n):
+            qm = common.apply_rope(q, jnp.full((1, 1), m), 100.0)
+            kn = common.apply_rope(k, jnp.full((1, 1), n), 100.0)
+            return float(jnp.sum(qm * kn))
+
+        assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+        assert dot_at(5, 5) == pytest.approx(dot_at(0, 0), rel=1e-4)
+
+    def test_mrope_text_mode_equals_rope(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 6, 2, 16))
+        pos = jnp.broadcast_to(jnp.arange(6)[None], (1, 6))
+        pos3 = jnp.broadcast_to(pos[None], (3, 1, 6))
+        y1 = common.apply_rope(x, pos, 10_000.0)
+        y2 = common.apply_mrope(x, pos3, 10_000.0, (3, 3, 2))
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+
+
+class TestMasks:
+    def test_window_mask_matches_ref_attention(self):
+        cfg = cfg_for(window=4, block_pattern=("swa",))
+        p = attention.init_attn_params(cfg, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, cfg.d_model))
+        pos = jnp.broadcast_to(jnp.arange(12)[None], (1, 12))
+        out_w = attention.attend_train(cfg, p, x, "swa", pos)
+        # manual: windowed == full attention where everything beyond window
+        # is masked; check vs flash ref oracle
+        from repro.kernels.flash import ref as fref
+
+        q, k, v = attention._project_qkv(cfg, p, x, x)
+        q = attention._rope(cfg, q, pos, "swa")
+        k = attention._rope(cfg, k, pos, "swa")
+        o = fref.attention_ref(q, k, v, causal=True, window=4, scale=cfg.head_dim**-0.5)
+        out_ref = jnp.einsum("bsnh,nhd->bsd", o.astype(jnp.bfloat16),
+                             p["wo"].astype(jnp.bfloat16))
+        np.testing.assert_allclose(np.asarray(out_w, np.float32),
+                                   np.asarray(out_ref, np.float32), rtol=5e-2, atol=5e-2)
+
+    def test_ring_cache_equals_full_cache_for_window(self):
+        """Windowed ring-buffer decode == full-cache decode with window mask."""
+        cfg = cfg_for(window=4, block_pattern=("swa",))
+        p = attention.init_attn_params(cfg, jax.random.PRNGKey(0))
+        B, steps = 1, 10
+        ring_spec = attention.cache_spec(cfg, "swa", max_seq=steps)
+        assert ring_spec.ring and ring_spec.length == 4
+        full_spec = attention.KVCacheSpec(length=steps, ring=False)
+        ring = attention.init_kv_cache(cfg, ring_spec, B, jnp.float32)
+        full = attention.init_kv_cache(cfg, full_spec, B, jnp.float32)
+        rng = jax.random.PRNGKey(2)
+        for t in range(steps):
+            rng, k1 = jax.random.split(rng)
+            x = jax.random.normal(k1, (B, 1, cfg.d_model))
+            pos = jnp.full((B,), t, jnp.int32)
+            y_ring, ring = attention.attend_decode(cfg, p, x, ring, "swa", pos, ring_spec)
+            y_full, full = attention.attend_decode(cfg, p, x, full, "swa", pos, full_spec)
+            np.testing.assert_allclose(np.asarray(y_ring), np.asarray(y_full),
+                                       rtol=1e-4, atol=1e-5, err_msg=f"step {t}")
+
+
+class TestMoE:
+    def test_dispatch_conserves_tokens(self):
+        """With ample capacity every token reaches exactly top_k experts."""
+        cfg = cfg_for(
+            family="moe",
+            moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32),
+        )
+        p = moe.init_moe_params(cfg, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+        out, aux = moe.apply_moe(cfg, p, x, capacity_factor=4.0)
+        assert out.shape == x.shape
+        assert float(aux) > 0
+        # gates renormalized: output magnitude comparable to single expert
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_moe_matches_dense_expert_when_one_expert(self):
+        """E=1, top-1 MoE must equal the dense MLP with the same weights."""
+        from repro.models import mlp as mlp_mod
+
+        cfg = cfg_for(family="moe", moe=MoEConfig(num_experts=1, top_k=1, d_ff_expert=64))
+        p = moe.init_moe_params(cfg, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, cfg.d_model))
+        out, _ = moe.apply_moe(cfg, p, x, capacity_factor=8.0)
+        dense_p = {"wi": p["wi"][0], "wg": p["wg"][0], "wo": p["wo"][0]}
+        ref = mlp_mod.apply_mlp(cfg, dense_p, x)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), rtol=2e-2, atol=2e-2)
+
+
+class TestRecurrences:
+    def test_rwkv_chunked_equals_stepwise(self):
+        B, S, H, hd = 1, 16, 2, 8
+        rng = np.random.default_rng(0)
+        r, k, v = (jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+                   for _ in range(3))
+        logw = -jnp.asarray(rng.uniform(0.05, 1.0, (B, S, H, hd)), jnp.float32)
+        u = jnp.asarray(rng.standard_normal((H, hd)), jnp.float32)
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        o_chunk, s_chunk = rwkv6.wkv_chunked(r, k, v, logw, u, s0, chunk=4)
+        # stepwise oracle
+        s = s0
+        outs = []
+        for t in range(S):
+            o, s = rwkv6.wkv_step(r[:, t], k[:, t], v[:, t], logw[:, t], u, s)
+            outs.append(o)
+        o_step = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(o_chunk), np.asarray(o_step),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(s),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_rwkv_chunk_size_invariance(self):
+        B, S, H, hd = 2, 24, 2, 4
+        rng = np.random.default_rng(1)
+        r, k, v = (jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+                   for _ in range(3))
+        logw = -jnp.asarray(rng.uniform(0.05, 2.0, (B, S, H, hd)), jnp.float32)
+        u = jnp.asarray(rng.standard_normal((H, hd)), jnp.float32)
+        s0 = jnp.asarray(rng.standard_normal((B, H, hd, hd)), jnp.float32)
+        o1, s1 = rwkv6.wkv_chunked(r, k, v, logw, u, s0, chunk=4)
+        o2, s2 = rwkv6.wkv_chunked(r, k, v, logw, u, s0, chunk=12)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-5)
+
+    def test_rglru_assoc_scan_equals_stepwise(self):
+        B, S, rw = 2, 12, 8
+        rng = np.random.default_rng(2)
+        xi = jnp.asarray(rng.standard_normal((B, S, rw)), jnp.float32)
+        rg = jnp.asarray(rng.uniform(0, 1, (B, S, rw)), jnp.float32)
+        ig = jnp.asarray(rng.uniform(0, 1, (B, S, rw)), jnp.float32)
+        base = -jnp.asarray(rng.uniform(0.1, 1.0, (rw,)), jnp.float32)
+        h0 = jnp.asarray(rng.standard_normal((B, rw)), jnp.float32)
+        h_scan, last_scan = griffin.rg_lru(xi, rg, ig, base, h0)
+        h = h0
+        hs = []
+        for t in range(S):
+            h, _ = griffin.rg_lru_step(xi[:, t], rg[:, t], ig[:, t], base, h)
+            hs.append(h)
+        h_step = jnp.stack(hs, axis=1)
+        np.testing.assert_allclose(np.asarray(h_scan), np.asarray(h_step),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_causal_conv1d_state_continuity(self):
+        """conv over [a;b] == conv(a) then conv(b, tail from a)."""
+        B, S, rw, W = 1, 10, 4, 4
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((B, S, rw)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((W, rw)), jnp.float32)
+        b = jnp.zeros((rw,))
+        y_full, _ = griffin.causal_conv1d(x, w, b)
+        y1, tail = griffin.causal_conv1d(x[:, :6], w, b)
+        y2, _ = griffin.causal_conv1d(x[:, 6:], w, b, tail=tail)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([y1, y2], axis=1)), np.asarray(y_full),
+            rtol=1e-5, atol=1e-6,
+        )

@@ -1,0 +1,122 @@
+"""The paper's §3/§5 memory arithmetic, reproduced exactly.
+
+Every number in these tests appears verbatim in the paper text.
+"""
+import pytest
+
+from repro.core import fusion, planner
+from repro.core.graph import cifar_testnet, lenet5
+
+
+class TestLeNet5Paper:
+    def test_param_count(self):
+        g = lenet5()
+        assert g.param_count() == 61706
+        assert g.param_bytes(4) == 246824
+
+    def test_naive_buffers(self):
+        g = lenet5()
+        p = planner.plan_naive(g)
+        # 32*32 + 6*28*28 + 6*14*14 + 16*10*10 + 16*5*5 + 120 + 84 + 10
+        assert p.arena_elems == 9118
+        assert p.activation_bytes(4) == 36472
+
+    def test_fused_buffers(self):
+        g = lenet5()
+        p = planner.plan_fused(g)
+        # conv output buffers removed: 9118 - 4704 - 1600 = 2814
+        assert p.arena_elems == 2814
+        assert p.activation_bytes(4) == 11256
+        # paper: "%69 memory savings in this example architecture"
+        naive = planner.plan_naive(g)
+        saving = 1 - p.activation_bytes(4) / naive.activation_bytes(4)
+        assert round(saving * 100) == 69
+
+    def test_pingpong(self):
+        g = lenet5()
+        p = planner.plan_pingpong(g)
+        # (1024 + 1176) * sizeof(float) = 8800 bytes
+        assert p.arena_elems == 2200
+        assert p.activation_bytes(4) == 8800
+        # paper's bound max1+max2 coincides here
+        assert planner.paper_pingpong_bound(g) == 2200
+        # "relative memory savings from fused in place max-pooling is %22"
+        fused = planner.plan_fused(g)
+        rel = 1 - p.activation_bytes(4) / fused.activation_bytes(4)
+        assert round(rel * 100) == 22
+        # "total saving with these two optimizations is %76"
+        naive = planner.plan_naive(g)
+        total = 1 - p.activation_bytes(4) / naive.activation_bytes(4)
+        assert round(total * 100) == 76
+
+    def test_plans_verify(self):
+        g = lenet5()
+        for p in (
+            planner.plan_naive(g),
+            planner.plan_fused(g),
+            planner.plan_pingpong(g),
+            planner.plan_optimal_arena(g),
+        ):
+            planner.verify_plan(p)
+
+    def test_optimal_not_worse_than_pingpong(self):
+        g = lenet5()
+        assert (
+            planner.plan_optimal_arena(g).arena_elems
+            <= planner.plan_pingpong(g).arena_elems
+        )
+
+
+class TestCifarTestnetPaper:
+    def test_weight_count(self):
+        g = cifar_testnet()
+        # paper §5: 32*3*5*5 + 16*32*5*5 + 32*16*5*5 + 10*512 = 33120 (~33 KB int8)
+        assert g.weight_count() == 33120
+
+    def test_fused_pingpong_ram(self):
+        g = cifar_testnet()
+        p = planner.plan_pingpong(g)
+        # paper Table 1: our framework RAM 11.2 KBytes (int8 elements = bytes)
+        assert p.arena_elems == 11264
+        assert p.activation_bytes(1) == 11264
+
+    def test_cmsis_baseline_ram(self):
+        g = cifar_testnet()
+        p = planner.plan_cmsis_baseline(g)
+        # unfused max1+max2 = 32768 + 8192 = 40 KB; + im2col bufferA
+        assert p.arena_elems == 40960
+        # conv2 im2col: 2 * 32ch * 25 = 1600 int16 = 3200 bytes
+        assert p.scratch_elems == 3200
+        # corrected CMSIS RAM in the paper: 44 KBytes
+        assert round(p.activation_bytes(1) / 1024) == 43  # 44160 B ~= 44 KB
+        # paper Table 1: "%74 less"
+        ours = planner.plan_pingpong(g).activation_bytes(1)
+        saving = 1 - ours / p.activation_bytes(1)
+        assert abs(saving - 0.74) < 0.02
+
+    def test_fusion_structure(self):
+        g = fusion.fuse(cifar_testnet())
+        kinds = [l.kind for l in g.layers]
+        assert kinds == ["Input", "FusedConvPool", "FusedConvPool", "FusedConvPool", "Flatten", "Linear"]
+
+
+def test_optimal_arena_beats_pingpong_when_maxima_nonadjacent():
+    """Beyond-paper: sizes [100,1,1,100] — ping-pong 200, optimal 101."""
+    from repro.core.graph import Input, OpaqueLayer, SequentialGraph
+
+    def const(shape):
+        return lambda _s, shape=shape: shape
+
+    g = SequentialGraph(
+        [
+            Input(shape=(100,), name="in"),
+            OpaqueLayer(out_fn=const((1,)), name="l1"),
+            OpaqueLayer(out_fn=const((1,)), name="l2"),
+            OpaqueLayer(out_fn=const((100,)), name="l3"),
+        ]
+    )
+    pp = planner.plan_pingpong(g, fused=False)
+    opt = planner.plan_optimal_arena(g, fused=False)
+    assert pp.arena_elems == 200
+    assert opt.arena_elems == 101
+    planner.verify_plan(opt)

@@ -1,0 +1,176 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+Planner invariants on random sequential nets:
+  * every plan passes live-range overlap verification,
+  * optimal-arena ≤ ping-pong ≤ paper bound (max1+max2) ≤ naive,
+  * fusion never changes network output, and never increases buffer totals,
+  * arena execution equals the functional oracle.
+
+Quantization: int8 roundtrip error bounded by scale/2 per tensor.
+Streaming CE: chunked forms equal the naive logsumexp for any shape/chunk.
+"""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fusion, nn, pingpong, planner
+from repro.core.graph import (
+    Conv2d,
+    Flatten,
+    Input,
+    Linear,
+    MaxPool2d,
+    ReLU,
+    SequentialGraph,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@st.composite
+def random_convnet(draw):
+    """Random (valid) conv/pool/linear chains in the paper's layer family."""
+    h = draw(st.sampled_from([16, 20, 24, 32]))
+    c = draw(st.integers(1, 3))
+    layers = [Input(shape=(c, h, h), name="input")]
+    cur = (c, h, h)
+    n_blocks = draw(st.integers(1, 3))
+    i = 0
+    for _ in range(n_blocks):
+        k = draw(st.sampled_from([3, 5]))
+        if cur[1] < k + 2:
+            break
+        out_c = draw(st.sampled_from([2, 4, 6, 8]))
+        conv = Conv2d(cur[0], out_c, kernel_size=k, stride=1,
+                      padding=draw(st.sampled_from([0, k // 2])), name=f"conv{i}")
+        layers.append(conv)
+        cur = conv.out_shape(cur)
+        if draw(st.booleans()):
+            layers.append(ReLU(name=f"relu{i}"))
+        pk = draw(st.sampled_from([2, 3]))
+        ps = draw(st.sampled_from([pk, pk - 1])) or pk  # stride ≥ or < kernel
+        ps = max(ps, 1)
+        if cur[1] >= pk:
+            layers.append(MaxPool2d(kernel_size=pk, stride=ps, name=f"pool{i}"))
+            cur = layers[-1].out_shape(cur)
+        i += 1
+    layers.append(Flatten(name="flatten"))
+    feats = int(np.prod(cur))
+    out = draw(st.sampled_from([4, 10]))
+    layers.append(Linear(feats, out, name="fc"))
+    g = SequentialGraph(layers)
+    g.validate()
+    return g
+
+
+@hp.given(random_convnet())
+@hp.settings(max_examples=30, deadline=None)
+def test_plan_orderings_and_verification(g):
+    naive = planner.plan_naive(g)
+    fused = planner.plan_fused(g)
+    pp = planner.plan_pingpong(g)
+    opt = planner.plan_optimal_arena(g)
+    for p in (naive, fused, pp, opt):
+        planner.verify_plan(p)
+    bound = planner.paper_pingpong_bound(g)
+    assert opt.arena_elems <= pp.arena_elems + pp.scratch_elems
+    assert pp.arena_elems <= bound
+    assert fused.arena_elems <= naive.arena_elems
+    assert pp.arena_elems <= fused.arena_elems
+
+
+@hp.given(random_convnet(), st.integers(0, 2**31 - 1))
+@hp.settings(max_examples=10, deadline=None)
+def test_fusion_and_arena_execution_match_oracle(g, seed):
+    fused = fusion.fuse(g)
+    params = nn.init_params(g, jax.random.PRNGKey(seed % 2**31))
+    fp = dict(params)
+    for layer in fused.layers:
+        inner = getattr(layer, "conv", None) or getattr(layer, "linear", None)
+        if inner is not None and inner.name in params:
+            fp[layer.name or layer.kind] = params[inner.name]
+    x = jax.random.normal(jax.random.PRNGKey((seed + 1) % 2**31), g.layers[0].shape)
+    y_unfused = nn.forward(g, params, x)
+    y_fused = nn.forward(fused, fp, x)
+    np.testing.assert_allclose(np.asarray(y_unfused), np.asarray(y_fused),
+                               rtol=1e-5, atol=1e-5)
+    for plan_fn in (planner.plan_pingpong, planner.plan_optimal_arena):
+        plan = plan_fn(g)
+        y_arena, _ = pingpong.run_with_arena(fused, plan, fp, x)
+        np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_arena),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@hp.given(
+    st.integers(1, 4), st.integers(1, 6), st.integers(2, 5),
+    st.integers(0, 2**31 - 1),
+)
+@hp.settings(max_examples=20, deadline=None)
+def test_opaque_chain_pingpong_bound(n_a, n_b, n_c, seed):
+    """Paper bound holds for arbitrary buffer-size chains."""
+    from repro.core.graph import OpaqueLayer
+
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 1000, size=n_a + n_b + n_c).tolist()
+
+    def const(n):
+        return lambda _s, n=n: (int(n),)
+
+    layers = [Input(shape=(int(sizes[0]),), name="in")]
+    for i, s in enumerate(sizes[1:]):
+        layers.append(OpaqueLayer(out_fn=const(s), name=f"op{i}"))
+    g = SequentialGraph(layers)
+    pp = planner.plan_pingpong(g, fused=False)
+    opt = planner.plan_optimal_arena(g, fused=False)
+    planner.verify_plan(pp)
+    planner.verify_plan(opt)
+    assert opt.arena_elems <= pp.arena_elems <= planner.paper_pingpong_bound(g, fused=False)
+    # optimal arena equals max adjacent-pair sum
+    assert opt.arena_elems == max(
+        (a + b for a, b in zip(sizes, sizes[1:])), default=sizes[0]
+    )
+
+
+@hp.given(st.integers(0, 2**31 - 1))
+@hp.settings(max_examples=10, deadline=None)
+def test_quantize_roundtrip_bound(seed):
+    from repro.core.quantize import quantize
+    from repro.core.graph import lenet5
+
+    g = fusion.fuse(lenet5())
+    params = nn.init_params(lenet5(), jax.random.PRNGKey(seed % 2**31))
+    fp = dict(params)
+    for layer in g.layers:
+        inner = getattr(layer, "conv", None) or getattr(layer, "linear", None)
+        if inner is not None and inner.name in params:
+            fp[layer.name or layer.kind] = params[inner.name]
+    calib = jax.random.normal(jax.random.PRNGKey(1), (4, 1, 32, 32))
+    qm = quantize(g, fp, calib)
+    for name, q in qm.layers.items():
+        w = np.asarray(fp[name]["w"], np.float32)
+        deq = q.w_q.astype(np.float32) * q.w_scale
+        assert np.max(np.abs(deq - w)) <= q.w_scale / 2 + 1e-7, name
+
+
+@hp.given(
+    st.integers(1, 3),   # B
+    st.integers(2, 33),  # S
+    st.integers(3, 40),  # V
+    st.integers(1, 50),  # chunk
+    st.integers(0, 2**31 - 1),
+)
+@hp.settings(max_examples=25, deadline=None)
+def test_streaming_ce_equals_naive(B, S, V, chunk, seed):
+    from repro.kernels.xent import ref as xref
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, S, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((V, 8)), jnp.float32)
+    t = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    ce_n = xref.naive_xent(x, w, t)
+    ce_v = xref.chunked_xent(x, w, t, chunk=chunk)
+    ce_s = xref.seq_chunked_xent(x, w, t, chunk=min(chunk, S))
+    np.testing.assert_allclose(np.asarray(ce_v), np.asarray(ce_n), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ce_s), np.asarray(ce_n), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,88 @@
+"""Roofline derivation unit tests on synthetic HLO text."""
+import pytest
+
+from repro.launch import roofline as rl
+
+
+HLO = """\
+HloModule jit_step
+
+%region_body.10 (arg: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %t = tuple(...)
+}
+
+%region_cond.11 (arg: (s32[], f32[128,256])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main.20 (p0: f32[128,256]) -> f32[128,256] {
+  %ag = f32[256,256]{1,0} all-gather(%p0), replica_groups=[16,16]<=[256], dimensions={0}
+  %w = (s32[], f32[128,256]) while(%init), condition=%region_cond.11, body=%region_body.10
+  %cp = f32[128,256]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  ROOT %r = f32[128,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert rl._shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert rl._shape_bytes("bf16[2,2]") == 8
+    assert rl._shape_bytes("(f32[4], s32[2])") == 16 + 8
+
+
+def test_parse_collectives_basic():
+    st = rl.parse_collectives(HLO, 256)
+    # all-gather: (R-1)/R * out_bytes with R=16
+    ag = 15 / 16 * 256 * 256 * 4
+    # all-reduce: 2(R-1)/R * bytes
+    ar = 2 * 15 / 16 * 128 * 256 * 4
+    cp = 128 * 256 * 4
+    assert st.bytes_by_kind["all-gather"] == pytest.approx(ag)
+    assert st.bytes_by_kind["all-reduce"] == pytest.approx(ar)
+    assert st.bytes_by_kind["collective-permute"] == pytest.approx(cp)
+    assert st.count_by_kind == {"all-gather": 1, "all-reduce": 1, "collective-permute": 1}
+
+
+def test_parse_collectives_scaled_multiplies_loop_bodies():
+    st = rl.parse_collectives_scaled(HLO, 256)
+    ar_once = 2 * 15 / 16 * 128 * 256 * 4
+    # the all-reduce lives in a while body with trip count 12
+    assert st.bytes_by_kind["all-reduce"] == pytest.approx(12 * ar_once)
+    # entry-level collectives unscaled
+    assert st.bytes_by_kind["collective-permute"] == pytest.approx(128 * 256 * 4)
+
+
+def test_derive_terms_and_bottleneck():
+    cost = {"flops": 197e12, "transcendentals": 0.0, "bytes accessed": 819e9 * 2}
+    st = rl.CollectiveStats({"all-reduce": 50e9 * 0.5}, {"all-reduce": 1})
+    roof = rl.derive(cost, st, num_devices=256, model_flops_total=197e12 * 256 * 0.5)
+    assert roof.compute_s == pytest.approx(1.0)
+    assert roof.memory_s == pytest.approx(2.0)
+    assert roof.collective_s == pytest.approx(0.5)
+    assert roof.bottleneck == "memory"
+    assert roof.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_modes():
+    from repro.configs import base as cfgbase
+
+    cfg = cfgbase.get_config("llama3-8b")
+    tr = rl.model_flops(cfg, cfgbase.SHAPES["train_4k"])
+    pf = rl.model_flops(cfg, cfgbase.SHAPES["prefill_32k"])
+    dc = rl.model_flops(cfg, cfgbase.SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert tr == pytest.approx(6 * n * 256 * 4096)
+    assert pf == pytest.approx(2 * n * 32 * 32768)
+    assert dc == pytest.approx(2 * n * 128)
+
+
+def test_moe_active_params_smaller():
+    from repro.configs import base as cfgbase
+
+    cfg = cfgbase.get_config("mixtral-8x7b")
+    assert cfg.active_param_count() < cfg.param_count()
+    # 8 experts top-2: expert params scale ~2/8 when active
+    ratio = cfg.active_param_count() / cfg.param_count()
+    assert 0.2 < ratio < 0.45

@@ -1,0 +1,227 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, train loop,
+fault tolerance (preemption resume must be bit-exact), serving engine."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ModelConfig
+from repro.data import tokens as tok
+from repro.data.mnist_synth import make_dataset
+from repro.ft.resilience import PreemptionGuard, StragglerDetector
+from repro.models.transformer import Model
+from repro.train import optimizer as opt
+from repro.train.loop import LoopConfig, LoopState, run
+from repro.train.step import TrainStepConfig, make_train_step
+
+
+def tiny_cfg(vocab=128):
+    return ModelConfig(
+        name="tiny", family="dense", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=1, head_dim=16, d_ff=64, vocab_size=vocab,
+        block_pattern=("attn",), mlp_act="swiglu", norm="rmsnorm",
+        tie_embeddings=True,
+    )
+
+
+# ---------------------------------------------------------------- optimizer
+class TestOptimizer:
+    def test_adamw_minimizes_quadratic(self):
+        cfg = opt.AdamWConfig(lr_peak=0.1, warmup_steps=5, total_steps=200,
+                              weight_decay=0.0, clip_norm=10.0)
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        state = opt.init_state(params)
+        for _ in range(200):
+            grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state, _ = opt.apply_adamw(cfg, params, grads, state)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.ones((4,)) * 10.0}
+        clipped, norm = opt.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(20.0)
+        assert float(opt.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = opt.AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100)
+        assert float(opt.lr_schedule(cfg, jnp.asarray(5))) == pytest.approx(5e-4)
+        assert float(opt.lr_schedule(cfg, jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-2)
+        end = float(opt.lr_schedule(cfg, jnp.asarray(100)))
+        assert end == pytest.approx(cfg.lr_peak * cfg.min_lr_frac, rel=1e-2)
+
+    def test_weight_decay_only_on_matrices(self):
+        cfg = opt.AdamWConfig(weight_decay=0.1, clip_norm=100.0)
+        params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+        state = opt.init_state(params)
+        grads = jax.tree.map(jnp.zeros_like, params)
+        p2, _, _ = opt.apply_adamw(cfg, params, grads, state)
+        assert float(jnp.max(p2["w"])) < 1.0  # decayed
+        assert float(jnp.max(p2["b"])) == 1.0  # not decayed
+
+
+# ---------------------------------------------------------------- data
+class TestData:
+    def test_token_pipeline_deterministic(self):
+        cfg = tok.TokenPipelineConfig(vocab_size=64, seq_len=16, global_batch=4)
+        a = tok.batch_at_step(cfg, 7)
+        b = tok.batch_at_step(cfg, 7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = tok.batch_at_step(cfg, 8)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_targets_are_shifted_tokens(self):
+        cfg = tok.TokenPipelineConfig(vocab_size=64, seq_len=16, global_batch=2)
+        b = tok.batch_at_step(cfg, 0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+    def test_host_sharding_partitions_batch(self):
+        full = tok.TokenPipelineConfig(vocab_size=64, seq_len=8, global_batch=4)
+        h0 = tok.TokenPipelineConfig(vocab_size=64, seq_len=8, global_batch=4,
+                                     num_hosts=2, host_rank=0)
+        assert h0.local_batch == 2
+        b = tok.batch_at_step(h0, 0)
+        assert b["tokens"].shape == (2, 8)
+
+    def test_mnist_synth(self):
+        x, y = make_dataset(16, seed=0)
+        assert x.shape == (16, 1, 32, 32)
+        assert x.min() >= 0.0 and x.max() <= 1.0
+        assert set(np.unique(y)).issubset(set(range(10)))
+        x2, y2 = make_dataset(16, seed=0)
+        np.testing.assert_array_equal(x, x2)
+
+
+# ---------------------------------------------------------------- checkpoint
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "b": {"c": jnp.asarray([1, 2], jnp.int32)}}
+        ckpt.save(tmp_path, 5, tree)
+        step, out = ckpt.restore(tmp_path, jax.tree.map(np.asarray, tree))
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+        np.testing.assert_array_equal(np.asarray(out["b"]["c"]), np.asarray(tree["b"]["c"]))
+
+    def test_latest_and_gc(self, tmp_path):
+        tree = {"a": jnp.zeros((2,))}
+        mgr = ckpt.CheckpointManager(tmp_path, keep=2, async_save=False)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree)
+        assert ckpt.latest_step(tmp_path) == 4
+        steps = sorted(p.name for p in tmp_path.iterdir())
+        assert steps == ["step-00000003", "step-00000004"]
+
+    def test_async_save_waits(self, tmp_path):
+        tree = {"a": jnp.zeros((128, 128))}
+        mgr = ckpt.CheckpointManager(tmp_path, keep=1, async_save=True)
+        mgr.save(1, tree)
+        mgr.wait()
+        assert ckpt.latest_step(tmp_path) == 1
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        ckpt.save(tmp_path, 1, {"a": jnp.zeros((2,))})
+        with pytest.raises(ValueError):
+            ckpt.restore(tmp_path, {"a": np.zeros((3,))})
+
+
+# ---------------------------------------------------------------- loop + FT
+class TestTrainLoopFT:
+    def _setup(self, tmp_path, total_steps):
+        cfg = tiny_cfg()
+        model = Model(cfg, xent_impl="naive")
+        pipe = tok.TokenPipelineConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                       global_batch=4)
+        scfg = TrainStepConfig(adamw=opt.AdamWConfig(lr_peak=1e-3, warmup_steps=2,
+                                                     total_steps=total_steps))
+        step = jax.jit(make_train_step(model, scfg))
+
+        def init_state():
+            params = model.init_params(jax.random.PRNGKey(0))
+            return LoopState(step=0, params=params, opt_state=opt.init_state(params))
+
+        def batch_at(s):
+            return {k: jnp.asarray(v) for k, v in tok.batch_at_step(pipe, s).items()}
+
+        lcfg = LoopConfig(total_steps=total_steps, ckpt_dir=str(tmp_path),
+                          ckpt_every=5, log_every=100, async_ckpt=False)
+        return lcfg, step, init_state, batch_at
+
+    def test_preemption_resume_bit_exact(self, tmp_path):
+        # uninterrupted run
+        lcfg, step, init_state, batch_at = self._setup(tmp_path / "a", 12)
+        final = run(lcfg, step, init_state, batch_at)
+
+        # interrupted at step 5 (guard fires), then resumed
+        lcfg2, step2, init2, batch2 = self._setup(tmp_path / "b", 12)
+        guard = PreemptionGuard(signals=())
+        calls = {"n": 0}
+
+        def counting_batch(s):
+            calls["n"] += 1
+            if calls["n"] == 5:
+                guard.request()
+            return batch2(s)
+
+        mid = run(lcfg2, step2, init2, counting_batch, guard=guard)
+        assert mid.step < 12
+        resumed = run(lcfg2, step2, init2, batch2)
+        assert resumed.step == 12
+
+        for a, b in zip(jax.tree.leaves(final.params), jax.tree.leaves(resumed.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_straggler_detector(self):
+        d = StragglerDetector(window=20, factor=2.0, min_samples=4)
+        for _ in range(10):
+            assert not d.observe(1.0)
+        assert d.observe(5.0)
+        assert d.observe_many([1.0, 1.1, 0.9, 4.0]) == [3]
+
+
+# ---------------------------------------------------------------- serving
+class TestEngine:
+    def test_engine_serves_all(self):
+        from repro.serve.engine import Engine, Request
+
+        cfg = tiny_cfg()
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 5 + 3 * i).astype(np.int32),
+                    max_new_tokens=4)
+            for i in range(5)
+        ]
+        eng = Engine(model, params, lanes=2, max_seq=64)
+        stats = eng.run(reqs)
+        assert all(r.done for r in reqs)
+        assert all(len(r.out_tokens) == 4 for r in reqs)
+        assert stats.tokens_out == 20
+        rep = eng.plan_report()
+        assert rep["kv_state_bytes"] > 0
+
+    def test_engine_matches_sequential_decode(self):
+        """Lane-parallel decode must equal running each request alone."""
+        from repro.serve.engine import Engine, Request
+
+        cfg = tiny_cfg()
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(1))
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32) for n in (4, 9)]
+
+        # batched engine with 2 lanes
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=3) for i, p in enumerate(prompts)]
+        eng = Engine(model, params, lanes=2, max_seq=32)
+        eng.run(reqs)
+
+        # one-lane engines
+        for i, p in enumerate(prompts):
+            solo = [Request(rid=0, prompt=p, max_new_tokens=3)]
+            e1 = Engine(model, params, lanes=1, max_seq=32)
+            e1.run(solo)
+            assert solo[0].out_tokens == reqs[i].out_tokens, i

@@ -1,0 +1,113 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Covers the full §1-purpose pipeline: trained model → fused graph → memory
+plan → C inference engine → bit-exact deployment; plus the LM-scale
+realization (scan ping-pong + streaming CE) on a reduced model.
+"""
+import subprocess
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import export_c, fusion, nn, planner, quantize
+from repro.core.graph import lenet5
+from repro.data.mnist_synth import make_dataset
+from repro.train import optimizer as opt
+
+
+def _short_train(steps=150):
+    g = lenet5()
+    params = nn.init_params(g, jax.random.PRNGKey(0))
+    imgs, labels = make_dataset(512, seed=0)
+    acfg = opt.AdamWConfig(lr_peak=2e-3, warmup_steps=10, total_steps=steps,
+                           weight_decay=0.0)
+    state = opt.init_state(params)
+
+    @jax.jit
+    def step(p, s, x, y):
+        def loss_fn(p):
+            logits = jax.vmap(lambda im: nn.forward(g, p, im))(x)
+            return jnp.mean(
+                jax.nn.logsumexp(logits, -1)
+                - jnp.take_along_axis(logits, y[:, None], 1)[:, 0]
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p, s, _ = opt.apply_adamw(acfg, p, grads, s)
+        return p, s, loss
+
+    rng = np.random.default_rng(0)
+    loss = None
+    for i in range(steps):
+        idx = rng.integers(0, len(imgs), 32)
+        params, state, loss = step(params, state, jnp.asarray(imgs[idx]),
+                                   jnp.asarray(labels[idx]))
+    return g, params, float(loss)
+
+
+def test_paper_pipeline_end_to_end():
+    """train → fuse → plan → emit C → gcc → identical outputs + sane memory."""
+    g, params, final_loss = _short_train()
+    assert final_loss < 2.3  # learning happened (uniform = ln 10 ≈ 2.30)
+
+    fused = fusion.fuse(g)
+    fp = dict(params)
+    for layer in fused.layers:
+        inner = getattr(layer, "conv", None) or getattr(layer, "linear", None)
+        if inner is not None and inner.name in params:
+            fp[layer.name or layer.kind] = params[inner.name]
+
+    plan = planner.plan_pingpong(g)
+    planner.verify_plan(plan)
+    assert plan.activation_bytes(4) == 8800  # the paper's arena
+
+    src = export_c.generate_c(fused, plan, fp, with_main=True)
+    imgs, labels = make_dataset(16, seed=42)
+    with tempfile.TemporaryDirectory() as td:
+        c = Path(td) / "net.c"
+        b = Path(td) / "net"
+        c.write_text(src)
+        subprocess.run(["gcc", "-O2", "-std=c99", str(c), "-o", str(b), "-lm"],
+                       check=True, capture_output=True)
+        agree_jax = 0
+        for i in range(len(imgs)):
+            x = np.asarray(imgs[i], np.float32)
+            out = subprocess.run([str(b)], input=x.tobytes(), capture_output=True,
+                                 check=True).stdout
+            y_c = np.frombuffer(out, np.float32)
+            y_jax = np.asarray(nn.forward(fused, fp, jnp.asarray(x)))
+            np.testing.assert_allclose(y_c, y_jax, rtol=1e-4, atol=1e-5)
+            agree_jax += int(np.argmax(y_c) == labels[i])
+        # the deployed engine actually classifies (well above the 1.6/16
+        # random-chance floor; full training accuracy is exercised in
+        # examples/deploy_microcontroller.py)
+        assert agree_jax >= 7, f"only {agree_jax}/16 correct"
+
+
+def test_lm_scale_memory_discipline():
+    """Streaming CE must equal the naive loss exactly (never materializing
+    (B,S,V)); all three implementations agree."""
+    from repro.configs.base import ModelConfig
+    from repro.models.transformer import Model
+
+    cfg = ModelConfig(
+        name="sys", family="dense", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=1, head_dim=16, d_ff=64, vocab_size=1024,
+        block_pattern=("attn",), mlp_act="swiglu", norm="rmsnorm",
+        tie_embeddings=True,
+    )
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(0), (2, 32), 0, 1024),
+        "targets": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 1024),
+    }
+    params = Model(cfg).init_params(jax.random.PRNGKey(2))
+    losses = {}
+    for impl in ("naive", "chunked", "seq_chunked"):
+        m = Model(cfg, xent_impl=impl, xent_chunk=128, xent_seq_chunk=8)
+        loss, _ = jax.jit(m.train_loss)(params, batch)
+        losses[impl] = float(loss)
+    np.testing.assert_allclose(losses["naive"], losses["chunked"], rtol=1e-5)
+    np.testing.assert_allclose(losses["naive"], losses["seq_chunked"], rtol=1e-5)
