@@ -1,0 +1,177 @@
+"""Hot-path microbench: fused conv_pool kernel + arena executor.
+
+Tracks the two paths ISSUE 1 compiled, so the perf trajectory is measurable
+from this PR on.  For each batch size it times
+
+* ``kernel.interpret``  — the Pallas kernel through the interpreter (the old
+  default on backends without a compiled Pallas lowering),
+* ``kernel.compiled``   — the default ``impl="auto"`` path (compiled Pallas on
+  TPU/GPU, fused XLA on CPU),
+* ``executor.pyloop``   — the eager Python-loop arena walker, per image,
+* ``executor.scan``     — the jitted scan executor, whole batch in one call,
+
+on the CIFAR-testnet conv1 geometry (kernel) and fused LeNet-5 with the
+ping-pong plan (executor), and writes ``BENCH_hotpaths.json``:
+
+    PYTHONPATH=src python benchmarks/bench_hotpaths.py [--smoke] [--out PATH]
+
+``--smoke`` runs one timing rep of the cheap variants only (CI: asserts the
+JSON is produced, not the numbers).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time_us(fn, *, reps: int, warmup: int = 1) -> float:
+    """Best-of-``reps`` wall time per call, in µs.  Each variant is timed as
+    its own contiguous block and the minimum taken — the standard
+    microbenchmark estimator, robust to scheduler/clock drift (interleaving
+    variants instead lets the interpreter's large transient allocations
+    degrade the compiled samples)."""
+    reps = max(1, reps)
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def bench_kernel(batches, *, reps: int, smoke: bool) -> list:
+    from repro.kernels.conv_pool import kernel as _kern
+    from repro.kernels.conv_pool import ops
+
+    rng = np.random.default_rng(0)
+    # CIFAR-testnet conv1: 3->32 channels, 5x5, pad 2, pool 2/2 on 32x32.
+    w = jnp.asarray(rng.standard_normal((32, 3, 5, 5)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((32,)) * 0.1, jnp.float32)
+    wh = jnp.transpose(w, (2, 3, 1, 0))  # HWIO for the raw kernel baseline
+
+    # The seed hot path: interpret-mode Pallas, one program per pooled row
+    # (row_block=1), batch via per-image jax.vmap instead of the grid.
+    @jax.jit
+    def seed_style_interpret(xs):
+        xh = jnp.transpose(xs, (0, 2, 3, 1))
+        xh = jnp.pad(xh, ((0, 0), (2, 2), (2, 2), (0, 0)))
+        return jax.vmap(
+            lambda img: _kern.conv_pool(img, wh, b, interpret=True, row_block=1)
+        )(xh)
+
+    # All compiled rows are timed before the first interpreter call: the
+    # interpreter's transient allocations measurably degrade compiled call
+    # times for the rest of the process, which would understate the speedup.
+    rows = []
+    xs = {n: jnp.asarray(rng.standard_normal((n, 3, 32, 32)), jnp.float32)
+          for n in batches}
+    for n in batches:
+        us = _time_us(
+            lambda n=n: ops.fused_conv_pool(xs[n], w, b, padding=2, impl="auto"),
+            reps=reps,
+        )
+        rows.append({"path": "kernel", "variant": "compiled", "batch": n,
+                     "us_per_call": us})
+    for n in batches:
+        # Interpreter baseline: O(10ms+)/call — skip in --smoke and at large
+        # batch where it would dominate the run.
+        if not smoke and n <= 8:
+            us = _time_us(lambda n=n: seed_style_interpret(xs[n]),
+                          reps=max(3, reps // 5))
+            rows.append({"path": "kernel", "variant": "interpret", "batch": n,
+                         "us_per_call": us})
+    return rows
+
+
+def bench_executor(batches, *, reps: int, smoke: bool) -> list:
+    from repro.core import fusion, nn, pingpong, planner
+    from repro.core.graph import lenet5
+
+    g = lenet5()
+    fused = fusion.fuse(g)
+    params = nn.init_params(g, jax.random.PRNGKey(0))
+    fp = fusion.rename_params(fused, params)
+    plan = planner.plan_pingpong(g)
+
+    rng = np.random.default_rng(1)
+    rows = []
+    for n in batches:
+        xs = jnp.asarray(rng.standard_normal((n, 1, 32, 32)), jnp.float32)
+
+        def pyloop():
+            return [pingpong.run_with_arena(fused, plan, fp, xs[i])[0] for i in range(n)]
+
+        def scan():
+            return pingpong.run_batch_with_arena(fused, plan, fp, xs)[0]
+
+        rows.append(
+            {
+                "path": "executor", "variant": "pyloop", "batch": n,
+                "us_per_call": _time_us(pyloop, reps=1 if smoke else max(3, reps // 5)),
+            }
+        )
+        rows.append(
+            {
+                "path": "executor", "variant": "scan", "batch": n,
+                "us_per_call": _time_us(scan, reps=1 if smoke else reps),
+            }
+        )
+    return rows
+
+
+def speedups(rows) -> dict:
+    """speedup of the compiled variant over its baseline, per path/batch."""
+    base = {"kernel": "interpret", "executor": "pyloop"}
+    fast = {"kernel": "compiled", "executor": "scan"}
+    by = {(r["path"], r["variant"], r["batch"]): r["us_per_call"] for r in rows}
+    out = {}
+    for (path, variant, n), us in sorted(by.items()):
+        if variant != base[path]:
+            continue
+        f = by.get((path, fast[path], n))
+        if f:
+            out[f"{path}.batch{n}"] = round(us / f, 2)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one rep, cheap variants only (CI artifact check)")
+    ap.add_argument("--reps", type=int, default=20)
+    ap.add_argument("--out", default="BENCH_hotpaths.json")
+    args = ap.parse_args(argv)
+
+    batches = [1] if args.smoke else [1, 8, 32]
+    rows = bench_kernel(batches, reps=args.reps, smoke=args.smoke)
+    rows += bench_executor(batches, reps=args.reps, smoke=args.smoke)
+
+    result = {
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "smoke": args.smoke,
+        "rows": rows,
+        "speedup": speedups(rows),
+    }
+    Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
+    for r in rows:
+        print(f"{r['path']}.{r['variant']:<9} batch={r['batch']:<3} "
+              f"{r['us_per_call']:>12.1f} us/call")
+    for k, v in result["speedup"].items():
+        print(f"speedup {k}: {v}x")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -94,3 +94,21 @@ def fuse(graph: SequentialGraph, allow_line_buffer: bool = True) -> SequentialGr
     fused = SequentialGraph(out)
     fused.validate()
     return fused
+
+
+def rename_params(fused_graph: SequentialGraph, params: dict) -> dict:
+    """Re-key ``params`` so fused layers find their conv/linear weights.
+
+    A fused layer is named ``"{conv}+{pool}"`` / ``"{fc}+{act}"`` but carries
+    the original layer's parameters; this maps each fused name to the inner
+    layer's param dict (leaving existing keys untouched).
+    """
+    out = dict(params)
+    for layer in fused_graph.layers:
+        name = layer.name or layer.kind
+        if name in out:
+            continue
+        inner = getattr(layer, "conv", None) or getattr(layer, "linear", None)
+        if inner is not None and inner.name in params:
+            out[name] = params[inner.name]
+    return out

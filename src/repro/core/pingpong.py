@@ -1,26 +1,43 @@
-"""Arena executor: runs a sequential graph *inside the planned arena*.
+"""Arena executors: run a sequential graph *inside the planned arena*.
 
-This is the executable proof of the paper's §3.2 claim.  The network is
-evaluated with every inter-layer tensor living at its planned offset in one
-flat arena array of exactly ``plan.arena_elems`` elements.  If the plan were
-wrong (two live buffers overlapping), the executor would compute garbage; the
-tests assert byte-exact agreement with the functional oracle
-(:func:`repro.core.nn.forward`) for ping-pong and optimal-arena plans.
+Two executors share the plan-validation logic:
 
-On TPU the same discipline is realized by ``lax.scan`` over stacked layer
-weights with a donated carry (two alternating HBM buffers) — see
-``repro.models.transformer`` and DESIGN.md §2.
+* :func:`run_with_arena` — the Python-loop walker.  Every inter-layer tensor
+  is placed at its planned offset in one flat arena array, one eager dispatch
+  per layer and per ``dynamic_slice``.  It is deliberately unjitted: the
+  *slow oracle* that proves the plan correct (if two live buffers overlapped,
+  the output would diverge from :func:`repro.core.nn.forward`).
+
+* :func:`run_with_arena_scan` — the compiled executor (DESIGN.md §2).  The
+  whole network traces into **one** XLA program: homogeneous layer runs
+  (``repro.core.planner.scan_segments``) execute as ``lax.scan`` over stacked
+  weights with a two-bank carry ``(cur, prev)``.  Each step writes the bank
+  the step before read from — with buffer donation XLA aliases the two carry
+  slots onto two alternating HBM buffers, which *is* the paper's §3.2
+  ping-pong discipline realized on TPU.  ``run_batch_with_arena`` pushes N
+  images through the same plan in one call (the banks gain a leading batch
+  dimension; the alternation is unchanged).
+
+Offsets and shapes are trace-time constants taken from the plan, so the
+compiled executor re-dispatches neither per layer nor per slice.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.graph import Input, SequentialGraph
 from repro.core.nn import Params, apply_layer
-from repro.core.planner import MemoryPlan
+from repro.core.planner import MemoryPlan, materialized_steps, scan_segments
+
+# Backends where jit buffer donation is implemented; elsewhere donating only
+# produces a warning, so we skip it.
+_DONATING_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+# Compiled executors kept per (graph, plan) object pair, bounded FIFO.
+_EXEC_CACHE_MAX = 32
 
 
 def _prod(shape) -> int:
@@ -28,6 +45,18 @@ def _prod(shape) -> int:
     for d in shape:
         out *= int(d)
     return out
+
+
+def _check_plan(graph: SequentialGraph, plan: MemoryPlan):
+    """Shared walker/scan validation: plan buffers line up 1:1 with the
+    graph's materialized layers.  Returns the materialized rows."""
+    rows = [l for l in graph.layers if l.kind not in ("ReLU", "Flatten")]
+    if len(rows) != len(plan.buffers):
+        raise ValueError(
+            f"plan has {len(plan.buffers)} buffers but graph materializes "
+            f"{len(rows)} — fuse the graph with the same options as the plan"
+        )
+    return rows
 
 
 def run_with_arena(
@@ -44,12 +73,7 @@ def run_with_arena(
     The graph must be in the same (fused / unfused) form the plan was built
     from, so that materialized layers line up 1:1 with plan buffers.
     """
-    rows = [l for l in graph.layers if l.kind not in ("ReLU", "Flatten")]
-    if len(rows) != len(plan.buffers):
-        raise ValueError(
-            f"plan has {len(plan.buffers)} buffers but graph materializes "
-            f"{len(rows)} — fuse the graph with the same options as the plan"
-        )
+    _check_plan(graph, plan)
 
     arena = jnp.zeros((plan.arena_elems,), dtype=x.dtype)
 
@@ -96,3 +120,153 @@ def run_with_arena(
     out = jax.lax.dynamic_slice(arena, (final.offset_elems,), (final.size_elems,))
     stats = {"arena_elems": int(plan.arena_elems), "buffers": len(plan.buffers)}
     return out.reshape(shapes[-1]), stats
+
+
+# ---------------------------------------------------------------------------
+# Compiled scan executor
+# ---------------------------------------------------------------------------
+
+
+def _apply_step(layer, views, p, x):
+    out = apply_layer(layer, p, x)
+    for v in views:
+        out = apply_layer(v, {}, out)
+    return out
+
+
+def make_scan_executor(
+    graph: SequentialGraph,
+    plan: MemoryPlan,
+    *,
+    donate_input: bool = False,
+) -> Callable[[Params, jax.Array], jax.Array]:
+    """Build the jitted executor for (graph, plan).
+
+    The returned callable maps ``(params, x) -> y`` where ``x`` is one image
+    (``in_shape``) or a batch (``(N, *in_shape)``); everything else — layer
+    sequence, segment grouping, bank sizes — is baked in as trace-time
+    constants.  Reuse the callable across calls to hit jit's cache.
+
+    ``donate_input=True`` additionally donates ``x`` (the bank the input
+    occupies) on backends that implement donation — opt-in, because the
+    caller's array is deleted and must not be reused afterwards.  The scan
+    carries themselves are donated/aliased by XLA inside the compiled
+    program regardless.
+    """
+    _check_plan(graph, plan)
+    segments = scan_segments(graph)
+    pre_views, steps = materialized_steps(graph)
+    in_shape = tuple(graph.shapes()[0])
+    in_elems = _prod(in_shape)
+    # The plan's per-buffer sizes, checked against layer outputs at trace time.
+    sizes = [b.size_elems for b in plan.buffers]
+    if in_elems != sizes[0]:
+        raise ValueError(f"input size {in_shape} != planned {sizes[0]}")
+
+    def _exec(params: Params, x: jax.Array) -> jax.Array:
+        nbatch = x.ndim - len(in_shape)
+        if nbatch not in (0, 1):
+            raise ValueError(f"input shape {x.shape} does not match {in_shape}")
+        if _prod(x.shape[nbatch:]) != in_elems:
+            raise ValueError(f"input size {x.shape} != planned {sizes[0]}")
+        cur = x
+        for v in pre_views:
+            cur = apply_layer(v, {}, cur)
+        for seg in segments:
+            first_layer, first_views = steps[seg.start][0], steps[seg.start][1]
+            if not seg.stacked:
+                name = first_layer.name or first_layer.kind
+                cur = _apply_step(first_layer, first_views, params.get(name, {}), cur)
+            else:
+                # lax.scan over stacked weights; two-bank carry (cur, prev):
+                # each step's output may reuse (alias) the bank its input's
+                # producer freed — the donated ping-pong pair.
+                stacked = jax.tree.map(
+                    lambda *leaves: jnp.stack(leaves),
+                    *[params.get(n, {}) for n in seg.layer_names],
+                )
+
+                def body(carry, p, _layer=first_layer, _views=first_views):
+                    bank_cur, bank_prev = carry
+                    del bank_prev  # freed: the slot this step's output lands in
+                    out = _apply_step(_layer, _views, p, bank_cur)
+                    return (out, bank_cur), None
+
+                # length: stacked may be a leafless pytree (parameterless run)
+                (cur, _), _ = jax.lax.scan(body, (cur, cur), stacked,
+                                           length=seg.length)
+            # buffers[0] is the input, so step i writes plan buffer i+1.
+            if _prod(cur.shape[nbatch:]) != sizes[seg.start + seg.length]:
+                raise ValueError(
+                    f"segment {seg.layer_names}: produced {cur.shape} but plan "
+                    f"expects {sizes[seg.start + seg.length]} elements"
+                )
+        return cur
+
+    donate = donate_input and jax.default_backend() in _DONATING_BACKENDS
+    return jax.jit(_exec, donate_argnums=(1,) if donate else ())
+
+
+# Keyed by object identity; values keep the graph/plan alive so ids stay
+# valid.  Bounded FIFO: the convenience wrappers only ever see a handful of
+# (graph, plan) pairs per process; heavy users should hold their own
+# make_scan_executor result instead.
+_EXEC_CACHE: Dict[
+    Tuple[int, int], Tuple[SequentialGraph, MemoryPlan, Callable, Dict[str, int]]
+] = {}
+
+
+def _cached_executor(graph: SequentialGraph, plan: MemoryPlan):
+    """(executor, stats) for (graph, plan), computed once per pair."""
+    key = (id(graph), id(plan))
+    hit = _EXEC_CACHE.get(key)
+    if hit is None:
+        while len(_EXEC_CACHE) >= _EXEC_CACHE_MAX:
+            _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
+        segments = scan_segments(graph)
+        stats = {
+            "arena_elems": int(plan.arena_elems),
+            "buffers": len(plan.buffers),
+            "segments": len(segments),
+            "stacked_layers": sum(s.length for s in segments if s.stacked),
+        }
+        hit = (graph, plan, make_scan_executor(graph, plan), stats)
+        _EXEC_CACHE[key] = hit
+    return hit[2], hit[3]
+
+
+def run_with_arena_scan(
+    graph: SequentialGraph,
+    plan: MemoryPlan,
+    params: Params,
+    x: jax.Array,
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """Compiled counterpart of :func:`run_with_arena` (same signature).
+
+    Returns (output, stats); ``stats`` additionally reports the homogeneous
+    segment grouping.  Byte-exact against the walker — both run the same
+    layer numerics, only the dispatch differs.
+    """
+    fn, stats = _cached_executor(graph, plan)
+    return fn(params, x), dict(stats)
+
+
+def run_batch_with_arena(
+    graph: SequentialGraph,
+    plan: MemoryPlan,
+    params: Params,
+    xs: jax.Array,  # (N, *in_shape)
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """N images through one arena plan in a single compiled dispatch.
+
+    The ping-pong banks simply gain a leading batch dimension (arena cost is
+    ``N · arena_elems``); the bank alternation is identical per image.
+    """
+    in_ndim = len(graph.shapes()[0])
+    if xs.ndim != in_ndim + 1:
+        raise ValueError(f"expected batched input (N, ...), got {xs.shape}")
+    fn, stats = _cached_executor(graph, plan)
+    out = fn(params, xs)
+    stats = dict(stats)
+    stats["batch"] = int(xs.shape[0])
+    return out, stats

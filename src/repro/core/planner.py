@@ -30,7 +30,7 @@ import dataclasses
 from typing import List, Optional, Tuple
 
 from repro.core import fusion as fusion_pass
-from repro.core.graph import Conv2d, FusedConvPool, SequentialGraph
+from repro.core.graph import Conv2d, FusedConvPool, Input, SequentialGraph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,6 +257,113 @@ def plan_cmsis_baseline(graph: SequentialGraph, io_dtype_bytes: int = 1) -> Memo
         scratch_elems=scratch_elems,
         param_elems=graph.param_count(),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedRun:
+    """A maximal run of homogeneous materialized layers (stacked-weight
+    metadata for the scan executor, :mod:`repro.core.pingpong`).
+
+    Layers in one run have identical specs (same kind and hyper-parameters,
+    hence identical parameter shapes) and identical in/out buffer shapes, so
+    their weights stack along a new leading axis and the run executes as one
+    ``lax.scan`` with a donated two-bank carry — the plan's A/B banks.
+    ``start`` indexes the materialized-layer order (the same order as
+    ``MemoryPlan.buffers[1:]``); a run of ``length`` 1 is executed unrolled.
+    """
+
+    start: int
+    length: int
+    kind: str
+    layer_names: Tuple[str, ...]
+    in_shape: Tuple[int, ...]
+    out_shape: Tuple[int, ...]
+
+    @property
+    def stacked(self) -> bool:
+        return self.length > 1
+
+
+def _spec_key(layer):
+    """Layer identity modulo names — equal keys ⇒ stackable parameters."""
+    stripped = dataclasses.replace(layer, name="")
+    inner = getattr(stripped, "conv", None)
+    if inner is not None:
+        stripped = dataclasses.replace(stripped, conv=dataclasses.replace(inner, name=""))
+    inner = getattr(stripped, "linear", None)
+    if inner is not None:
+        stripped = dataclasses.replace(stripped, linear=dataclasses.replace(inner, name=""))
+    return stripped
+
+
+def materialized_steps(graph: SequentialGraph):
+    """``(pre_views, steps)``: the executor/segmenter step structure.
+
+    ``pre_views`` are view layers (ReLU/Flatten) acting directly on the
+    input; ``steps`` holds one ``[layer, views, in_shape, out_shape]`` entry
+    per materialized layer, where ``views`` are the view layers applied to
+    its output before the next materialized layer.  Steps line up 1:1 with
+    ``MemoryPlan.buffers[1:]``.
+    """
+    pre_views, steps = [], []
+    cur_shape: Tuple[int, ...] = ()
+    for layer, shape in zip(graph.layers, graph.shapes()):
+        if isinstance(layer, Input):
+            cur_shape = shape
+            continue
+        if layer.kind in ("ReLU", "Flatten"):
+            if steps:
+                steps[-1][1].append(layer)
+                steps[-1][3] = shape
+            else:
+                pre_views.append(layer)
+            cur_shape = shape
+            continue
+        steps.append([layer, [], cur_shape, shape])
+        cur_shape = shape
+    return pre_views, steps
+
+
+def scan_segments(graph: SequentialGraph) -> Tuple[StackedRun, ...]:
+    """Partition the graph's materialized layers into maximal stackable runs.
+
+    Each *step* is one materialized layer plus the view layers (ReLU/Flatten)
+    that follow it before the next materialized layer; two steps belong to the
+    same run iff their layer specs (ignoring names), trailing view kinds, and
+    in/out shapes all coincide.  View layers change no buffer, so a run's
+    scan carry keeps a constant shape by construction.
+    """
+    _, steps = materialized_steps(graph)
+
+    runs: List[StackedRun] = []
+    i = 0
+    while i < len(steps):
+        layer, views, in_s, out_s = steps[i]
+        j = i + 1
+        while j < len(steps):
+            nlayer, nviews, nin, nout = steps[j]
+            if (
+                _spec_key(nlayer) != _spec_key(layer)
+                or [v.kind for v in nviews] != [v.kind for v in views]
+                or nin != in_s
+                or nout != out_s
+            ):
+                break
+            j += 1
+        runs.append(
+            StackedRun(
+                start=i,
+                length=j - i,
+                kind=layer.kind,
+                layer_names=tuple(
+                    (steps[t][0].name or steps[t][0].kind) for t in range(i, j)
+                ),
+                in_shape=tuple(in_s),
+                out_shape=tuple(out_s),
+            )
+        )
+        i = j
+    return tuple(runs)
 
 
 def verify_plan(plan: MemoryPlan) -> None:

@@ -1,16 +1,22 @@
 """Pallas TPU kernel: fused conv2d + activation + max-pool (Algorithm 1).
 
-Grid: one program per pooled output row.  The program stages the
-``(pool_k−1)·conv_stride + k`` input rows it needs in VMEM, computes the
-``pool_k`` conv rows with MXU dot products, applies the activation, and
-reduces the pooling window *before* anything is written back — the conv
-output exists only in VMEM/VREGs, never in HBM (the paper's in-place
-running max, moved one level up the memory hierarchy).
+Grid: ``(N, PH // row_block)`` — one program per image per tile of pooled
+output rows.  The batch dimension lives *in the grid* (not an outer
+``jax.vmap``), so one ``pallas_call`` covers the whole batch and the compiler
+pipelines image tiles back-to-back.
 
-The input/weights use whole-array BlockSpecs (MCU-scale nets fit VMEM
-comfortably: 32×32×32 int8/float is KBs); the output is blocked by pooled
-row.  For large images the same kernel structure tiles H via the halo
-pattern (documented in ops.py) — out of scope for the paper's networks.
+The H dimension is halo-tiled: each program's input BlockSpec is an
+*overlapping* row window (``pl.Unblocked`` indexing) containing exactly the
+``(row_block−1)·pool_stride·conv_stride + (pool_k−1)·conv_stride + k`` input
+rows its pooled rows consume.  Consecutive windows overlap by the conv/pool
+halo, and the whole image is never resident in VMEM — only the window.
+
+Inside a program every index is a trace-time constant (the BlockSpec already
+delivered the right rows), so all slicing is static: k² strided slices feed
+k² MXU dot products accumulating the conv rows, then bias + activation + the
+pooling max-reduction run in VMEM/VREGs before the single writeback — the
+conv output never exists in HBM (the paper's in-place running max, moved one
+level up the memory hierarchy).
 """
 from __future__ import annotations
 
@@ -20,52 +26,94 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Backends with a compiled Pallas lowering (Mosaic / Triton).  Anything else
+# (CPU et al.) can only run Pallas through the interpreter.
+_COMPILED_PALLAS_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def has_compiled_pallas_backend() -> bool:
+    """True when ``pallas_call(interpret=False)`` can actually compile here."""
+    try:
+        return jax.default_backend() in _COMPILED_PALLAS_BACKENDS
+    except RuntimeError:  # no backend initialised at all
+        return False
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` → interpret only when no compiled Pallas backend exists."""
+    if interpret is None:
+        return not has_compiled_pallas_backend()
+    return interpret
+
+
+def choose_row_block(
+    ph: int,
+    block_bytes,
+    *,
+    vmem_budget_bytes: int = 4 * 1024 * 1024,
+) -> int:
+    """Largest divisor of ``ph`` whose tile fits the VMEM budget.
+
+    ``block_bytes(r)`` must return the program-resident bytes for a tile of
+    ``r`` pooled rows — input halo window **plus** the f32 conv accumulator,
+    output block, and weights, not just the input.  Always returns at least 1
+    (a single pooled row per program is the floor — the smallest tile the
+    fused reduction can work on).
+    """
+    best = 1
+    for r in range(1, ph + 1):
+        if ph % r:
+            continue
+        if block_bytes(r) <= vmem_budget_bytes:
+            best = r
+    return best
+
 
 def _kernel(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
-            k, activation, out_w):
-    py = pl.program_id(0)
-    row0 = py * pool_stride * conv_stride
-    rows_needed = (pool_k - 1) * conv_stride + k
-    x = x_ref[...]  # (H, W, Cin) in VMEM
+            k, activation, out_w, row_block):
+    cs, pk, ps, R = conv_stride, pool_k, pool_stride, row_block
+    x = x_ref[0]  # (window_rows, W, Cin) — this program's halo window
     w = w_ref[...]  # (k, k, Cin, Cout)
+    cin = x.shape[-1]
     cout = w.shape[-1]
+    ow = out_w
+    # Conv rows this tile's pooled rows consume, relative to the window start.
+    cr = (R - 1) * ps + pk
 
-    # conv for the pool_k rows of this pooled row, one MXU dot per (dz, dt)
-    acc = jnp.zeros((pool_k, out_w, cout), jnp.float32)
-    for pr in range(pool_k):  # static loops: unrolled into the kernel body
-        r = row0 + pr * conv_stride
-        for dz in range(k):
-            row = jax.lax.dynamic_slice_in_dim(x, r + dz, 1, axis=0)[0]  # (W, Cin)
-            for dt in range(k):
-                cols = jax.lax.dynamic_slice_in_dim(row, dt, (out_w - 1) * conv_stride + 1, axis=0)
-                cols = cols[:: conv_stride]  # (out_w, Cin)
-                acc = acc.at[pr].add(
-                    jax.lax.dot_general(
-                        cols.astype(jnp.float32),
-                        w[dz, dt].astype(jnp.float32),
-                        (((1,), (0,)), ((), ())),
-                        preferred_element_type=jnp.float32,
-                    )
-                )
+    # conv: k² static strided slices, one MXU dot each, accumulated in f32.
+    acc = jnp.zeros((cr * ow, cout), jnp.float32)
+    for dz in range(k):
+        rows = x[dz : dz + (cr - 1) * cs + 1 : cs]  # (cr, W, Cin)
+        for dt in range(k):
+            cols = rows[:, dt : dt + (ow - 1) * cs + 1 : cs]  # (cr, ow, Cin)
+            acc = acc + jax.lax.dot_general(
+                cols.reshape(cr * ow, cin).astype(jnp.float32),
+                w[dz, dt].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    acc = acc.reshape(cr, ow, cout)
     if b_ref is not None:
         acc = acc + b_ref[...].astype(jnp.float32)
     if activation == "relu":
         acc = jnp.maximum(acc, 0.0)
-    # pooling reduction in VMEM: (pool_k, PW, pool_stride→, Cout) max
-    pw = out_w // pool_stride if pool_stride else out_w
-    pw = (out_w - pool_k) // pool_stride + 1
-    # gather the pool_k columns per pooled x via strided slices (static)
+
+    # pooling reduction in VMEM: running max over the pk×pk window, rows then
+    # columns, all offsets static.
+    pw = (ow - pk) // ps + 1
+    pooled_rows = None
+    for j in range(pk):
+        rows = acc[j : j + (R - 1) * ps + 1 : ps]  # (R, ow, Cout)
+        pooled_rows = rows if pooled_rows is None else jnp.maximum(pooled_rows, rows)
     pooled = None
-    for pc in range(pool_k):
-        col = jax.lax.dynamic_slice_in_dim(acc, pc, (pw - 1) * pool_stride + 1, axis=1)
-        col = col[:, :: pool_stride]  # (pool_k, PW, Cout)
-        m = jnp.max(col, axis=0)  # rows of the window
-        pooled = m if pooled is None else jnp.maximum(pooled, m)
+    for j in range(pk):
+        cols = pooled_rows[:, j : j + (pw - 1) * ps + 1 : ps]  # (R, pw, Cout)
+        pooled = cols if pooled is None else jnp.maximum(pooled, cols)
     o_ref[0] = pooled.astype(o_ref.dtype)
 
 
 def conv_pool(
-    x: jax.Array,  # (H, W, Cin) pre-padded
+    x: jax.Array,  # (H, W, Cin) or (N, H, W, Cin), pre-padded
     w: jax.Array,  # (k, k, Cin, Cout)
     b: jax.Array | None,
     *,
@@ -73,9 +121,14 @@ def conv_pool(
     pool_k: int = 2,
     pool_stride: int = 2,
     activation: str = "relu",
-    interpret: bool = True,
+    interpret: bool | None = None,
+    row_block: int | None = None,
 ) -> jax.Array:
-    H, W, cin = x.shape
+    """Fused conv+act+pool.  Returns (PH, PW, Cout) or (N, PH, PW, Cout)."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    n, H, W, cin = x.shape
     k = w.shape[0]
     cout = w.shape[-1]
     oh = (H - k) // conv_stride + 1
@@ -83,20 +136,45 @@ def conv_pool(
     ph = (oh - pool_k) // pool_stride + 1
     pw = (ow - pool_k) // pool_stride + 1
 
+    # Input rows per program: a stride of row_block·ps·cs plus the halo.
+    stride_rows = pool_stride * conv_stride
+    halo_rows = (pool_k - 1) * conv_stride + k
+    if row_block is None:
+        itemsize = x.dtype.itemsize
+        w_bytes = k * k * cin * cout * w.dtype.itemsize
+
+        def _tile_bytes(r: int) -> int:
+            window = (r - 1) * stride_rows + halo_rows  # input rows resident
+            cr = (r - 1) * pool_stride + pool_k  # conv rows accumulated
+            return (
+                window * W * cin * itemsize  # halo window
+                + cr * ow * cout * 4  # f32 accumulator
+                + r * pw * cout * itemsize  # output block
+                + w_bytes
+            )
+
+        row_block = choose_row_block(ph, _tile_bytes)
+    if ph % row_block:
+        raise ValueError(f"row_block={row_block} must divide PH={ph}")
+    window_rows = (row_block - 1) * stride_rows + halo_rows
+
     kern = functools.partial(
         _kernel, conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride,
-        k=k, activation=activation, out_w=ow,
+        k=k, activation=activation, out_w=ow, row_block=row_block,
     )
     args = [x, w]
     in_specs = [
-        pl.BlockSpec(x.shape, lambda py: (0, 0, 0)),  # whole input resident
-        pl.BlockSpec(w.shape, lambda py: (0, 0, 0, 0)),
+        # Overlapping halo windows: element-offset (Unblocked) indexing.
+        pl.BlockSpec(
+            (1, window_rows, W, cin),
+            lambda i, t: (i, t * row_block * stride_rows, 0, 0),
+            indexing_mode=pl.Unblocked(),
+        ),
+        pl.BlockSpec(w.shape, lambda i, t: (0, 0, 0, 0)),
     ]
     if b is not None:
         args.append(b)
-        in_specs.append(pl.BlockSpec(b.shape, lambda py: (0,)))
-    else:
-        kern = functools.partial(kern)
+        in_specs.append(pl.BlockSpec(b.shape, lambda i, t: (0,)))
 
     def wrapper(*refs):
         if b is not None:
@@ -106,11 +184,12 @@ def conv_pool(
             b_ref = None
         kern(x_ref, w_ref, b_ref, o_ref)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         wrapper,
-        grid=(ph,),
+        grid=(n, ph // row_block),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, pw, cout), lambda py: (py, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((ph, pw, cout), x.dtype),
-        interpret=interpret,
+        out_specs=pl.BlockSpec((1, row_block, pw, cout), lambda i, t: (i, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ph, pw, cout), x.dtype),
+        interpret=resolve_interpret(interpret),
     )(*args)
+    return out[0] if squeeze else out

@@ -1,13 +1,25 @@
 """jit'd wrapper for the fused conv+act+pool kernel.
 
 Handles layout (the paper's nets are CHW; the kernel is HWC = TPU lanes-last),
-padding, batching (vmap over images), and the ref fallback.
+padding, batching (the batch dimension rides in the Pallas grid — no outer
+``jax.vmap``), and implementation selection:
 
-Halo note: the kernel keeps the whole (padded) input resident in VMEM, which
-is exact for MCU-scale nets (≤ tens of KB).  For large images the grid adds
-an H-tile dimension and the input BlockSpec maps overlapping row windows
-(block index → row-block with a (pool_k−1)·stride+k−1 halo); the reduction
-structure — act+pool before writeback — is unchanged.
+* ``impl="auto"`` (default) — the fastest *compiled* path for the current
+  backend: the Pallas kernel compiled via Mosaic/Triton on TPU/GPU, an XLA
+  fused conv+pool on backends with no compiled Pallas lowering (CPU).  The
+  default never runs the Pallas interpreter.
+* ``impl="pallas"`` — force the Pallas kernel; ``interpret=None`` resolves to
+  interpret mode only when no compiled Pallas backend is available (kernel
+  validation on CPU).
+* ``impl="ref"`` — the pure-jnp oracle (``ref.conv_pool_ref``), vmapped per
+  image, for tests.
+
+Halo note: the kernel tiles H with overlapping (Unblocked) row-window
+BlockSpecs — each grid program sees only the ``(row_block−1)·pool_stride·
+conv_stride + (pool_k−1)·conv_stride + k`` rows its pooled rows consume, so
+large images never require the whole input resident in VMEM.  ``row_block``
+(pooled rows per program) is auto-sized to a VMEM budget; pass it explicitly
+to override.
 """
 from __future__ import annotations
 
@@ -20,10 +32,24 @@ from repro.kernels.conv_pool import kernel as _k
 from repro.kernels.conv_pool import ref as _ref
 
 
+def _xla_conv_pool(x, w, b, *, conv_stride, padding, pool_k, pool_stride,
+                   activation):
+    """Batched XLA realization, straight on the NCHW input (no layout
+    round-trip): the compiled fallback for backends without a compiled Pallas
+    lowering.  Reuses the functional-oracle numerics from ``repro.core.nn``
+    — within one jit XLA fuses conv+bias+act+pool anyway."""
+    from repro.core import nn as core_nn
+
+    out = core_nn.conv2d(x, w, b, stride=conv_stride, padding=padding)
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    return core_nn.maxpool2d(out, pool_k, pool_stride)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("conv_stride", "padding", "pool_k", "pool_stride",
-                     "activation", "impl", "interpret"),
+                     "activation", "impl", "interpret", "row_block"),
 )
 def fused_conv_pool(
     x: jax.Array,  # (Cin, H, W) or (N, Cin, H, W) — paper/PyTorch layout
@@ -35,29 +61,41 @@ def fused_conv_pool(
     pool_k: int = 2,
     pool_stride: int = 2,
     activation: str = "relu",
-    impl: str = "pallas",  # "pallas" | "ref"
-    interpret: bool = True,
+    impl: str = "auto",  # "auto" | "pallas" | "ref"
+    interpret: bool | None = None,
+    row_block: int | None = None,
 ) -> jax.Array:
     """Returns (Cout, PH, PW) or (N, Cout, PH, PW)."""
     squeeze = x.ndim == 3
     if squeeze:
         x = x[None]
-    xh = jnp.transpose(x, (0, 2, 3, 1))  # NHWC
+
+    if impl == "auto":
+        impl = "pallas" if _k.has_compiled_pallas_backend() else "xla"
+    if impl == "xla":
+        out = _xla_conv_pool(
+            x, w, b, conv_stride=conv_stride, padding=padding, pool_k=pool_k,
+            pool_stride=pool_stride, activation=activation,
+        )
+        return out[0] if squeeze else out
+
+    xh = jnp.transpose(x, (0, 2, 3, 1))  # NHWC (TPU lanes-last)
     if padding:
         xh = jnp.pad(xh, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
     wh = jnp.transpose(w, (2, 3, 1, 0))  # HWIO
-
     if impl == "pallas":
-        fn = functools.partial(
-            _k.conv_pool, conv_stride=conv_stride, pool_k=pool_k,
+        out = _k.conv_pool(
+            xh, wh, b, conv_stride=conv_stride, pool_k=pool_k,
             pool_stride=pool_stride, activation=activation, interpret=interpret,
+            row_block=row_block,
         )
-        out = jax.vmap(lambda img: fn(img, wh, b))(xh)
-    else:
+    elif impl == "ref":
         fn = functools.partial(
             _ref.conv_pool_ref, conv_stride=conv_stride, pool_k=pool_k,
             pool_stride=pool_stride, activation=activation,
         )
         out = jax.vmap(lambda img: fn(img, wh, b))(xh)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
     out = jnp.transpose(out, (0, 3, 1, 2))  # NCHW
     return out[0] if squeeze else out

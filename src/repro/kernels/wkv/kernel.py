@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tpu_compiler_params as _tpu_compiler_params
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref, s_scr, *,
             chunk, nc):
@@ -109,7 +111,7 @@ def wkv_fwd(
             jax.ShapeDtypeStruct((B * H, hk, hv), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((hk, hv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

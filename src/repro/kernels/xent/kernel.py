@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tpu_compiler_params as _tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -94,7 +96,7 @@ def fused_xent_fwd(
             pltpu.VMEM((bn,), jnp.float32),
             pltpu.VMEM((bn,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,216 @@
+"""Coverage for the compiled hot paths (ISSUE 1).
+
+* Halo-tiled kernel: inputs larger than one VMEM tile (multiple H tiles per
+  image, every legal row_block) vs ``ref.conv_pool_ref``.
+* Batch-gridded kernel: one pallas_call over the batch vs the vmap'd oracle.
+* Scan executor: byte-exact vs the (jit-compiled) Python-loop arena walker
+  for ping-pong and optimal-arena plans, single image and batched.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusion, nn, pingpong, planner
+from repro.core.graph import (
+    Input,
+    Linear,
+    MaxPool2d,
+    ReLU,
+    SequentialGraph,
+    cifar_testnet,
+    lenet5,
+)
+from repro.kernels.conv_pool import kernel as cp_kernel
+from repro.kernels.conv_pool import ops as cp_ops
+from repro.kernels.conv_pool import ref as cp_ref
+
+
+# ---------------------------------------------------------------------------
+# kernel: halo tiling + batch grid
+# ---------------------------------------------------------------------------
+
+
+def test_halo_tiled_kernel_large_image():
+    """An image too big for one whole-input VMEM tile: the auto row_block
+    must split H into several overlapping windows, and every legal explicit
+    row_block must agree with the oracle."""
+    rng = np.random.default_rng(0)
+    H = W = 128  # 128·128·4 input: far beyond an MCU-scale whole-array block
+    xh = jnp.asarray(rng.standard_normal((H, W, 4)), jnp.float32)
+    wh = jnp.asarray(rng.standard_normal((3, 3, 4, 8)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8,)) * 0.1, jnp.float32)
+    ref = cp_ref.conv_pool_ref(xh, wh, b)
+    ph = ref.shape[0]
+
+    # The auto choice must actually tile (several programs along H) once the
+    # VMEM budget is smaller than the image.
+    row_bytes = W * 4 * 4
+    auto = cp_kernel.choose_row_block(
+        ph, lambda r: ((r - 1) * 2 + 4) * row_bytes,
+        vmem_budget_bytes=32 * row_bytes,
+    )
+    assert 1 < auto < ph and ph % auto == 0
+
+    divisors = [r for r in range(1, ph + 1) if ph % r == 0]
+    for rb in sorted({1, divisors[1], auto, divisors[-2]}):
+        out = cp_kernel.conv_pool(xh, wh, b, row_block=rb)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_halo_window_geometry_stays_in_bounds():
+    """Every halo window [start, start+window_rows) must lie inside the
+    padded input — an out-of-bounds Unblocked read yields garbage."""
+    for (H, k, cs, pk, ps) in [(32, 5, 1, 2, 2), (20, 3, 2, 2, 2), (16, 3, 1, 3, 2)]:
+        oh = (H - k) // cs + 1
+        ph = (oh - pk) // ps + 1
+        for rb in [r for r in range(1, ph + 1) if ph % r == 0]:
+            window = (rb - 1) * ps * cs + (pk - 1) * cs + k
+            last_start = (ph // rb - 1) * rb * ps * cs
+            assert last_start + window <= H, (H, k, cs, pk, ps, rb)
+
+
+@pytest.mark.parametrize("n", [1, 3, 8])
+def test_batch_gridded_kernel_matches_vmap_oracle(n):
+    """One pallas_call with the batch in the grid vs per-image vmap'd ref."""
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal((n, 3, 32, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 3, 5, 5)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((16,)) * 0.1, jnp.float32)
+    out_p = cp_ops.fused_conv_pool(x, w, b, padding=2, impl="pallas")
+    out_r = cp_ops.fused_conv_pool(x, w, b, padding=2, impl="ref")
+    np.testing.assert_allclose(
+        np.asarray(out_p), np.asarray(out_r), rtol=1e-5, atol=1e-5
+    )
+    assert out_p.shape == (n, 16, 16, 16)
+
+
+def test_default_impl_is_compiled():
+    """impl='auto' (the default) must never pick the Pallas interpreter: on
+    compiled-Pallas backends it compiles the kernel, elsewhere it lowers to
+    fused XLA — and it must agree with the oracle either way."""
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.standard_normal((2, 1, 16, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 1, 3, 3)), jnp.float32)
+    out_a = cp_ops.fused_conv_pool(x, w, None)
+    out_r = cp_ops.fused_conv_pool(x, w, None, impl="ref")
+    np.testing.assert_allclose(
+        np.asarray(out_a), np.asarray(out_r), rtol=1e-5, atol=1e-5
+    )
+    # interpret=None resolves to interpret only without a compiled backend
+    assert cp_kernel.resolve_interpret(None) == (
+        not cp_kernel.has_compiled_pallas_backend()
+    )
+    assert cp_kernel.resolve_interpret(True) is True
+    assert cp_kernel.resolve_interpret(False) is False
+
+
+# ---------------------------------------------------------------------------
+# executor: scan vs Python-loop walker
+# ---------------------------------------------------------------------------
+
+
+def _setup(mk, seed):
+    g = mk()
+    params = nn.init_params(g, jax.random.PRNGKey(seed))
+    fused = fusion.fuse(g)
+    return g, fused, fusion.rename_params(fused, params)
+
+
+@pytest.mark.parametrize("plan_fn", [planner.plan_pingpong, planner.plan_optimal_arena])
+@pytest.mark.parametrize("mk", [lenet5, cifar_testnet])
+def test_scan_executor_byte_exact_vs_walker(plan_fn, mk):
+    g, fused, p = _setup(mk, 0)
+    plan = plan_fn(g)
+    planner.verify_plan(plan)
+    x = jax.random.normal(jax.random.PRNGKey(1), g.shapes()[0])
+
+    y_scan, stats = pingpong.run_with_arena_scan(fused, plan, p, x)
+    # Byte-exact vs the walker compiled as one program (same numerics, same
+    # XLA simplifications — only the arena bookkeeping differs)...
+    walk = jax.jit(lambda p_, x_: pingpong.run_with_arena(fused, plan, p_, x_)[0])
+    np.testing.assert_array_equal(np.asarray(y_scan), np.asarray(walk(p, x)))
+    # ...and within float tolerance of the eager per-dispatch walker.
+    y_loop, _ = pingpong.run_with_arena(fused, plan, p, x)
+    np.testing.assert_allclose(
+        np.asarray(y_scan), np.asarray(y_loop), rtol=1e-6, atol=1e-7
+    )
+    assert stats["arena_elems"] == plan.arena_elems
+    assert stats["segments"] >= 1
+
+
+def test_batched_scan_executor_matches_per_image_walker():
+    g, fused, p = _setup(lenet5, 2)
+    plan = planner.plan_pingpong(g)
+    xs = jax.random.normal(jax.random.PRNGKey(3), (8, 1, 32, 32))
+    ys, stats = pingpong.run_batch_with_arena(fused, plan, p, xs)
+    assert ys.shape[0] == 8 and stats["batch"] == 8
+    for i in range(8):
+        y_loop, _ = pingpong.run_with_arena(fused, plan, p, xs[i])
+        np.testing.assert_allclose(
+            np.asarray(ys[i]), np.asarray(y_loop), rtol=1e-6, atol=1e-7
+        )
+    with pytest.raises(ValueError):
+        pingpong.run_batch_with_arena(fused, plan, p, xs[0])  # unbatched input
+
+
+def test_scan_segments_stack_homogeneous_runs():
+    """Six identical Linear+ReLU blocks collapse into one stacked lax.scan
+    segment; the scan executor stays byte-exact vs the jitted walker."""
+    layers = [Input(shape=(16,), name="input")]
+    for i in range(6):
+        layers += [Linear(16, 16, name=f"fc{i}"), ReLU(name=f"r{i}")]
+    layers += [Linear(16, 4, name="head")]
+    g = SequentialGraph(layers)
+    params = nn.init_params(g, jax.random.PRNGKey(5))
+    fused = fusion.fuse(g)
+    p = fusion.rename_params(fused, params)
+
+    segs = planner.scan_segments(fused)
+    assert [(s.kind, s.length, s.stacked) for s in segs] == [
+        ("FusedLinear", 6, True),
+        ("Linear", 1, False),
+    ]
+    assert segs[0].in_shape == segs[0].out_shape == (16,)
+
+    plan = planner.plan_pingpong(g)
+    x = jax.random.normal(jax.random.PRNGKey(6), (16,))
+    y_scan, stats = pingpong.run_with_arena_scan(fused, plan, p, x)
+    assert stats["stacked_layers"] == 6 and stats["segments"] == 2
+    walk = jax.jit(lambda p_, x_: pingpong.run_with_arena(fused, plan, p_, x_)[0])
+    np.testing.assert_allclose(
+        np.asarray(y_scan), np.asarray(walk(p, x)), rtol=1e-6, atol=1e-7
+    )
+    # heterogeneous shapes never stack
+    segs_lenet = planner.scan_segments(fusion.fuse(lenet5()))
+    assert all(not s.stacked for s in segs_lenet)
+
+
+def test_scan_executor_parameterless_stacked_run():
+    """A homogeneous run of parameterless layers scans over a leafless
+    pytree — lax.scan needs the explicit length."""
+    g = SequentialGraph(
+        [
+            Input(shape=(4, 8, 8), name="input"),
+            MaxPool2d(kernel_size=1, stride=1, name="p0"),
+            MaxPool2d(kernel_size=1, stride=1, name="p1"),
+            MaxPool2d(kernel_size=1, stride=1, name="p2"),
+        ]
+    )
+    segs = planner.scan_segments(g)
+    assert [(s.kind, s.length) for s in segs] == [("MaxPool2d", 3)]
+    plan = planner.plan_pingpong(g, fused=False)
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 8, 8))
+    y_scan, _ = pingpong.run_with_arena_scan(g, plan, {}, x)
+    y_walk, _ = pingpong.run_with_arena(g, plan, {}, x)
+    np.testing.assert_array_equal(np.asarray(y_scan), np.asarray(y_walk))
+
+
+def test_scan_executor_rejects_mismatched_plan():
+    g, fused, p = _setup(lenet5, 7)
+    plan = planner.plan_pingpong(g)
+    with pytest.raises(ValueError):
+        # unfused graph vs fused plan: buffer counts disagree
+        pingpong.make_scan_executor(g, plan)

@@ -9,8 +9,10 @@ Planner invariants on random sequential nets:
 Quantization: int8 roundtrip error bounded by scale/2 per tensor.
 Streaming CE: chunked forms equal the naive logsumexp for any shape/chunk.
 """
-import hypothesis as hp
-import hypothesis.strategies as st
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -18,11 +18,20 @@ def mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def specs_for(arch, mesh_shape=(16, 16)):
-    """Compute specs against an *abstract* mesh of production shape."""
+def _abstract_mesh(shape, names):
+    """AbstractMesh across jax versions: ((name, size), ...) in 0.4.x,
+    (sizes, names) later."""
     from jax.sharding import AbstractMesh
 
-    mesh = AbstractMesh(mesh_shape, ("data", "model"))
+    try:
+        return AbstractMesh(tuple(zip(names, shape)))
+    except TypeError:
+        return AbstractMesh(shape, names)
+
+
+def specs_for(arch, mesh_shape=(16, 16)):
+    """Compute specs against an *abstract* mesh of production shape."""
+    mesh = _abstract_mesh(mesh_shape, ("data", "model"))
     cfg = cfgbase.get_config(arch)
     model = Model(cfg)
     aparams = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
@@ -95,9 +104,7 @@ def test_cache_specs_kv_heads_vs_seq():
 
 def test_batch_specs_seq_parallel_for_batch1():
     cfg = cfgbase.get_config("rwkv6-7b")
-    from jax.sharding import AbstractMesh
-
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = _abstract_mesh((16, 16), ("data", "model"))
     pol = ShardingPolicy(mesh, cfg)
     bs = pol.batch_specs(cfgbase.SHAPES["long_500k"])  # global_batch=1
     assert bs["tokens"] == P(None, ("data",))  # sequence parallelism

@@ -109,5 +109,6 @@ def test_lm_scale_memory_discipline():
         m = Model(cfg, xent_impl=impl, xent_chunk=128, xent_seq_chunk=8)
         loss, _ = jax.jit(m.train_loss)(params, batch)
         losses[impl] = float(loss)
-    np.testing.assert_allclose(losses["naive"], losses["chunked"], rtol=1e-5)
-    np.testing.assert_allclose(losses["naive"], losses["seq_chunked"], rtol=1e-5)
+    # f32 logsumexp reassociation: ~1e-5 rel drift between the three forms
+    np.testing.assert_allclose(losses["naive"], losses["chunked"], rtol=3e-5)
+    np.testing.assert_allclose(losses["naive"], losses["seq_chunked"], rtol=3e-5)
