@@ -1,22 +1,30 @@
-"""Hot-path microbench: fused conv_pool kernel + arena executor.
+"""Hot-path microbench: fused conv_pool kernel + arena executor, f32 + int8.
 
-Tracks the two paths ISSUE 1 compiled, so the perf trajectory is measurable
-from this PR on.  For each batch size it times
+Tracks the compiled paths from ISSUE 1 (float) and ISSUE 2 (int8), so the
+perf trajectory is measurable from this PR on.  For each batch size it times
 
-* ``kernel.interpret``  — the Pallas kernel through the interpreter (the old
-  default on backends without a compiled Pallas lowering),
-* ``kernel.compiled``   — the default ``impl="auto"`` path (compiled Pallas on
-  TPU/GPU, fused XLA on CPU),
-* ``executor.pyloop``   — the eager Python-loop arena walker, per image,
-* ``executor.scan``     — the jitted scan executor, whole batch in one call,
+* ``kernel.interpret``     — the Pallas kernel through the interpreter (the
+  old default on backends without a compiled Pallas lowering),
+* ``kernel.compiled``      — the default ``impl="auto"`` path (compiled
+  Pallas on TPU/GPU, fused XLA on CPU),
+* ``kernel_q8.eager``      — the int8 conv+act+requant+pool chain dispatched
+  eagerly op-by-op (the ``simulate_int8_forward`` dispatch style),
+* ``kernel_q8.compiled``   — the fused int8 q8 kernel, ``impl="auto"``,
+* ``executor.pyloop``      — the eager Python-loop arena walker, per image,
+* ``executor.scan``        — the jitted scan executor, whole batch per call,
+* ``executor_q8.sim``      — the eager int8 simulator, per image,
+* ``executor_q8.scan``     — the jitted int8 scan executor, whole batch,
 
-on the CIFAR-testnet conv1 geometry (kernel) and fused LeNet-5 with the
-ping-pong plan (executor), and writes ``BENCH_hotpaths.json``:
+on the CIFAR-testnet conv1 geometry (kernels) and fused LeNet-5 with the
+ping-pong plan (executors; the int8 plan is the same plan at 1 B/elem), and
+writes ``BENCH_hotpaths.json`` including the float-vs-int8 speed and
+arena-bytes ratios:
 
     PYTHONPATH=src python benchmarks/bench_hotpaths.py [--smoke] [--out PATH]
 
-``--smoke`` runs one timing rep of the cheap variants only (CI: asserts the
-JSON is produced, not the numbers).
+``--smoke`` runs one timing rep of the cheap variants only — but always both
+int8 compiled paths, so CI catches the quantized runtime silently regressing
+to interpret/eager mode.
 """
 from __future__ import annotations
 
@@ -70,9 +78,11 @@ def bench_kernel(batches, *, reps: int, smoke: bool) -> list:
             lambda img: _kern.conv_pool(img, wh, b, interpret=True, row_block=1)
         )(xh)
 
-    # All compiled rows are timed before the first interpreter call: the
-    # interpreter's transient allocations measurably degrade compiled call
-    # times for the rest of the process, which would understate the speedup.
+    # The compiled rows are timed now; the interpreter baseline is returned
+    # as a thunk that main() runs only after *every* compiled row in the
+    # whole bench: the interpreter's transient allocations measurably degrade
+    # compiled call times for the rest of the process, which would understate
+    # the speedups (float and int8 alike).
     rows = []
     xs = {n: jnp.asarray(rng.standard_normal((n, 3, 32, 32)), jnp.float32)
           for n in batches}
@@ -83,14 +93,64 @@ def bench_kernel(batches, *, reps: int, smoke: bool) -> list:
         )
         rows.append({"path": "kernel", "variant": "compiled", "batch": n,
                      "us_per_call": us})
+
+    def interpret_baseline() -> list:
+        out = []
+        for n in batches:
+            # Interpreter baseline: O(10ms+)/call — skip in --smoke and at
+            # large batch where it would dominate the run.
+            if not smoke and n <= 8:
+                us = _time_us(lambda n=n: seed_style_interpret(xs[n]),
+                              reps=max(3, reps // 5))
+                out.append({"path": "kernel", "variant": "interpret",
+                            "batch": n, "us_per_call": us})
+        return out
+
+    return rows, interpret_baseline
+
+
+def bench_kernel_q8(batches, *, reps: int, smoke: bool) -> list:
+    from repro.core.quantize import requantize
+    from repro.quant import kernel_q8
+
+    rng = np.random.default_rng(2)
+    # CIFAR-testnet conv1 in int8: 3->32 channels, 5x5, pad 2, pool 2/2.
+    w_q = jnp.asarray(rng.integers(-127, 128, (32, 3, 5, 5)), jnp.int8)
+    b_q = jnp.asarray(rng.integers(-1000, 1000, (32,)), jnp.int32)
+    m = 3.1e-4  # representative requant multiplier
+
+    def eager_q8(xs):
+        # The simulator's dispatch style: one eager XLA call per op.
+        acc = jax.lax.conv_general_dilated(
+            xs.astype(jnp.int32), w_q.astype(jnp.int32),
+            window_strides=(1, 1), padding=[(2, 2)] * 2,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        acc = acc + b_q[None, :, None, None]
+        acc = jnp.maximum(acc, 0)
+        y = requantize(acc, m)
+        return jax.lax.reduce_window(
+            y, jnp.int8(-128), jax.lax.max,
+            window_dimensions=(1, 1, 2, 2), window_strides=(1, 1, 2, 2),
+            padding="VALID",
+        )
+
+    rows = []
+    xs = {n: jnp.asarray(rng.integers(-128, 128, (n, 3, 32, 32)), jnp.int8)
+          for n in batches}
     for n in batches:
-        # Interpreter baseline: O(10ms+)/call — skip in --smoke and at large
-        # batch where it would dominate the run.
-        if not smoke and n <= 8:
-            us = _time_us(lambda n=n: seed_style_interpret(xs[n]),
-                          reps=max(3, reps // 5))
-            rows.append({"path": "kernel", "variant": "interpret", "batch": n,
-                         "us_per_call": us})
+        us = _time_us(
+            lambda n=n: kernel_q8.fused_conv_pool_q8(
+                xs[n], w_q, b_q, multiplier=m, padding=2, impl="auto"),
+            reps=reps,
+        )
+        rows.append({"path": "kernel_q8", "variant": "compiled", "batch": n,
+                     "us_per_call": us})
+    for n in batches:
+        us = _time_us(lambda n=n: eager_q8(xs[n]),
+                      reps=1 if smoke else max(3, reps // 5))
+        rows.append({"path": "kernel_q8", "variant": "eager", "batch": n,
+                     "us_per_call": us})
     return rows
 
 
@@ -130,10 +190,63 @@ def bench_executor(batches, *, reps: int, smoke: bool) -> list:
     return rows
 
 
+def bench_executor_int8(batches, *, reps: int, smoke: bool):
+    """Int8 LeNet-5 through the same ping-pong plan: eager simulator vs the
+    compiled int8 scan executor, plus the float-vs-int8 arena byte table."""
+    from repro.core import fusion, nn, planner, quantize
+    from repro.core.graph import lenet5
+    from repro.quant import exec as qexec
+
+    g = lenet5()
+    params = nn.init_params(g, jax.random.PRNGKey(0))
+    fused = fusion.fuse(g)
+    fp = fusion.rename_params(fused, params)
+    rng = np.random.default_rng(3)
+    calib = jnp.asarray(rng.standard_normal((16, 1, 32, 32)), jnp.float32)
+    qm = quantize.quantize(fused, fp, calib)
+    plan_q8 = planner.plan_pingpong(g, io_dtype_bytes=1)
+    plan_f32 = planner.plan_pingpong(g, io_dtype_bytes=4)
+
+    rows = []
+    for n in batches:
+        xs_q = quantize.quantize_input(
+            qm, jnp.asarray(rng.standard_normal((n, 1, 32, 32)), jnp.float32)
+        )
+
+        def sim():
+            return [quantize.simulate_int8_forward(qm, xs_q[i]) for i in range(n)]
+
+        def scan():
+            return qexec.run_batch_int8_with_arena(qm, plan_q8, xs_q)[0]
+
+        rows.append(
+            {
+                "path": "executor_q8", "variant": "sim", "batch": n,
+                "us_per_call": _time_us(sim, reps=1 if smoke else max(3, reps // 5)),
+            }
+        )
+        rows.append(
+            {
+                "path": "executor_q8", "variant": "scan", "batch": n,
+                "us_per_call": _time_us(scan, reps=1 if smoke else reps),
+            }
+        )
+    arena = {
+        "float_arena_bytes": plan_f32.activation_bytes(),
+        "int8_arena_bytes": plan_q8.activation_bytes(),
+        "arena_ratio": round(
+            plan_q8.activation_bytes() / plan_f32.activation_bytes(), 4
+        ),
+    }
+    return rows, arena
+
+
 def speedups(rows) -> dict:
     """speedup of the compiled variant over its baseline, per path/batch."""
-    base = {"kernel": "interpret", "executor": "pyloop"}
-    fast = {"kernel": "compiled", "executor": "scan"}
+    base = {"kernel": "interpret", "executor": "pyloop",
+            "kernel_q8": "eager", "executor_q8": "sim"}
+    fast = {"kernel": "compiled", "executor": "scan",
+            "kernel_q8": "compiled", "executor_q8": "scan"}
     by = {(r["path"], r["variant"], r["batch"]): r["us_per_call"] for r in rows}
     out = {}
     for (path, variant, n), us in sorted(by.items()):
@@ -154,8 +267,24 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     batches = [1] if args.smoke else [1, 8, 32]
-    rows = bench_kernel(batches, reps=args.reps, smoke=args.smoke)
+    # Every compiled variant across all four sections is timed before the
+    # interpreter baseline runs (see bench_kernel).
+    rows, interpret_baseline = bench_kernel(batches, reps=args.reps, smoke=args.smoke)
+    rows += bench_kernel_q8(batches, reps=args.reps, smoke=args.smoke)
     rows += bench_executor(batches, reps=args.reps, smoke=args.smoke)
+    q8_rows, arena = bench_executor_int8(batches, reps=args.reps, smoke=args.smoke)
+    rows += q8_rows
+    rows += interpret_baseline()
+
+    # float-vs-int8 speed ratio per compiled path (f32 µs / int8 µs).
+    by = {(r["path"], r["variant"], r["batch"]): r["us_per_call"] for r in rows}
+    f32_vs_q8 = {}
+    for (fpath, qpath, variant) in (("kernel", "kernel_q8", "compiled"),
+                                    ("executor", "executor_q8", "scan")):
+        for n in batches:
+            f, q = by.get((fpath, variant, n)), by.get((qpath, variant, n))
+            if f and q:
+                f32_vs_q8[f"{fpath}.batch{n}"] = round(f / q, 2)
 
     result = {
         "backend": jax.default_backend(),
@@ -163,6 +292,7 @@ def main(argv=None) -> None:
         "smoke": args.smoke,
         "rows": rows,
         "speedup": speedups(rows),
+        "int8": {**arena, "f32_over_int8_us": f32_vs_q8},
     }
     Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
     for r in rows:

@@ -38,7 +38,7 @@ from repro.core.graph import (
     SequentialGraph,
 )
 from repro.core.planner import MemoryPlan
-from repro.core.quantize import QuantizedModel
+from repro.core.quantize import REQUANT_C, QuantizedModel
 
 
 def _ident(name: str) -> str:
@@ -350,18 +350,11 @@ def generate_c_int8(
             if q.b_q is not None:
                 e.decl(_fmt_array(q.b_q, "int32_t", f"B_{tag}"))
                 weights[name]["b"] = q.b_q
-            m = q.in_scale * q.w_scale / q.out_scale
-            e.decl(f"static const float M_{tag} = {m:.9g}f;")
+            e.decl(f"static const float M_{tag} = {q.multiplier:.9g}f;")
             requants[name] = "rq({acc}, M_{tag})"
 
     in_elems = plan.buffers[0].size_elems
-    e.decl("""
-static int8_t rq(int32_t acc, float m) {
-  float v = nearbyintf((float)acc * m);
-  if (v > 127.0f) return 127;
-  if (v < -128.0f) return -128;
-  return (int8_t)v;
-}""")
+    e.decl(REQUANT_C)
     e.emit(f"static int8_t arena[{plan.arena_elems}];")
     e.emit("")
     e.emit("void nn_forward(const int8_t* input, int8_t* output) {")

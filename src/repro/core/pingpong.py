@@ -20,6 +20,14 @@ Two executors share the plan-validation logic:
 
 Offsets and shapes are trace-time constants taken from the plan, so the
 compiled executor re-dispatches neither per layer nor per slice.
+
+Both executors are parametric in ``apply_layer_fn(layer, params, x)`` — the
+per-layer numerics.  The default is the float oracle semantics
+(:func:`repro.core.nn.apply_layer`); the int8 runtime (``repro.quant.exec``)
+passes its q7-style int8 step instead and inherits the arena bookkeeping,
+segment grouping and two-bank carry unchanged (DESIGN.md §6).  The arena
+dtype follows the input's dtype, so an int8 input yields a genuine int8
+arena.
 """
 from __future__ import annotations
 
@@ -47,7 +55,7 @@ def _prod(shape) -> int:
     return out
 
 
-def _check_plan(graph: SequentialGraph, plan: MemoryPlan):
+def check_plan(graph: SequentialGraph, plan: MemoryPlan):
     """Shared walker/scan validation: plan buffers line up 1:1 with the
     graph's materialized layers.  Returns the materialized rows."""
     rows = [l for l in graph.layers if l.kind not in ("ReLU", "Flatten")]
@@ -64,6 +72,8 @@ def run_with_arena(
     plan: MemoryPlan,
     params: Params,
     x: jax.Array,
+    *,
+    apply_layer_fn=apply_layer,
 ) -> Tuple[jax.Array, Dict[str, int]]:
     """Execute ``graph`` storing every materialized buffer in the plan arena.
 
@@ -71,9 +81,11 @@ def run_with_arena(
     execution actually used — by construction equal to the plan's arena size.
 
     The graph must be in the same (fused / unfused) form the plan was built
-    from, so that materialized layers line up 1:1 with plan buffers.
+    from, so that materialized layers line up 1:1 with plan buffers.  The
+    arena takes ``x``'s dtype; ``apply_layer_fn`` supplies the per-layer
+    numerics (default: the float oracle).
     """
-    _check_plan(graph, plan)
+    check_plan(graph, plan)
 
     arena = jnp.zeros((plan.arena_elems,), dtype=x.dtype)
 
@@ -97,13 +109,13 @@ def run_with_arena(
         cur = jax.lax.dynamic_slice(arena, (src.offset_elems,), (src.size_elems,))
         cur = cur.reshape(cur_shape)
         if layer.kind in ("ReLU", "Flatten"):
-            out = apply_layer(layer, {}, cur)
+            out = apply_layer_fn(layer, {}, cur)
             arena = jax.lax.dynamic_update_slice(
                 arena, out.reshape(-1), (src.offset_elems,)
             )
             cur_shape = out.shape
             continue
-        out = apply_layer(layer, params.get(name, {}), cur)
+        out = apply_layer_fn(layer, params.get(name, {}), cur)
         buf_idx += 1
         dst = plan.buffers[buf_idx]
         if _prod(out.shape) != dst.size_elems:
@@ -127,10 +139,10 @@ def run_with_arena(
 # ---------------------------------------------------------------------------
 
 
-def _apply_step(layer, views, p, x):
-    out = apply_layer(layer, p, x)
+def _apply_step(layer, views, p, x, apply_layer_fn=apply_layer):
+    out = apply_layer_fn(layer, p, x)
     for v in views:
-        out = apply_layer(v, {}, out)
+        out = apply_layer_fn(v, {}, out)
     return out
 
 
@@ -139,6 +151,7 @@ def make_scan_executor(
     plan: MemoryPlan,
     *,
     donate_input: bool = False,
+    apply_layer_fn=apply_layer,
 ) -> Callable[[Params, jax.Array], jax.Array]:
     """Build the jitted executor for (graph, plan).
 
@@ -152,8 +165,11 @@ def make_scan_executor(
     caller's array is deleted and must not be reused afterwards.  The scan
     carries themselves are donated/aliased by XLA inside the compiled
     program regardless.
+
+    ``apply_layer_fn`` supplies the per-layer numerics (default: the float
+    oracle; the int8 runtime passes its requantizing step).
     """
-    _check_plan(graph, plan)
+    check_plan(graph, plan)
     segments = scan_segments(graph)
     pre_views, steps = materialized_steps(graph)
     in_shape = tuple(graph.shapes()[0])
@@ -171,12 +187,13 @@ def make_scan_executor(
             raise ValueError(f"input size {x.shape} != planned {sizes[0]}")
         cur = x
         for v in pre_views:
-            cur = apply_layer(v, {}, cur)
+            cur = apply_layer_fn(v, {}, cur)
         for seg in segments:
             first_layer, first_views = steps[seg.start][0], steps[seg.start][1]
             if not seg.stacked:
                 name = first_layer.name or first_layer.kind
-                cur = _apply_step(first_layer, first_views, params.get(name, {}), cur)
+                cur = _apply_step(first_layer, first_views, params.get(name, {}),
+                                  cur, apply_layer_fn)
             else:
                 # lax.scan over stacked weights; two-bank carry (cur, prev):
                 # each step's output may reuse (alias) the bank its input's
@@ -189,7 +206,7 @@ def make_scan_executor(
                 def body(carry, p, _layer=first_layer, _views=first_views):
                     bank_cur, bank_prev = carry
                     del bank_prev  # freed: the slot this step's output lands in
-                    out = _apply_step(_layer, _views, p, bank_cur)
+                    out = _apply_step(_layer, _views, p, bank_cur, apply_layer_fn)
                     return (out, bank_cur), None
 
                 # length: stacked may be a leafless pytree (parameterless run)
@@ -207,6 +224,19 @@ def make_scan_executor(
     return jax.jit(_exec, donate_argnums=(1,) if donate else ())
 
 
+def cache_fifo(cache: Dict, key, max_entries: int, build: Callable):
+    """Bounded-FIFO memo shared by the executor caches (here and
+    ``repro.quant.exec``).  The cached value must hold strong references to
+    every object whose ``id`` appears in ``key`` — that is what keeps the
+    id-based keys valid for the entry's lifetime."""
+    hit = cache.get(key)
+    if hit is None:
+        while len(cache) >= max_entries:
+            cache.pop(next(iter(cache)))
+        hit = cache[key] = build()
+    return hit
+
+
 # Keyed by object identity; values keep the graph/plan alive so ids stay
 # valid.  Bounded FIFO: the convenience wrappers only ever see a handful of
 # (graph, plan) pairs per process; heavy users should hold their own
@@ -218,11 +248,8 @@ _EXEC_CACHE: Dict[
 
 def _cached_executor(graph: SequentialGraph, plan: MemoryPlan):
     """(executor, stats) for (graph, plan), computed once per pair."""
-    key = (id(graph), id(plan))
-    hit = _EXEC_CACHE.get(key)
-    if hit is None:
-        while len(_EXEC_CACHE) >= _EXEC_CACHE_MAX:
-            _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
+
+    def build():
         segments = scan_segments(graph)
         stats = {
             "arena_elems": int(plan.arena_elems),
@@ -230,8 +257,9 @@ def _cached_executor(graph: SequentialGraph, plan: MemoryPlan):
             "segments": len(segments),
             "stacked_layers": sum(s.length for s in segments if s.stacked),
         }
-        hit = (graph, plan, make_scan_executor(graph, plan), stats)
-        _EXEC_CACHE[key] = hit
+        return (graph, plan, make_scan_executor(graph, plan), stats)
+
+    hit = cache_fifo(_EXEC_CACHE, (id(graph), id(plan)), _EXEC_CACHE_MAX, build)
     return hit[2], hit[3]
 
 

@@ -51,20 +51,34 @@ class MemoryPlan:
     arena_elems: int
     scratch_elems: int
     param_elems: int
+    # Width of one activation element in bytes (4 = float32, 1 = int8).  Every
+    # plan builder threads this through so byte accounting is dtype-accurate:
+    # the paper's §5 int8 plans report arena *bytes* equal to arena elems.
+    io_dtype_bytes: int = 4
 
     @property
     def total_activation_elems(self) -> int:
         return self.arena_elems + self.scratch_elems
 
-    def activation_bytes(self, dtype_bytes: int = 4) -> int:
-        return self.total_activation_elems * dtype_bytes
+    def activation_bytes(self, dtype_bytes: Optional[int] = None) -> int:
+        db = self.io_dtype_bytes if dtype_bytes is None else dtype_bytes
+        return self.total_activation_elems * db
+
+    @property
+    def arena_bytes(self) -> int:
+        """Byte-accurate *arena* size (excluding scratch) in the plan's own
+        activation dtype — the same quantity the executors report as
+        ``stats['arena_bytes']``.  Use :meth:`activation_bytes` for the full
+        activation RAM including scratch."""
+        return self.arena_elems * self.io_dtype_bytes
 
     def param_bytes(self, dtype_bytes: int = 4) -> int:
         return self.param_elems * dtype_bytes
 
-    def total_bytes(self, dtype_bytes: int = 4) -> int:
+    def total_bytes(self, dtype_bytes: Optional[int] = None) -> int:
         """RAM + ROM total if parameters were *not* made read-only (§3.3)."""
-        return self.activation_bytes(dtype_bytes) + self.param_bytes(dtype_bytes)
+        db = self.io_dtype_bytes if dtype_bytes is None else dtype_bytes
+        return self.activation_bytes(db) + self.param_bytes(db)
 
 
 def _materialized(graph: SequentialGraph):
@@ -105,7 +119,7 @@ def _buffers_unique(rows) -> Tuple[Tuple[BufferAssignment, ...], int]:
     return tuple(out), offset
 
 
-def plan_naive(graph: SequentialGraph) -> MemoryPlan:
+def plan_naive(graph: SequentialGraph, io_dtype_bytes: int = 4) -> MemoryPlan:
     rows = _materialized(graph)
     buffers, arena = _buffers_unique(rows)
     return MemoryPlan(
@@ -114,10 +128,15 @@ def plan_naive(graph: SequentialGraph) -> MemoryPlan:
         arena_elems=arena,
         scratch_elems=sum(r[3] for r in rows),
         param_elems=graph.param_count(),
+        io_dtype_bytes=io_dtype_bytes,
     )
 
 
-def plan_fused(graph: SequentialGraph, allow_line_buffer: bool = True) -> MemoryPlan:
+def plan_fused(
+    graph: SequentialGraph,
+    allow_line_buffer: bool = True,
+    io_dtype_bytes: int = 4,
+) -> MemoryPlan:
     fused = fusion_pass.fuse(graph, allow_line_buffer=allow_line_buffer)
     rows = _materialized(fused)
     buffers, arena = _buffers_unique(rows)
@@ -127,6 +146,7 @@ def plan_fused(graph: SequentialGraph, allow_line_buffer: bool = True) -> Memory
         arena_elems=arena,
         scratch_elems=sum(r[3] for r in rows),
         param_elems=fused.param_count(),
+        io_dtype_bytes=io_dtype_bytes,
     )
 
 
@@ -134,6 +154,7 @@ def plan_pingpong(
     graph: SequentialGraph,
     fused: bool = True,
     allow_line_buffer: bool = True,
+    io_dtype_bytes: int = 4,
 ) -> MemoryPlan:
     """Paper §3.2: two alternating buffers.
 
@@ -166,6 +187,7 @@ def plan_pingpong(
         arena_elems=size_a + size_b,
         scratch_elems=max((r[3] for r in rows), default=0),
         param_elems=g.param_count(),
+        io_dtype_bytes=io_dtype_bytes,
     )
 
 
@@ -182,6 +204,7 @@ def plan_optimal_arena(
     graph: SequentialGraph,
     fused: bool = True,
     allow_line_buffer: bool = True,
+    io_dtype_bytes: int = 4,
 ) -> MemoryPlan:
     """Beyond-paper: optimal offset-packed arena for a sequential chain.
 
@@ -227,6 +250,7 @@ def plan_optimal_arena(
         arena_elems=pair_max,
         scratch_elems=0,  # folded into pair_max above
         param_elems=g.param_count(),
+        io_dtype_bytes=io_dtype_bytes,
     )
 
 
@@ -256,6 +280,7 @@ def plan_cmsis_baseline(graph: SequentialGraph, io_dtype_bytes: int = 1) -> Memo
         arena_elems=arena,
         scratch_elems=scratch_elems,
         param_elems=graph.param_count(),
+        io_dtype_bytes=io_dtype_bytes,
     )
 
 
@@ -402,10 +427,11 @@ class DeploymentReport:
     strategy: str
 
     @staticmethod
-    def from_plan(plan: MemoryPlan, dtype_bytes: int = 4, param_dtype_bytes: Optional[int] = None) -> "DeploymentReport":
-        pdb = dtype_bytes if param_dtype_bytes is None else param_dtype_bytes
+    def from_plan(plan: MemoryPlan, dtype_bytes: Optional[int] = None, param_dtype_bytes: Optional[int] = None) -> "DeploymentReport":
+        db = plan.io_dtype_bytes if dtype_bytes is None else dtype_bytes
+        pdb = db if param_dtype_bytes is None else param_dtype_bytes
         return DeploymentReport(
-            ram_bytes=plan.activation_bytes(dtype_bytes),
+            ram_bytes=plan.activation_bytes(db),
             rom_bytes=plan.param_bytes(pdb),
             strategy=plan.strategy,
         )

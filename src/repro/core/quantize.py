@@ -41,6 +41,11 @@ class QuantizedLayer:
     in_scale: float
     out_scale: float
 
+    @property
+    def multiplier(self) -> float:
+        """The layer's requantization multiplier (accumulator → int8)."""
+        return requant_multiplier(self.in_scale, self.w_scale, self.out_scale)
+
 
 @dataclasses.dataclass
 class QuantizedModel:
@@ -107,10 +112,48 @@ def quantize(graph: SequentialGraph, params, calibration_x) -> QuantizedModel:
     return QuantizedModel(graph=graph, input_scale=input_scale, layers=layers)
 
 
+# ---------------------------------------------------------------------------
+# Requantization — the one definition every int8 backend shares.
+#
+# The eager simulator below, the compiled int8 arena executors
+# (repro.quant.exec), the Pallas q8 kernel (repro.quant.kernel_q8) and the C
+# emitter (repro.core.export_c, via REQUANT_C) all requantize through these
+# helpers, so the backends cannot drift: float32 rescale by
+# in_scale·w_scale/out_scale, round-half-to-even, saturate to [-128, 127].
+# ---------------------------------------------------------------------------
+
+
+def requant_multiplier(in_scale: float, w_scale: float, out_scale: float) -> float:
+    """Accumulator-scale → output-scale multiplier for one layer."""
+    return in_scale * w_scale / out_scale
+
+
+def requantize(acc_i32: jax.Array, multiplier) -> jax.Array:
+    """int32 accumulator → int8 (f32 rescale, round-half-even, saturate).
+
+    ``multiplier`` may be a Python float (trace-time constant, as in the
+    simulator and the Pallas kernel) or a traced f32 scalar (as in the scan
+    executor, where it rides in the stacked per-layer params) — both are
+    cast to float32 first so the arithmetic is identical.
+    """
+    m = jnp.asarray(multiplier, jnp.float32)
+    return jnp.clip(jnp.round(acc_i32.astype(jnp.float32) * m), -128, 127).astype(jnp.int8)
+
+
+# The same math as C (nearbyintf rounds half-to-even under the default
+# FE_TONEAREST mode, matching jnp.round above bit-for-bit).
+REQUANT_C = """
+static int8_t rq(int32_t acc, float m) {
+  float v = nearbyintf((float)acc * m);
+  if (v > 127.0f) return 127;
+  if (v < -128.0f) return -128;
+  return (int8_t)v;
+}"""
+
+
 def _requant(acc_i32: jax.Array, in_scale: float, w_scale: float, out_scale: float) -> jax.Array:
     """int32 accumulator → int8 output (float rescale, round-to-nearest)."""
-    m = in_scale * w_scale / out_scale
-    return jnp.clip(jnp.round(acc_i32.astype(jnp.float32) * m), -128, 127).astype(jnp.int8)
+    return requantize(acc_i32, requant_multiplier(in_scale, w_scale, out_scale))
 
 
 def quantize_input(qm: QuantizedModel, x: jax.Array) -> jax.Array:

@@ -46,6 +46,16 @@ def resolve_interpret(interpret: bool | None) -> bool:
     return interpret
 
 
+def halo_window_rows(row_block: int, *, conv_stride: int, pool_k: int,
+                     pool_stride: int, k: int) -> int:
+    """Input rows one program's tile of ``row_block`` pooled rows consumes:
+    a stride of ``row_block·pool_stride·conv_stride`` plus the conv/pool halo.
+    Shared by the float kernel and the int8 q8 kernel
+    (``repro.quant.kernel_q8``) so the two tilings cannot diverge."""
+    return ((row_block - 1) * pool_stride * conv_stride
+            + (pool_k - 1) * conv_stride + k)
+
+
 def choose_row_block(
     ph: int,
     block_bytes,
@@ -112,22 +122,28 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
     o_ref[0] = pooled.astype(o_ref.dtype)
 
 
-def conv_pool(
-    x: jax.Array,  # (H, W, Cin) or (N, H, W, Cin), pre-padded
+def conv_pool_call(
+    x: jax.Array,  # (N, H, W, Cin), pre-padded
     w: jax.Array,  # (k, k, Cin, Cout)
     b: jax.Array | None,
     *,
-    conv_stride: int = 1,
-    pool_k: int = 2,
-    pool_stride: int = 2,
-    activation: str = "relu",
-    interpret: bool | None = None,
-    row_block: int | None = None,
+    kernel_factory,  # (out_w, row_block) -> kern(x_ref, w_ref, b_ref, o_ref)
+    out_dtype,
+    conv_stride: int,
+    pool_k: int,
+    pool_stride: int,
+    interpret: bool | None,
+    row_block: int | None,
 ) -> jax.Array:
-    """Fused conv+act+pool.  Returns (PH, PW, Cout) or (N, PH, PW, Cout)."""
-    squeeze = x.ndim == 3
-    if squeeze:
-        x = x[None]
+    """Shared pallas_call plumbing for the fused conv+pool kernel family.
+
+    Owns everything dtype-independent — shape math, auto row_block sizing
+    against the VMEM budget (input/weight/output widths from the array
+    dtypes, 4 B per accumulator element for both f32 and int32), overlapping
+    halo BlockSpecs, grid and bias unpacking — so the float kernel and the
+    int8 q8 kernel (``repro.quant.kernel_q8``) cannot diverge in tiling.
+    Only the kernel body, supplied via ``kernel_factory``, differs.
+    """
     n, H, W, cin = x.shape
     k = w.shape[0]
     cout = w.shape[-1]
@@ -138,30 +154,28 @@ def conv_pool(
 
     # Input rows per program: a stride of row_block·ps·cs plus the halo.
     stride_rows = pool_stride * conv_stride
-    halo_rows = (pool_k - 1) * conv_stride + k
+    geom = dict(conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride, k=k)
     if row_block is None:
-        itemsize = x.dtype.itemsize
+        in_item = x.dtype.itemsize
+        out_item = jnp.dtype(out_dtype).itemsize
         w_bytes = k * k * cin * cout * w.dtype.itemsize
 
         def _tile_bytes(r: int) -> int:
-            window = (r - 1) * stride_rows + halo_rows  # input rows resident
+            window = halo_window_rows(r, **geom)  # input rows resident
             cr = (r - 1) * pool_stride + pool_k  # conv rows accumulated
             return (
-                window * W * cin * itemsize  # halo window
-                + cr * ow * cout * 4  # f32 accumulator
-                + r * pw * cout * itemsize  # output block
+                window * W * cin * in_item  # halo window
+                + cr * ow * cout * 4  # f32/int32 accumulator
+                + r * pw * cout * out_item  # output block
                 + w_bytes
             )
 
         row_block = choose_row_block(ph, _tile_bytes)
     if ph % row_block:
         raise ValueError(f"row_block={row_block} must divide PH={ph}")
-    window_rows = (row_block - 1) * stride_rows + halo_rows
+    window_rows = halo_window_rows(row_block, **geom)
 
-    kern = functools.partial(
-        _kernel, conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride,
-        k=k, activation=activation, out_w=ow, row_block=row_block,
-    )
+    kern = kernel_factory(ow, row_block)
     args = [x, w]
     in_specs = [
         # Overlapping halo windows: element-offset (Unblocked) indexing.
@@ -184,12 +198,41 @@ def conv_pool(
             b_ref = None
         kern(x_ref, w_ref, b_ref, o_ref)
 
-    out = pl.pallas_call(
+    return pl.pallas_call(
         wrapper,
         grid=(n, ph // row_block),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, row_block, pw, cout), lambda i, t: (i, t, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, ph, pw, cout), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, ph, pw, cout), out_dtype),
         interpret=resolve_interpret(interpret),
     )(*args)
+
+
+def conv_pool(
+    x: jax.Array,  # (H, W, Cin) or (N, H, W, Cin), pre-padded
+    w: jax.Array,  # (k, k, Cin, Cout)
+    b: jax.Array | None,
+    *,
+    conv_stride: int = 1,
+    pool_k: int = 2,
+    pool_stride: int = 2,
+    activation: str = "relu",
+    interpret: bool | None = None,
+    row_block: int | None = None,
+) -> jax.Array:
+    """Fused conv+act+pool.  Returns (PH, PW, Cout) or (N, PH, PW, Cout)."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    out = conv_pool_call(
+        x, w, b,
+        kernel_factory=lambda ow, rb: functools.partial(
+            _kernel, conv_stride=conv_stride, pool_k=pool_k,
+            pool_stride=pool_stride, k=w.shape[0], activation=activation,
+            out_w=ow, row_block=rb,
+        ),
+        out_dtype=x.dtype,
+        conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride,
+        interpret=interpret, row_block=row_block,
+    )
     return out[0] if squeeze else out

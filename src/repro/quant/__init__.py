@@ -1,0 +1,30 @@
+"""Quantized int8 runtime (paper §5): q7-style kernel + int8 arena executors.
+
+The quantization *math* (scales, requantization) lives in
+``repro.core.quantize``; this package is the compiled runtime on top of it:
+
+* ``kernel_q8``  — fused int8 conv+act+pool Pallas kernel (int32 MXU
+  accumulation, in-kernel requantization) with a fused XLA int8 fallback.
+* ``exec``       — int8 arena walker + jitted two-bank scan executor, the
+  int8 instantiation of ``repro.core.pingpong``.
+"""
+from repro.quant.exec import (
+    apply_int8_layer,
+    int8_params,
+    make_int8_scan_executor,
+    run_batch_int8_with_arena,
+    run_int8_with_arena,
+    run_int8_with_arena_scan,
+)
+from repro.quant.kernel_q8 import conv_pool_q8, fused_conv_pool_q8
+
+__all__ = [
+    "apply_int8_layer",
+    "conv_pool_q8",
+    "fused_conv_pool_q8",
+    "int8_params",
+    "make_int8_scan_executor",
+    "run_batch_int8_with_arena",
+    "run_int8_with_arena",
+    "run_int8_with_arena_scan",
+]

@@ -1,0 +1,209 @@
+"""Int8 arena executors: the paper's §5 quantized net inside the planned arena.
+
+The float executors (``repro.core.pingpong``) are parametric in the
+per-layer numerics; this module supplies the q7-style int8 step
+(:func:`apply_int8_layer` — int8 storage, int32 accumulation, shared
+requantization from ``repro.core.quantize``) and re-exports the same two
+execution disciplines:
+
+* :func:`run_int8_with_arena` — the Python-loop walker over a **genuine int8
+  arena** (``jnp.int8`` flat array, one byte per element: the plan's
+  ``io_dtype_bytes=1`` accounting made executable).  Deliberately eager — the
+  slow proof that the int8 plan's offsets are clobber-free.
+* :func:`run_int8_with_arena_scan` / :func:`run_batch_int8_with_arena` — the
+  compiled executor: one XLA program, homogeneous layer runs as ``lax.scan``
+  over stacked int8 weights (+ stacked f32 requant multipliers) with the
+  donated two-bank int8 carry (DESIGN.md §2/§6).
+
+Both must be bit-exact against ``quantize.simulate_int8_forward``, which
+stays the independent slow oracle (DESIGN.md §1) — the tests assert the fast
+paths against it, never against each other alone.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nn, pingpong
+from repro.core.graph import (
+    Conv2d,
+    Flatten,
+    FusedConvPool,
+    FusedLinear,
+    Input,
+    Linear,
+    MaxPool2d,
+    ReLU,
+)
+from repro.core.planner import MemoryPlan, scan_segments
+from repro.core.quantize import QuantizedModel, requantize
+
+# Compiled int8 executors kept per (qm, plan) object pair, bounded FIFO.
+_EXEC_CACHE_MAX = 32
+
+
+def int8_params(qm: QuantizedModel) -> Dict[str, Dict[str, jax.Array]]:
+    """Per-layer device pytrees for the executors.
+
+    ``w`` int8, ``b`` int32 (accumulator scale, only when present) and ``m``
+    — the f32 requant multiplier — as an *array* leaf so homogeneous layer
+    runs can stack it and scan over per-layer multipliers.
+    """
+    out: Dict[str, Dict[str, jax.Array]] = {}
+    for name, q in qm.layers.items():
+        p = {"w": jnp.asarray(q.w_q), "m": jnp.float32(q.multiplier)}
+        if q.b_q is not None:
+            p["b"] = jnp.asarray(q.b_q)
+        out[name] = p
+    return out
+
+
+def apply_int8_layer(layer, p, x: jax.Array) -> jax.Array:
+    """Apply one layer with the paper's §5 int8 semantics.
+
+    Same per-layer math as ``quantize.simulate_int8_forward`` (int32
+    accumulate, bias in accumulator scale, activation in the accumulator
+    domain, then the shared requantization), but parameter-driven — ``p``
+    carries ``w``/``b``/``m`` — so it slots into the pingpong executors as
+    their ``apply_layer_fn`` and stacks under ``lax.scan``.
+    """
+    if isinstance(layer, Input):
+        return x
+    if isinstance(layer, ReLU):
+        return jnp.maximum(x, 0)
+    if isinstance(layer, Flatten):
+        return x.reshape(x.shape[:-3] + (-1,)) if x.ndim > 3 else x.reshape(-1)
+    if isinstance(layer, MaxPool2d):
+        return nn.maxpool2d(x, layer.kernel_size, layer.stride)
+    if isinstance(layer, (Conv2d, FusedConvPool)):
+        conv = layer.conv if isinstance(layer, FusedConvPool) else layer
+        squeeze = x.ndim == 3
+        acc = jax.lax.conv_general_dilated(
+            x.astype(jnp.int32)[None] if squeeze else x.astype(jnp.int32),
+            p["w"].astype(jnp.int32),
+            window_strides=(conv.stride, conv.stride),
+            padding=[(conv.padding, conv.padding)] * 2,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        if squeeze:
+            acc = acc[0]
+        if "b" in p:
+            bias = p["b"]
+            acc = acc + (bias[:, None, None] if acc.ndim == 3 else bias[None, :, None, None])
+        if isinstance(layer, FusedConvPool):
+            if layer.activation == "relu":
+                acc = jnp.maximum(acc, 0)  # relu in accumulator domain
+            y = requantize(acc, p["m"])
+            return nn.maxpool2d(y, layer.pool_kernel, layer.pool_stride)
+        return requantize(acc, p["m"])
+    if isinstance(layer, (Linear, FusedLinear)):
+        acc = x.astype(jnp.int32) @ p["w"].astype(jnp.int32).T
+        if "b" in p:
+            acc = acc + p["b"]
+        if isinstance(layer, FusedLinear) and layer.activation == "relu":
+            acc = jnp.maximum(acc, 0)
+        return requantize(acc, p["m"])
+    raise TypeError(f"unsupported layer for int8 execution: {layer!r}")
+
+
+def run_int8_with_arena(
+    qm: QuantizedModel,
+    plan: MemoryPlan,
+    x_q: jax.Array,  # int8, qm.graph's input shape
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """Int8 walker oracle: execute ``qm.graph`` inside a genuine int8 arena.
+
+    Returns (int8 output, stats); ``stats['arena_bytes']`` is the actual
+    byte footprint (1 B/elem — equal to ``plan.activation_bytes()`` for a
+    plan built with ``io_dtype_bytes=1``, minus planner-only scratch).
+    """
+    if x_q.dtype != jnp.int8:
+        raise TypeError(f"expected int8 input, got {x_q.dtype}")
+    out, stats = pingpong.run_with_arena(
+        qm.graph, plan, int8_params(qm), x_q, apply_layer_fn=apply_int8_layer
+    )
+    stats = dict(stats)
+    stats["arena_bytes"] = int(plan.arena_elems)  # int8: one byte per element
+    return out, stats
+
+
+def make_int8_scan_executor(
+    qm: QuantizedModel,
+    plan: MemoryPlan,
+    *,
+    donate_input: bool = False,
+) -> Callable[[jax.Array], jax.Array]:
+    """Build the jitted int8 executor for (qm, plan): ``x_q -> y_q``.
+
+    The underlying machinery is ``pingpong.make_scan_executor`` with the int8
+    step — homogeneous runs scan over stacked int8 weights, int32 biases and
+    f32 multipliers with a donated two-bank **int8** carry, so the compiled
+    program holds two int8 banks regardless of depth.
+    """
+    fn = pingpong.make_scan_executor(
+        qm.graph, plan, donate_input=donate_input,
+        apply_layer_fn=apply_int8_layer,
+    )
+    params = int8_params(qm)
+
+    def _exec(x_q: jax.Array) -> jax.Array:
+        if x_q.dtype != jnp.int8:
+            raise TypeError(f"expected int8 input, got {x_q.dtype}")
+        return fn(params, x_q)
+
+    return _exec
+
+
+# Keyed by object identity; values keep the model/plan alive so ids stay valid.
+_EXEC_CACHE: Dict[
+    Tuple[int, int], Tuple[QuantizedModel, MemoryPlan, Callable, Dict[str, int]]
+] = {}
+
+
+def _cached_executor(qm: QuantizedModel, plan: MemoryPlan):
+    def build():
+        segments = scan_segments(qm.graph)
+        stats = {
+            "arena_elems": int(plan.arena_elems),
+            "arena_bytes": int(plan.arena_elems),  # int8: 1 B per element
+            "buffers": len(plan.buffers),
+            "segments": len(segments),
+            "stacked_layers": sum(s.length for s in segments if s.stacked),
+        }
+        return (qm, plan, make_int8_scan_executor(qm, plan), stats)
+
+    hit = pingpong.cache_fifo(
+        _EXEC_CACHE, (id(qm), id(plan)), _EXEC_CACHE_MAX, build
+    )
+    return hit[2], hit[3]
+
+
+def run_int8_with_arena_scan(
+    qm: QuantizedModel,
+    plan: MemoryPlan,
+    x_q: jax.Array,
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """Compiled counterpart of :func:`run_int8_with_arena` (same contract):
+    bit-exact against the walker and the eager simulator, one dispatch."""
+    fn, stats = _cached_executor(qm, plan)
+    return fn(x_q), dict(stats)
+
+
+def run_batch_int8_with_arena(
+    qm: QuantizedModel,
+    plan: MemoryPlan,
+    xs_q: jax.Array,  # (N, *in_shape) int8
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """N quantized images through one int8 arena plan in a single compiled
+    dispatch — the two int8 banks gain a leading batch dimension
+    (``N · arena_elems`` bytes), the alternation per image unchanged."""
+    in_ndim = len(qm.graph.shapes()[0])
+    if xs_q.ndim != in_ndim + 1:
+        raise ValueError(f"expected batched input (N, ...), got {xs_q.shape}")
+    fn, stats = _cached_executor(qm, plan)
+    out = fn(xs_q)
+    stats = dict(stats)
+    stats["batch"] = int(xs_q.shape[0])
+    return out, stats

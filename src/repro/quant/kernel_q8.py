@@ -1,0 +1,186 @@
+"""Pallas TPU kernel: q7-style fused int8 conv + activation + max-pool.
+
+The int8 sibling of ``repro.kernels.conv_pool`` (paper §5, the CMSIS-NN
+comparison): int8 storage in HBM, int32 accumulation on the MXU, and the
+per-layer requantization folded *into* the kernel — the int32 conv output
+never exists outside VMEM/VREGs, exactly as CMSIS-NN's ``arm_convolve``
+keeps the q31 accumulator in registers.
+
+Structure is identical to the float kernel — the grid ``(N, PH //
+row_block)``, the halo-tiled overlapping ``pl.Unblocked`` row windows and
+the VMEM-budget row_block sizing all come from the shared
+``repro.kernels.conv_pool.kernel.conv_pool_call`` builder; only the kernel
+body differs.  Differences:
+
+* operands are int8; the k² MXU dots request ``preferred_element_type=
+  jnp.int32`` (the TPU int8 matmul path);
+* bias is added in the int32 accumulator scale (CMSIS-NN bias convention);
+* the pooling max runs in the *accumulator* domain and the requantization
+  (``repro.core.quantize.requantize`` — shared with the eager simulator and
+  the C emitter) runs once on the pooled tile.  Requantization is monotone
+  (positive multiplier, round-half-even, saturate), so max-then-requant is
+  bit-identical to the simulator's requant-then-max order.
+
+``fused_conv_pool_q8`` is the jitted entry point with the same ``impl``
+contract as the float ops wrapper: ``"auto"`` is always a *compiled* path —
+Pallas on TPU/GPU, a fused XLA int8 lowering on CPU — and every impl is
+bit-exact against ``quantize.simulate_int8_forward``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import requantize
+from repro.kernels.conv_pool.kernel import conv_pool_call, has_compiled_pallas_backend
+
+
+def _kernel_q8(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
+               k, activation, multiplier, out_w, row_block):
+    cs, pk, ps, R = conv_stride, pool_k, pool_stride, row_block
+    x = x_ref[0]  # (window_rows, W, Cin) int8 — this program's halo window
+    w = w_ref[...]  # (k, k, Cin, Cout) int8
+    cin = x.shape[-1]
+    cout = w.shape[-1]
+    ow = out_w
+    # Conv rows this tile's pooled rows consume, relative to the window start.
+    cr = (R - 1) * ps + pk
+
+    # conv: k² static strided slices, one int8×int8→int32 MXU dot each.
+    acc = jnp.zeros((cr * ow, cout), jnp.int32)
+    for dz in range(k):
+        rows = x[dz : dz + (cr - 1) * cs + 1 : cs]  # (cr, W, Cin)
+        for dt in range(k):
+            cols = rows[:, dt : dt + (ow - 1) * cs + 1 : cs]  # (cr, ow, Cin)
+            acc = acc + jax.lax.dot_general(
+                cols.reshape(cr * ow, cin),
+                w[dz, dt],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+    acc = acc.reshape(cr, ow, cout)
+    if b_ref is not None:
+        acc = acc + b_ref[...]  # int32, accumulator scale
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0)
+
+    # pooling reduction in the int32 accumulator domain, all offsets static.
+    pw = (ow - pk) // ps + 1
+    pooled_rows = None
+    for j in range(pk):
+        rows = acc[j : j + (R - 1) * ps + 1 : ps]  # (R, ow, Cout)
+        pooled_rows = rows if pooled_rows is None else jnp.maximum(pooled_rows, rows)
+    pooled = None
+    for j in range(pk):
+        cols = pooled_rows[:, j : j + (pw - 1) * ps + 1 : ps]  # (R, pw, Cout)
+        pooled = cols if pooled is None else jnp.maximum(pooled, cols)
+    # In-kernel requantization: int32 → int8 once, on the pooled tile.
+    o_ref[0] = requantize(pooled, multiplier)
+
+
+def conv_pool_q8(
+    x: jax.Array,  # (H, W, Cin) or (N, H, W, Cin) int8, pre-padded
+    w: jax.Array,  # (k, k, Cin, Cout) int8
+    b: jax.Array | None,  # (Cout,) int32, accumulator scale
+    *,
+    multiplier: float,  # requant multiplier in_scale·w_scale/out_scale
+    conv_stride: int = 1,
+    pool_k: int = 2,
+    pool_stride: int = 2,
+    activation: str = "relu",
+    interpret: bool | None = None,
+    row_block: int | None = None,
+) -> jax.Array:
+    """Fused int8 conv+act+pool.  Returns int8 (PH, PW, Cout) or batched."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    out = conv_pool_call(
+        x, w, b,
+        kernel_factory=lambda ow, rb: functools.partial(
+            _kernel_q8, conv_stride=conv_stride, pool_k=pool_k,
+            pool_stride=pool_stride, k=w.shape[0], activation=activation,
+            multiplier=float(multiplier), out_w=ow, row_block=rb,
+        ),
+        out_dtype=jnp.int8,
+        conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride,
+        interpret=interpret, row_block=row_block,
+    )
+    return out[0] if squeeze else out
+
+
+def _xla_conv_pool_q8(x, w, b, *, multiplier, conv_stride, padding, pool_k,
+                      pool_stride, activation):
+    """Fused XLA int8 realization on the NCHW input: the compiled fallback
+    for backends without a compiled Pallas lowering.  Follows the simulator's
+    op order (conv → bias → act → requant → pool) so bit-exactness is by
+    construction, and XLA fuses the chain inside the enclosing jit."""
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=(conv_stride, conv_stride),
+        padding=[(padding, padding)] * 2,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        acc = acc + b[None, :, None, None]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0)
+    from repro.core import nn as core_nn
+
+    return core_nn.maxpool2d(requantize(acc, multiplier), pool_k, pool_stride)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("multiplier", "conv_stride", "padding", "pool_k",
+                     "pool_stride", "activation", "impl", "interpret",
+                     "row_block"),
+)
+def fused_conv_pool_q8(
+    x: jax.Array,  # (Cin, H, W) or (N, Cin, H, W) int8 — paper/PyTorch layout
+    w: jax.Array,  # (Cout, Cin, k, k) int8
+    b: jax.Array | None = None,  # (Cout,) int32
+    *,
+    multiplier: float = 1.0,
+    conv_stride: int = 1,
+    padding: int = 0,
+    pool_k: int = 2,
+    pool_stride: int = 2,
+    activation: str = "relu",
+    impl: str = "auto",  # "auto" | "pallas" | "xla"
+    interpret: bool | None = None,
+    row_block: int | None = None,
+) -> jax.Array:
+    """Returns int8 (Cout, PH, PW) or (N, Cout, PH, PW)."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+
+    if impl == "auto":
+        impl = "pallas" if has_compiled_pallas_backend() else "xla"
+    if impl == "xla":
+        out = _xla_conv_pool_q8(
+            x, w, b, multiplier=multiplier, conv_stride=conv_stride,
+            padding=padding, pool_k=pool_k, pool_stride=pool_stride,
+            activation=activation,
+        )
+        return out[0] if squeeze else out
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    xh = jnp.transpose(x, (0, 2, 3, 1))  # NHWC (TPU lanes-last)
+    if padding:
+        # Symmetric quantization: the int8 zero point is 0, so zero padding
+        # is exact.
+        xh = jnp.pad(xh, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    wh = jnp.transpose(w, (2, 3, 1, 0))  # HWIO
+    out = conv_pool_q8(
+        xh, wh, b, multiplier=multiplier, conv_stride=conv_stride,
+        pool_k=pool_k, pool_stride=pool_stride, activation=activation,
+        interpret=interpret, row_block=row_block,
+    )
+    out = jnp.transpose(out, (0, 3, 1, 2))  # NCHW
+    return out[0] if squeeze else out

@@ -1,0 +1,238 @@
+"""Coverage for the int8 runtime (ISSUE 2).
+
+Oracle discipline (DESIGN.md §1/§6): every fast path is asserted bit-exact
+against ``quantize.simulate_int8_forward`` — the eager per-layer simulator —
+never against another fast path alone.
+
+* q8 kernel (Pallas + XLA fallback) vs the simulator, including overlap
+  pooling (``stride >= kernel`` and the ``stride < kernel`` line-buffer case).
+* int8 scan executor vs the int8 arena walker, byte-exact, single + batched.
+* stacked homogeneous int8 runs (weights, biases and requant multipliers all
+  scan over the stacked leading axis).
+* planner int8 byte accounting vs the paper's §5 table.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusion, nn, planner, quantize
+from repro.core.graph import (
+    Conv2d,
+    Input,
+    Linear,
+    MaxPool2d,
+    ReLU,
+    SequentialGraph,
+    cifar_testnet,
+    lenet5,
+)
+from repro.quant import exec as qexec
+from repro.quant import kernel_q8
+
+
+def _quantized(mk, seed=0, calib_n=8):
+    g = mk()
+    params = nn.init_params(g, jax.random.PRNGKey(seed))
+    fused = fusion.fuse(g)
+    fp = fusion.rename_params(fused, params)
+    rng = np.random.default_rng(seed)
+    calib = jnp.asarray(rng.standard_normal((calib_n,) + g.shapes()[0]), jnp.float32)
+    qm = quantize.quantize(fused, fp, calib)
+    return g, qm, rng
+
+
+# ---------------------------------------------------------------------------
+# kernel: bit-exact vs the eager simulator
+# ---------------------------------------------------------------------------
+
+
+def _single_conv_pool_graph(pool_k, pool_stride, H=16, cin=3, cout=8, k=3, pad=1):
+    return SequentialGraph(
+        [
+            Input(shape=(cin, H, H), name="input"),
+            Conv2d(cin, cout, kernel_size=k, stride=1, padding=pad, name="conv"),
+            ReLU(name="relu"),
+            MaxPool2d(kernel_size=pool_k, stride=pool_stride, name="pool"),
+        ]
+    )
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize(
+    "pool_k,pool_stride",
+    [(2, 2),  # paper's main case: stride >= kernel (Alg. 1)
+     (2, 3),  # stride > kernel (disjoint windows with gaps)
+     (3, 2)],  # §7 overlap case: stride < kernel (line-buffer fusion)
+)
+def test_kernel_q8_bit_exact_vs_simulator(impl, pool_k, pool_stride):
+    g = _single_conv_pool_graph(pool_k, pool_stride, H=15, pad=0)
+    _, qm, rng = (lambda mk: _quantized(mk, seed=3))(lambda: g)
+    q = qm.layers[next(iter(qm.layers))]
+    x_q = quantize.quantize_input(
+        qm, jnp.asarray(rng.standard_normal(g.shapes()[0]), jnp.float32)
+    )
+    y_ref = quantize.simulate_int8_forward(qm, x_q)
+
+    y = kernel_q8.fused_conv_pool_q8(
+        x_q, jnp.asarray(q.w_q), jnp.asarray(q.b_q), multiplier=q.multiplier,
+        padding=0, pool_k=pool_k, pool_stride=pool_stride, impl=impl,
+    )
+    assert y.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+@pytest.mark.parametrize("n", [1, 4])
+def test_kernel_q8_batched_and_padded_cifar_conv1(n):
+    """CIFAR-testnet conv1 geometry (5x5 pad 2, pool 2/2) with the batch in
+    the grid, both impls, vs the simulator on the one-layer prefix graph."""
+    g, qm, rng = _quantized(cifar_testnet, seed=1)
+    fused = qm.graph
+    q = qm.layers["conv1+maxpool1"]
+    xs_q = quantize.quantize_input(
+        qm, jnp.asarray(rng.standard_normal((n, 3, 32, 32)), jnp.float32)
+    )
+    qm1 = dataclasses.replace(qm, graph=SequentialGraph(fused.layers[:2]))
+    y_ref = quantize.simulate_int8_forward(qm1, xs_q)
+    for impl in ("xla", "pallas"):
+        y = kernel_q8.fused_conv_pool_q8(
+            xs_q, jnp.asarray(q.w_q), jnp.asarray(q.b_q),
+            multiplier=q.multiplier, padding=2, impl=impl,
+        )
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+        assert y.shape == (n, 32, 16, 16)
+
+
+def test_kernel_q8_halo_tiled_row_blocks():
+    """Every legal explicit row_block must agree with the simulator — the
+    overlapping int8 halo windows carve the image without drift."""
+    g = _single_conv_pool_graph(2, 2, H=16, pad=0)
+    _, qm, rng = (lambda mk: _quantized(mk, seed=5))(lambda: g)
+    q = qm.layers[next(iter(qm.layers))]
+    x_q = quantize.quantize_input(
+        qm, jnp.asarray(rng.standard_normal(g.shapes()[0]), jnp.float32)
+    )
+    y_ref = quantize.simulate_int8_forward(qm, x_q)
+    ph = y_ref.shape[-2]
+    for rb in [r for r in range(1, ph + 1) if ph % r == 0]:
+        y = kernel_q8.fused_conv_pool_q8(
+            x_q, jnp.asarray(q.w_q), jnp.asarray(q.b_q),
+            multiplier=q.multiplier, padding=0, impl="pallas", row_block=rb,
+        )
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+# ---------------------------------------------------------------------------
+# executors: walker oracle + compiled scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("plan_fn", [planner.plan_pingpong, planner.plan_optimal_arena])
+@pytest.mark.parametrize("mk", [lenet5, cifar_testnet])
+def test_int8_executors_bit_exact_vs_simulator(plan_fn, mk):
+    g, qm, rng = _quantized(mk)
+    plan = plan_fn(g, io_dtype_bytes=1)
+    planner.verify_plan(plan)
+    x_q = quantize.quantize_input(
+        qm, jnp.asarray(rng.standard_normal(g.shapes()[0]), jnp.float32)
+    )
+    y_sim = quantize.simulate_int8_forward(qm, x_q)
+
+    # Walker: genuine int8 arena, eager — the plan's executable proof.
+    y_walk, stats_w = qexec.run_int8_with_arena(qm, plan, x_q)
+    assert y_walk.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(y_walk), np.asarray(y_sim))
+    assert stats_w["arena_bytes"] == plan.arena_elems  # 1 B per int8 element
+
+    # Scan: compiled, byte-exact against both walker and simulator.
+    y_scan, stats_s = qexec.run_int8_with_arena_scan(qm, plan, x_q)
+    np.testing.assert_array_equal(np.asarray(y_scan), np.asarray(y_sim))
+    np.testing.assert_array_equal(np.asarray(y_scan), np.asarray(y_walk))
+    assert stats_s["segments"] >= 1
+
+
+def test_batched_int8_scan_matches_per_image_walker():
+    g, qm, rng = _quantized(lenet5, seed=2)
+    plan = planner.plan_pingpong(g, io_dtype_bytes=1)
+    xs_q = quantize.quantize_input(
+        qm, jnp.asarray(rng.standard_normal((8, 1, 32, 32)), jnp.float32)
+    )
+    ys, stats = qexec.run_batch_int8_with_arena(qm, plan, xs_q)
+    assert ys.shape[0] == 8 and stats["batch"] == 8 and ys.dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(ys), np.asarray(quantize.simulate_int8_forward(qm, xs_q))
+    )
+    for i in range(3):
+        y_walk, _ = qexec.run_int8_with_arena(qm, plan, xs_q[i])
+        np.testing.assert_array_equal(np.asarray(ys[i]), np.asarray(y_walk))
+    with pytest.raises(ValueError):
+        qexec.run_batch_int8_with_arena(qm, plan, xs_q[0])  # unbatched input
+
+
+def test_int8_executor_rejects_non_int8_input():
+    g, qm, _ = _quantized(lenet5, seed=4)
+    plan = planner.plan_pingpong(g, io_dtype_bytes=1)
+    x = jnp.zeros(g.shapes()[0], jnp.float32)
+    with pytest.raises(TypeError):
+        qexec.run_int8_with_arena(qm, plan, x)
+    with pytest.raises(TypeError):
+        qexec.run_int8_with_arena_scan(qm, plan, x)
+
+
+def test_int8_stacked_homogeneous_run_scans_multipliers():
+    """Four identical FusedLinear blocks collapse into one stacked lax.scan
+    segment whose xs include the per-layer f32 requant multipliers; the
+    executor stays bit-exact vs the simulator."""
+    layers = [Input(shape=(16,), name="input")]
+    for i in range(4):
+        layers += [Linear(16, 16, name=f"fc{i}"), ReLU(name=f"r{i}")]
+    layers += [Linear(16, 4, name="head")]
+    g = SequentialGraph(layers)
+    _, qm, rng = (lambda mk: _quantized(mk, seed=6))(lambda: g)
+
+    # The per-layer multipliers genuinely differ — the scan must thread them.
+    ms = [q.multiplier for q in qm.layers.values()]
+    assert len(set(ms)) > 1
+
+    plan = planner.plan_pingpong(g, io_dtype_bytes=1)
+    x_q = quantize.quantize_input(
+        qm, jnp.asarray(rng.standard_normal((16,)), jnp.float32)
+    )
+    y_scan, stats = qexec.run_int8_with_arena_scan(qm, plan, x_q)
+    assert stats["stacked_layers"] == 4 and stats["segments"] == 2
+    np.testing.assert_array_equal(
+        np.asarray(y_scan), np.asarray(quantize.simulate_int8_forward(qm, x_q))
+    )
+
+
+# ---------------------------------------------------------------------------
+# planner: byte-accurate int8 accounting (paper §5 table)
+# ---------------------------------------------------------------------------
+
+
+def test_planner_int8_arena_bytes_paper_section5():
+    g = cifar_testnet()
+    pp = planner.plan_pingpong(g, io_dtype_bytes=1)
+    # paper Table 1: our framework RAM 11.2 KBytes (int8: elements = bytes)
+    assert pp.io_dtype_bytes == 1
+    assert pp.activation_bytes() == pp.arena_bytes == 11264
+    # CMSIS-NN baseline: 40 KB line buffers + 3200 B im2col ≈ 44 KB
+    cm = planner.plan_cmsis_baseline(g, io_dtype_bytes=1)
+    assert cm.activation_bytes() == 44160
+    # int8 arena is exactly 1/4 of the same plan in float32
+    pp_f = planner.plan_pingpong(g, io_dtype_bytes=4)
+    assert pp_f.activation_bytes() == 4 * pp.activation_bytes()
+    # optimal arena stays ≤ ping-pong under int8 accounting too
+    opt = planner.plan_optimal_arena(g, io_dtype_bytes=1)
+    assert opt.activation_bytes() <= pp.activation_bytes()
+    planner.verify_plan(opt)
+
+
+def test_deployment_report_uses_plan_dtype():
+    g = cifar_testnet()
+    plan = planner.plan_pingpong(g, io_dtype_bytes=1)
+    rep = planner.DeploymentReport.from_plan(plan, param_dtype_bytes=1)
+    assert rep.ram_bytes == 11264
+    assert rep.rom_bytes == plan.param_elems  # int8 params: 1 B each
