@@ -18,7 +18,9 @@ perf trajectory is measurable from this PR on.  For each batch size it times
 on the CIFAR-testnet conv1 geometry (kernels) and fused LeNet-5 with the
 ping-pong plan (executors; the int8 plan is the same plan at 1 B/elem), and
 writes ``BENCH_hotpaths.json`` including the float-vs-int8 speed and
-arena-bytes ratios:
+arena-bytes ratios plus a ``plans`` section (the §5 planner byte table and
+the residual-net naive vs reordered DAG arenas — the CI arena-regression
+guard):
 
     PYTHONPATH=src python benchmarks/bench_hotpaths.py [--smoke] [--out PATH]
 
@@ -241,6 +243,34 @@ def bench_executor_int8(batches, *, reps: int, smoke: bool):
     return rows, arena
 
 
+def plan_table() -> dict:
+    """The planner's §5 arena numbers + the DAG reorder result (ISSUE 3).
+
+    Pure planning (no timing): the CI smoke check asserts these against the
+    paper's Table 1 and the residual net's expected reorder win, so a planner
+    regression fails the build even when every executor still runs.
+    """
+    from repro.core import fusion, planner, schedule
+    from repro.core.graph import cifar_testnet, residual_cifar
+
+    g = cifar_testnet()
+    res = residual_cifar()
+    mat = schedule.materialize_dag(fusion.fuse_dag(res))
+    naive = schedule.plan_dag(res, order=schedule.naive_order(mat),
+                              io_dtype_bytes=1)
+    reordered = schedule.plan_dag(res, io_dtype_bytes=1)
+    return {
+        "pingpong_cifar_int8_bytes": planner.plan_pingpong(
+            g, io_dtype_bytes=1).activation_bytes(),
+        "cmsis_cifar_int8_bytes": planner.plan_cmsis_baseline(
+            g, io_dtype_bytes=1).activation_bytes(),
+        "dag_cifar_int8_bytes": schedule.plan_dag(
+            g, io_dtype_bytes=1).activation_bytes(),
+        "residual_naive_int8_bytes": naive.arena_bytes,
+        "residual_reordered_int8_bytes": reordered.arena_bytes,
+    }
+
+
 def speedups(rows) -> dict:
     """speedup of the compiled variant over its baseline, per path/batch."""
     base = {"kernel": "interpret", "executor": "pyloop",
@@ -293,6 +323,7 @@ def main(argv=None) -> None:
         "rows": rows,
         "speedup": speedups(rows),
         "int8": {**arena, "f32_over_int8_us": f32_vs_q8},
+        "plans": plan_table(),
     }
     Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
     for r in rows:

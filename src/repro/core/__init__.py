@@ -1,14 +1,34 @@
 """Core of the reproduction: the paper's memory-optimization system.
 
 Public API:
-  graph     — sequential layer IR + the paper's two networks
-  fusion    — §3.1 fused in-place max-pooling pass (+ §7 stride<k extension)
+  graph     — sequential + DAG layer IRs, the paper's nets + residual_cifar
+  fusion    — §3.1 fused in-place max-pooling pass (+ §7 stride<k extension,
+              DAG sole-consumer windows)
   planner   — §3.2 ping-pong / §3.3 read-only-param memory plans
-  pingpong  — arena executor (runs the net inside the planned arena)
+  schedule  — operator-reordering DAG arena planner (DESIGN.md §7)
+  pingpong  — arena executors (run the net inside the planned arena)
   nn        — pure-jnp functional oracle
-  quantize  — §5 int8 post-training quantization
+  quantize  — §5 int8 post-training quantization (+ DAG joins)
   export_c  — the paper's tool: model → C inference engine
 """
-from repro.core import export_c, fusion, graph, nn, pingpong, planner, quantize
+from repro.core import (
+    export_c,
+    fusion,
+    graph,
+    nn,
+    pingpong,
+    planner,
+    quantize,
+    schedule,
+)
 
-__all__ = ["export_c", "fusion", "graph", "nn", "pingpong", "planner", "quantize"]
+__all__ = [
+    "export_c",
+    "fusion",
+    "graph",
+    "nn",
+    "pingpong",
+    "planner",
+    "quantize",
+    "schedule",
+]

@@ -26,8 +26,12 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core import schedule as schedule_mod
 from repro.core.graph import (
+    Add,
+    Concat,
     Conv2d,
+    DAGGraph,
     Flatten,
     FusedConvPool,
     FusedLinear,
@@ -43,6 +47,15 @@ from repro.core.quantize import REQUANT_C, QuantizedModel
 
 def _ident(name: str) -> str:
     return re.sub(r"[^0-9a-zA-Z_]", "_", name)
+
+
+def _fmt_float(v: float) -> str:
+    """A valid C float literal (``%.9g`` alone renders 1.0 as ``1``, and
+    ``1f`` is not C)."""
+    s = f"{float(v):.9g}"
+    if not any(c in s for c in ".einf"):
+        s += ".0"
+    return s + "f"
 
 
 def _fmt_array(vals: np.ndarray, ctype: str, name: str) -> str:
@@ -195,6 +208,54 @@ def _relu_inplace(e, tag, *, ctype, n, off):
     e.emit(f"  }}")
 
 
+def _copy_loops(e, tag, *, ctype, n, in_off, out_off, relu):
+    """Materialized view step (ReLU/Flatten whose producer has other
+    consumers): a plain copy, optionally with the activation applied."""
+    zero = "0" if ctype != "float" else "0.0f"
+    expr = f"in[i] < {zero} ? {zero} : in[i]" if relu else "in[i]"
+    e.emit(f"  /* {tag}: {'relu copy' if relu else 'copy'} */")
+    e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
+    e.emit(f"    for (int i = 0; i < {n}; ++i) out[i] = {expr};")
+    e.emit(f"  }}")
+
+
+def _add_loops(e, tag, *, ctype, acc_type, n, in_offs, out_off, join_ms):
+    """Elementwise Add join.  Int8 (``join_ms`` set): each input requantized
+    onto the join scale, summed in int32, saturated — mirroring
+    ``quantize.requantize_join`` bit-for-bit."""
+    e.emit(f"  /* {tag}: add ({len(in_offs)} inputs) */")
+    ins = "; ".join(
+        f"const {ctype}* in{i} = arena + {off}" for i, off in enumerate(in_offs)
+    )
+    e.emit(f"  {{ {ins}; {ctype}* out = arena + {out_off};")
+    e.emit(f"    for (int i = 0; i < {n}; ++i) {{")
+    if join_ms is None:
+        expr = " + ".join(f"in{i}[i]" for i in range(len(in_offs)))
+        e.emit(f"      out[i] = {expr};")
+    else:
+        expr = " + ".join(
+            f"(int32_t)rq(in{i}[i], M_{tag}_{i})" for i in range(len(in_offs))
+        )
+        e.emit(f"      {acc_type} s = {expr};")
+        e.emit(f"      out[i] = (int8_t)(s > 127 ? 127 : (s < -128 ? -128 : s));")
+    e.emit(f"    }}")
+    e.emit(f"  }}")
+
+
+def _concat_loops(e, tag, *, ctype, seg_sizes, in_offs, out_off, join_ms):
+    """Leading-axis Concat join: one contiguous copy per input segment,
+    requantized onto the join scale in the int8 backend."""
+    e.emit(f"  /* {tag}: concat ({len(in_offs)} inputs) */")
+    e.emit(f"  {{ {ctype}* out = arena + {out_off};")
+    base = 0
+    for i, (off, n) in enumerate(zip(in_offs, seg_sizes)):
+        expr = f"in{i}[i]" if join_ms is None else f"rq(in{i}[i], M_{tag}_{i})"
+        e.emit(f"    {{ const {ctype}* in{i} = arena + {off};")
+        e.emit(f"      for (int i = 0; i < {n}; ++i) out[{base} + i] = {expr}; }}")
+        base += n
+    e.emit(f"  }}")
+
+
 def _walk_and_emit(
     graph: SequentialGraph,
     plan: MemoryPlan,
@@ -275,6 +336,142 @@ def _walk_and_emit(
     return int(np.prod(shapes[-1]))
 
 
+def _emit_step(
+    e: _Emitter,
+    step,
+    src_bufs,
+    dst_buf,
+    *,
+    ctype: str,
+    acc_type: str,
+    weights: dict,
+    requants: Optional[dict],
+    join_ms: Optional[dict],
+) -> None:
+    """Emit one materialized DAG step (op + folded views) at plan offsets."""
+    layer = step.layer
+    name = step.name
+    tag = _ident(name)
+    in_offs = [b.offset_elems for b in src_bufs]
+    out_off = dst_buf.offset_elems
+    rq = requants.get(name) if requants is not None else None
+    jm = join_ms.get(name) if join_ms is not None else None
+
+    if isinstance(layer, FusedConvPool):
+        conv = layer.conv
+        ic, ih, iw = step.in_shapes[0]
+        _, ph, pw = layer.out_shape(step.in_shapes[0])
+        _conv_pool_loops(
+            e, tag, ctype=ctype, acc_type=acc_type, ic=ic, ih=ih, iw=iw,
+            oc=conv.out_channels, k=conv.kernel_size, cs=conv.stride,
+            pad=conv.padding, ph=ph, pw=pw, pk=layer.pool_kernel,
+            ps=layer.pool_stride, in_off=in_offs[0], out_off=out_off,
+            has_bias="b" in weights[name], activation=layer.activation,
+            requant=rq,
+        )
+    elif isinstance(layer, Conv2d):
+        ic, ih, iw = step.in_shapes[0]
+        oc, oh, ow = layer.out_shape(step.in_shapes[0])
+        _conv_loops(
+            e, tag, ctype=ctype, acc_type=acc_type, ic=ic, ih=ih, iw=iw,
+            oc=oc, oh=oh, ow=ow, k=layer.kernel_size, cs=layer.stride,
+            pad=layer.padding, in_off=in_offs[0], out_off=out_off,
+            has_bias="b" in weights[name], requant=rq,
+        )
+    elif isinstance(layer, MaxPool2d):
+        c, ih, iw = step.in_shapes[0]
+        _, oh, ow = layer.out_shape(step.in_shapes[0])
+        _maxpool_loops(
+            e, tag, ctype=ctype, c=c, ih=ih, iw=iw, oh=oh, ow=ow,
+            pk=layer.kernel_size, ps=layer.stride,
+            in_off=in_offs[0], out_off=out_off,
+        )
+    elif isinstance(layer, (Linear, FusedLinear)):
+        lin = layer.linear if isinstance(layer, FusedLinear) else layer
+        _linear_loops(
+            e, tag, ctype=ctype, acc_type=acc_type, n_in=lin.in_features,
+            n_out=lin.out_features, in_off=in_offs[0], out_off=out_off,
+            has_bias="b" in weights[name],
+            relu=isinstance(layer, FusedLinear) and layer.activation == "relu",
+            requant=rq,
+        )
+    elif isinstance(layer, Add):
+        _add_loops(
+            e, tag, ctype=ctype, acc_type=acc_type,
+            n=int(np.prod(step.in_shapes[0])), in_offs=in_offs,
+            out_off=out_off, join_ms=jm,
+        )
+    elif isinstance(layer, Concat):
+        ax = len(step.in_shapes[0]) + layer.axis
+        if ax != 0:
+            raise ValueError(
+                f"{name}: C emitter requires leading-axis concat, got axis "
+                f"{layer.axis} over {step.in_shapes[0]}"
+            )
+        _concat_loops(
+            e, tag, ctype=ctype,
+            seg_sizes=[int(np.prod(s)) for s in step.in_shapes],
+            in_offs=in_offs, out_off=out_off, join_ms=jm,
+        )
+    elif isinstance(layer, (ReLU, Flatten)):
+        # materialized view: its producer has other consumers, so the value
+        # cannot be updated in place — a real copy (with activation for ReLU)
+        _copy_loops(
+            e, tag, ctype=ctype, n=int(np.prod(step.in_shapes[0])),
+            in_off=in_offs[0], out_off=out_off, relu=isinstance(layer, ReLU),
+        )
+    else:
+        raise TypeError(f"cannot emit C for DAG step {layer!r}")
+
+    # folded views: ReLU applies in place on the step's output buffer (its
+    # int8 form operates on the already-requantized value, matching
+    # quant.exec.apply_int8_node); Flatten is a no-op on a flat arena.
+    for v in step.views:
+        if isinstance(v, ReLU):
+            _relu_inplace(
+                e, f"{tag}_{_ident(v.name or 'relu')}", ctype=ctype,
+                n=dst_buf.size_elems, off=out_off,
+            )
+
+
+def _walk_and_emit_dag(
+    graph: DAGGraph,
+    plan: MemoryPlan,
+    e: _Emitter,
+    *,
+    ctype: str,
+    acc_type: str,
+    weights: dict,
+    requants: Optional[dict],
+    join_ms: Optional[dict],
+):
+    """Emit the schedule in the plan's (reordered) buffer order.
+
+    Returns the graph output's :class:`BufferAssignment`.
+    ``plan.buffers[i]`` is the buffer of schedule step *i*; the input load
+    and output store are emitted by the caller using ``buffers[0]`` / the
+    returned output buffer.
+    """
+    mat, order = schedule_mod.check_dag_plan(graph, plan)
+    steps = {s.name: s for s in mat.steps}
+    bufs = {b.name: b for b in plan.buffers}
+    in_step = steps[order[0]]
+    for v in in_step.views:
+        if isinstance(v, ReLU):
+            _relu_inplace(
+                e, _ident(v.name or "relu"), ctype=ctype,
+                n=bufs[order[0]].size_elems, off=bufs[order[0]].offset_elems,
+            )
+    for name in order[1:]:
+        step = steps[name]
+        _emit_step(
+            e, step, [bufs[s] for s in step.inputs], bufs[name],
+            ctype=ctype, acc_type=acc_type, weights=weights,
+            requants=requants, join_ms=join_ms,
+        )
+    return bufs[mat.output]
+
+
 _PREAMBLE = """\
 /* Generated by repro.core.export_c — reproduction of
  * "Efficient Neural Network Deployment for Microcontroller" (Unlu, 2020).
@@ -350,7 +547,7 @@ def generate_c_int8(
             if q.b_q is not None:
                 e.decl(_fmt_array(q.b_q, "int32_t", f"B_{tag}"))
                 weights[name]["b"] = q.b_q
-            e.decl(f"static const float M_{tag} = {q.multiplier:.9g}f;")
+            e.decl(f"static const float M_{tag} = {_fmt_float(q.multiplier)};")
             requants[name] = "rq({acc}, M_{tag})"
 
     in_elems = plan.buffers[0].size_elems
@@ -370,6 +567,106 @@ def generate_c_int8(
     src = _PREAMBLE + "\n".join(e.decls) + "\n\n" + "\n".join(e.body) + "\n"
     if with_main:
         src += _main_harness("int8_t", in_elems, out_elems)
+    return src
+
+
+def generate_c_dag(
+    graph: DAGGraph,
+    plan: MemoryPlan,
+    params,
+    with_main: bool = False,
+) -> str:
+    """Float32 C engine for a (fused) DAG and its reordered arena plan.
+
+    Steps are emitted in the plan's schedule order with interval-allocated
+    offsets; join nodes render as elementwise adds / contiguous concat
+    copies.  The engine must match ``nn.forward_dag`` on the same graph.
+    """
+    e = _Emitter()
+    weights = {}
+    for layer in graph.layers:
+        name = layer.name or layer.kind
+        if name in params:
+            tag = _ident(name)
+            w = np.asarray(params[name]["w"], np.float32)
+            e.decl(_fmt_array(w, "float", f"W_{tag}"))
+            weights[name] = {"w": w}
+            if "b" in params[name] and params[name]["b"] is not None:
+                b = np.asarray(params[name]["b"], np.float32)
+                e.decl(_fmt_array(b, "float", f"B_{tag}"))
+                weights[name]["b"] = b
+
+    in_buf = plan.buffers[0]
+    e.emit(f"static float arena[{plan.arena_elems}];")
+    e.emit("")
+    e.emit("void nn_forward(const float* input, float* output) {")
+    e.emit(f"  for (int i = 0; i < {in_buf.size_elems}; ++i) arena[{in_buf.offset_elems} + i] = input[i];")
+    out_buf = _walk_and_emit_dag(
+        graph, plan, e, ctype="float", acc_type="float", weights=weights,
+        requants=None, join_ms=None,
+    )
+    e.emit(f"  for (int i = 0; i < {out_buf.size_elems}; ++i) output[i] = arena[{out_buf.offset_elems} + i];")
+    e.emit("}")
+
+    src = _PREAMBLE + "\n".join(e.decls) + "\n\n" + "\n".join(e.body) + "\n"
+    if with_main:
+        src += _main_harness("float", in_buf.size_elems, out_buf.size_elems)
+    return src
+
+
+def generate_c_int8_dag(
+    qm: QuantizedModel,
+    plan: MemoryPlan,
+    with_main: bool = False,
+) -> str:
+    """Int8 C engine for a DAG-quantized model and its reordered plan.
+
+    Join requantization mirrors ``quantize.requantize_join`` /
+    ``requantize_concat`` (per-input f32 multiplier, round-half-to-even,
+    saturate), so the engine is bit-exact against
+    ``quantize.simulate_int8_dag_forward``.
+    """
+    graph = qm.graph
+    if not isinstance(graph, DAGGraph):
+        raise TypeError("generate_c_int8_dag expects a DAG-quantized model")
+    e = _Emitter()
+    weights = {}
+    requants = {}
+    join_ms = {}
+    for layer in graph.layers:
+        name = layer.name or layer.kind
+        tag = _ident(name)
+        if name in qm.layers:
+            q = qm.layers[name]
+            e.decl(_fmt_array(q.w_q, "int8_t", f"W_{tag}"))
+            weights[name] = {"w": q.w_q}
+            if q.b_q is not None:
+                e.decl(_fmt_array(q.b_q, "int32_t", f"B_{tag}"))
+                weights[name]["b"] = q.b_q
+            e.decl(f"static const float M_{tag} = {_fmt_float(q.multiplier)};")
+            requants[name] = "rq({acc}, M_{tag})"
+        elif name in qm.joins:
+            ms = qm.joins[name].multipliers
+            for i, m in enumerate(ms):
+                e.decl(f"static const float M_{tag}_{i} = {_fmt_float(m)};")
+            join_ms[name] = ms
+
+    in_buf = plan.buffers[0]
+    e.decl(REQUANT_C)
+    e.emit(f"static int8_t arena[{plan.arena_elems}];")
+    e.emit("")
+    e.emit("void nn_forward(const int8_t* input, int8_t* output) {")
+    e.emit(f"  for (int i = 0; i < {in_buf.size_elems}; ++i) arena[{in_buf.offset_elems} + i] = input[i];")
+    out_buf = _walk_and_emit_dag(
+        graph, plan, e, ctype="int8_t", acc_type="int32_t", weights=weights,
+        requants=requants, join_ms=join_ms,
+    )
+    e.emit(f"  for (int i = 0; i < {out_buf.size_elems}; ++i) output[i] = arena[{out_buf.offset_elems} + i];")
+    e.emit("}")
+
+    src = _PREAMBLE + "\n".join(e.decls) + "\n\n" + "\n".join(e.body) + "\n"
+    if with_main:
+        src += _main_harness("int8_t", in_buf.size_elems, out_buf.size_elems)
     return src
 
 

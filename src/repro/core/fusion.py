@@ -17,16 +17,19 @@ convolution layer").
 """
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List
 
 from repro.core.graph import (
     Conv2d,
+    DAGGraph,
     FusedConvPool,
     FusedLinear,
     Linear,
     MaxPool2d,
+    Node,
     ReLU,
     SequentialGraph,
+    as_sequential,
 )
 
 _ACTIVATIONS = {"ReLU": "relu"}
@@ -36,11 +39,13 @@ def fuse(graph: SequentialGraph, allow_line_buffer: bool = True) -> SequentialGr
     """Return a new graph with conv/act/pool and linear/act windows fused.
 
     Args:
-      graph: the unfused sequential graph.
+      graph: the unfused sequential graph (chain-shaped DAGs are normalized;
+        branching DAGs must go through :func:`fuse_dag`).
       allow_line_buffer: if True, also fuse pooling with ``stride <
         kernel_size`` using the §7 line-buffer scheme.  If False, only the
         paper's main ``stride >= kernel_size`` condition fuses (pure Alg. 1).
     """
+    graph = as_sequential(graph, caller="fusion.fuse")
     layers = list(graph.layers)
     out: List = []
     i = 0
@@ -96,12 +101,97 @@ def fuse(graph: SequentialGraph, allow_line_buffer: bool = True) -> SequentialGr
     return fused
 
 
-def rename_params(fused_graph: SequentialGraph, params: dict) -> dict:
+def fuse_dag(graph: DAGGraph, allow_line_buffer: bool = True) -> DAGGraph:
+    """DAG counterpart of :func:`fuse`: fuse conv/act/pool and linear/act
+    *chains* whose intermediate values have exactly one consumer.
+
+    A window ``Conv2d → ReLU → MaxPool2d`` (or ``Linear → ReLU``) fuses only
+    when each intermediate node is consumed solely by the next window member —
+    a branch reading the pre-pool (or pre-activation) value keeps the window
+    unfused, because fusion would destroy the value the branch needs.
+    """
+    cons = graph.consumers()
+    nodes_by_name = {n.name: n for n in graph.nodes}
+
+    def _sole_consumer(name: str, kind: str):
+        """The single consumer of ``name`` if it has kind ``kind``, else None."""
+        c = cons[name]
+        if len(c) != 1 or name == graph.output:
+            return None
+        node = nodes_by_name[c[0]]
+        return node if node.layer.kind == kind else None
+
+    consumed: set = set()   # nodes swallowed into a fused window
+    rename: Dict[str, str] = {}  # window-tail name -> fused node name
+    fused_for: Dict[str, Node] = {}  # window-head name -> fused node
+
+    for node in graph.nodes:
+        layer = node.layer
+        if isinstance(layer, Conv2d):
+            relu = _sole_consumer(node.name, "ReLU")
+            pool = relu and _sole_consumer(relu.name, "MaxPool2d")
+            if pool is None or pool.layer.padding != 0:
+                continue
+            if pool.layer.stride >= pool.layer.kernel_size:
+                line_rows = 0
+            elif allow_line_buffer:
+                line_rows = pool.layer.kernel_size - pool.layer.stride
+            else:
+                continue
+            fused_name = f"{layer.name or 'conv'}+{pool.layer.name or 'pool'}"
+            fused_for[node.name] = Node(
+                FusedConvPool(
+                    conv=layer,
+                    activation=_ACTIVATIONS[relu.layer.kind],
+                    pool_kernel=pool.layer.kernel_size,
+                    pool_stride=pool.layer.stride,
+                    line_buffer_rows=line_rows,
+                    name=fused_name,
+                ),
+                node.inputs,
+            )
+            consumed.update({relu.name, pool.name})
+            rename[pool.name] = fused_name
+        elif isinstance(layer, Linear):
+            relu = _sole_consumer(node.name, "ReLU")
+            if relu is None:
+                continue
+            fused_name = f"{layer.name or 'fc'}+{relu.layer.name or 'act'}"
+            fused_for[node.name] = Node(
+                FusedLinear(
+                    linear=layer,
+                    activation=_ACTIVATIONS[relu.layer.kind],
+                    name=fused_name,
+                ),
+                node.inputs,
+            )
+            consumed.add(relu.name)
+            rename[relu.name] = fused_name
+
+    out: List[Node] = []
+    for node in graph.nodes:
+        if node.name in consumed:
+            continue
+        if node.name in fused_for:
+            fused_node = fused_for[node.name]
+            out.append(
+                Node(fused_node.layer,
+                     tuple(rename.get(s, s) for s in fused_node.inputs))
+            )
+            continue
+        out.append(Node(node.layer, tuple(rename.get(s, s) for s in node.inputs)))
+    fused = DAGGraph(out, output=rename.get(graph.output, graph.output))
+    fused.validate()
+    return fused
+
+
+def rename_params(fused_graph, params: dict) -> dict:
     """Re-key ``params`` so fused layers find their conv/linear weights.
 
     A fused layer is named ``"{conv}+{pool}"`` / ``"{fc}+{act}"`` but carries
     the original layer's parameters; this maps each fused name to the inner
-    layer's param dict (leaving existing keys untouched).
+    layer's param dict (leaving existing keys untouched).  Works for both
+    sequential graphs and DAGs (both expose ``.layers``).
     """
     out = dict(params)
     for layer in fused_graph.layers:

@@ -1,11 +1,20 @@
-"""Sequential layer-graph IR for the paper's deployment pipeline.
+"""Layer-graph IRs for the paper's deployment pipeline.
 
 The paper ("Efficient Neural Network Deployment for Microcontroller", Unlu 2020)
 treats a network as a strictly sequential chain of layers, each producing one
-output buffer consumed by the next layer.  This module is the IR that the fusion
-pass (`repro.core.fusion`), the memory planner (`repro.core.planner`), the
-ping-pong executor (`repro.core.pingpong`) and the C exporter
-(`repro.core.export_c`) all operate on.
+output buffer consumed by the next layer — :class:`SequentialGraph`.  This
+module is the IR that the fusion pass (`repro.core.fusion`), the memory planner
+(`repro.core.planner`), the ping-pong executor (`repro.core.pingpong`) and the
+C exporter (`repro.core.export_c`) all operate on.
+
+Beyond the paper's sequential case, :class:`DAGGraph` generalizes the IR to
+directed acyclic graphs with explicit edges and multi-input join nodes
+(:class:`Add`, :class:`Concat`), the workload class where the paper's "layer
+manipulation i.e. operator reordering" lever actually pays off (Liberis & Lane
+2019).  DAGs are planned by `repro.core.schedule` (operator-reordering arena
+planner); sequential-only entry points validate their input through
+:func:`as_sequential`, which normalizes chain-shaped DAGs and raises a clear
+error on branching ones.
 
 Sizes are expressed in *elements*; the planner multiplies by dtype width.
 """
@@ -13,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 Shape = Tuple[int, ...]
 
@@ -33,6 +42,19 @@ class LayerSpec:
 
     def out_shape(self, in_shape: Shape) -> Shape:  # pragma: no cover - abstract
         raise NotImplementedError
+
+    def out_shape_multi(self, in_shapes: Sequence[Shape]) -> Shape:
+        """Output shape from *all* input shapes (DAG form).
+
+        Single-input layers delegate to :meth:`out_shape`; join nodes
+        (:class:`Add`, :class:`Concat`) override this.
+        """
+        if len(in_shapes) != 1:
+            raise ValueError(
+                f"{self.name or self.kind}: takes exactly one input, "
+                f"got {len(in_shapes)}"
+            )
+        return self.out_shape(in_shapes[0])
 
     def param_count(self) -> int:
         return 0
@@ -208,6 +230,61 @@ class OpaqueLayer(LayerSpec):
         return self.params
 
 
+@dataclasses.dataclass(frozen=True)
+class Add(LayerSpec):
+    """Elementwise sum of two or more equal-shape inputs (residual join)."""
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        raise TypeError(f"{self.name or 'Add'} is multi-input; use out_shape_multi")
+
+    def out_shape_multi(self, in_shapes: Sequence[Shape]) -> Shape:
+        if len(in_shapes) < 2:
+            raise ValueError(f"{self.name or 'Add'}: needs >= 2 inputs")
+        first = in_shapes[0]
+        if any(tuple(s) != tuple(first) for s in in_shapes[1:]):
+            raise ValueError(
+                f"{self.name or 'Add'}: all inputs must share one shape, "
+                f"got {list(in_shapes)}"
+            )
+        return tuple(first)
+
+
+@dataclasses.dataclass(frozen=True)
+class Concat(LayerSpec):
+    """Concatenation of two or more inputs along one (negative) axis.
+
+    ``axis`` is counted from the *end* of the unbatched shape so the same
+    spec applies batched and unbatched: ``-3`` is the channel axis in CHW
+    (the default), ``-1`` concatenates flat vectors.  The C emitter requires
+    the axis to be the leading (slowest-varying) axis of the unbatched
+    layout, which makes the concat a pair of contiguous copies.
+    """
+
+    axis: int = -3
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        raise TypeError(f"{self.name or 'Concat'} is multi-input; use out_shape_multi")
+
+    def out_shape_multi(self, in_shapes: Sequence[Shape]) -> Shape:
+        if len(in_shapes) < 2:
+            raise ValueError(f"{self.name or 'Concat'}: needs >= 2 inputs")
+        if self.axis >= 0:
+            raise ValueError(f"{self.name or 'Concat'}: axis must be negative (from end)")
+        first = tuple(in_shapes[0])
+        ax = len(first) + self.axis
+        if ax < 0:
+            raise ValueError(f"{self.name or 'Concat'}: axis {self.axis} out of range for {first}")
+        for s in in_shapes[1:]:
+            s = tuple(s)
+            if len(s) != len(first) or s[:ax] != first[:ax] or s[ax + 1:] != first[ax + 1:]:
+                raise ValueError(
+                    f"{self.name or 'Concat'}: shapes must agree off axis "
+                    f"{self.axis}, got {list(in_shapes)}"
+                )
+        total = sum(int(s[ax]) for s in in_shapes)
+        return first[:ax] + (total,) + first[ax + 1:]
+
+
 # Layers whose output physically aliases their input buffer (zero-copy views /
 # elementwise in-place ops).  The planner assigns them no new buffer.
 _INPLACE_KINDS = ("ReLU", "Flatten")
@@ -268,6 +345,164 @@ class SequentialGraph:
         self.shapes()  # raises on any shape mismatch
 
 
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """One DAG vertex: a layer plus the names of its producer nodes."""
+
+    layer: LayerSpec
+    inputs: Tuple[str, ...] = ()
+
+    @property
+    def name(self) -> str:
+        return self.layer.name or self.layer.kind
+
+
+@dataclasses.dataclass
+class DAGGraph:
+    """A directed acyclic layer graph with explicit edges.
+
+    ``nodes`` must be listed in a topological order (every node's inputs
+    appear earlier in the list) — that listing order is the *naive* schedule
+    the reorder search in `repro.core.schedule` improves on.  Exactly one
+    :class:`Input` node (first), unique non-empty node names, and a single
+    output node (``output`` or, by default, the last listed node).
+    """
+
+    nodes: List[Node]
+    output: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if not self.nodes or not isinstance(self.nodes[0].layer, Input):
+            raise ValueError("DAGGraph must start with an Input node")
+        seen: Dict[str, Node] = {}
+        for node in self.nodes:
+            if not isinstance(node, Node):
+                raise TypeError(f"DAGGraph nodes must be Node, got {node!r}")
+            if isinstance(node.layer, Input) and node is not self.nodes[0]:
+                raise ValueError("DAGGraph supports exactly one Input node")
+            if node.name in seen:
+                raise ValueError(f"duplicate node name {node.name!r}")
+            if isinstance(node.layer, Input) and node.inputs:
+                raise ValueError("Input node takes no inputs")
+            if not isinstance(node.layer, Input) and not node.inputs:
+                raise ValueError(f"node {node.name!r} has no inputs")
+            for src in node.inputs:
+                if src not in seen:
+                    raise ValueError(
+                        f"node {node.name!r} reads {src!r} which is not defined "
+                        f"earlier — nodes must be listed topologically"
+                    )
+            seen[node.name] = node
+        if self.output is None:
+            self.output = self.nodes[-1].name
+        elif self.output not in seen:
+            raise ValueError(f"output node {self.output!r} not in graph")
+
+    # -- structural queries --------------------------------------------------
+    @property
+    def layers(self) -> list:
+        """The node layers in listing order (shared accounting with
+        :class:`SequentialGraph`: ``init_params``/``param_count`` etc. iterate
+        ``graph.layers``)."""
+        return [n.layer for n in self.nodes]
+
+    def node(self, name: str) -> Node:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def shapes(self) -> Dict[str, Shape]:
+        """Output shape of every node, keyed by node name."""
+        out: Dict[str, Shape] = {}
+        for node in self.nodes:
+            if isinstance(node.layer, Input):
+                out[node.name] = tuple(node.layer.shape)
+            else:
+                out[node.name] = node.layer.out_shape_multi(
+                    [out[src] for src in node.inputs]
+                )
+        return out
+
+    def consumers(self) -> Dict[str, Tuple[str, ...]]:
+        """name -> names of the nodes that read it, in listing order."""
+        out: Dict[str, List[str]] = {n.name: [] for n in self.nodes}
+        for node in self.nodes:
+            for src in node.inputs:
+                out[src].append(node.name)
+        return {k: tuple(v) for k, v in out.items()}
+
+    def param_count(self) -> int:
+        return sum(layer.param_count() for layer in self.layers)
+
+    def weight_count(self) -> int:
+        return sum(layer.weight_count() for layer in self.layers)
+
+    def param_bytes(self, dtype_bytes: int = 4) -> int:
+        return self.param_count() * dtype_bytes
+
+    def validate(self) -> None:
+        shapes = self.shapes()  # raises on shape mismatch
+        cons = self.consumers()
+        dangling = [
+            n for n, c in cons.items()
+            if not c and n != self.output
+        ]
+        if dangling:
+            raise ValueError(f"nodes {dangling} have no consumer and are not the output")
+        del shapes
+
+    # -- chain interop -------------------------------------------------------
+    def is_chain(self) -> bool:
+        """True iff the DAG is a single sequential chain in listing order."""
+        for i, node in enumerate(self.nodes[1:], start=1):
+            if node.inputs != (self.nodes[i - 1].name,):
+                return False
+        return self.output == self.nodes[-1].name
+
+    def to_sequential(self) -> SequentialGraph:
+        if not self.is_chain():
+            raise ValueError(
+                f"DAGGraph with joins/branches cannot convert to SequentialGraph"
+            )
+        return SequentialGraph([n.layer for n in self.nodes])
+
+    @staticmethod
+    def from_sequential(graph: SequentialGraph) -> "DAGGraph":
+        """Lift a sequential chain into the DAG IR (names must be unique)."""
+        nodes: List[Node] = []
+        prev: Optional[str] = None
+        for layer in graph.layers:
+            node = Node(layer=layer, inputs=(prev,) if prev is not None else ())
+            nodes.append(node)
+            prev = node.name
+        return DAGGraph(nodes)
+
+
+def as_sequential(graph, *, caller: str) -> SequentialGraph:
+    """Shared validation/normalization for sequential-only entry points.
+
+    ``SequentialGraph`` passes through; a chain-shaped :class:`DAGGraph` is
+    normalized via :meth:`DAGGraph.to_sequential`; a branching DAG raises a
+    clear :class:`TypeError` pointing at the DAG planner instead of failing
+    later with an opaque shape/attribute crash.
+    """
+    if isinstance(graph, SequentialGraph):
+        return graph
+    if isinstance(graph, DAGGraph):
+        if graph.is_chain():
+            return graph.to_sequential()
+        raise TypeError(
+            f"{caller}: got a branching DAGGraph — sequential-only paths "
+            f"cannot plan/execute join nodes; use repro.core.schedule.plan_dag "
+            f"and the DAG executors instead"
+        )
+    raise TypeError(
+        f"{caller}: expected SequentialGraph (or chain DAGGraph), "
+        f"got {type(graph).__name__}"
+    )
+
+
 def lenet5() -> SequentialGraph:
     """The paper's §3 LeNet-5 (exact PyTorch layout from the paper)."""
     return SequentialGraph(
@@ -305,5 +540,40 @@ def cifar_testnet() -> SequentialGraph:
             MaxPool2d(kernel_size=2, stride=2, name="maxpool3"),
             Flatten(name="flatten"),
             Linear(512, 10, name="fc1"),
+        ]
+    )
+
+
+def residual_cifar() -> DAGGraph:
+    """A small branching CIFAR net: one Concat merge block + one Add residual.
+
+    This is the first non-sequential workload (ROADMAP): a two-branch merge
+    block whose *listing* order (projection branch first) is deliberately the
+    memory-naive one — the wide branch's 16×16×16 intermediate then coexists
+    with the projection output — so the reorder search in
+    `repro.core.schedule` has a strict win to find (run the wide branch while
+    only the block input is live, the fat-output projection last).
+    """
+    return DAGGraph(
+        [
+            Node(Input(shape=(3, 32, 32), name="input")),
+            # stem: conv+relu+pool (fuses to one FusedConvPool, (8,16,16))
+            Node(Conv2d(3, 8, kernel_size=3, padding=1, name="conv0"), ("input",)),
+            Node(ReLU(name="relu0"), ("conv0",)),
+            Node(MaxPool2d(kernel_size=2, stride=2, name="pool0"), ("relu0",)),
+            # merge block, naive listing: projection branch first
+            Node(Conv2d(8, 12, kernel_size=1, name="proj"), ("pool0",)),
+            Node(Conv2d(8, 16, kernel_size=3, padding=1, name="wide1"), ("pool0",)),
+            Node(ReLU(name="wide1_relu"), ("wide1",)),
+            Node(Conv2d(16, 4, kernel_size=3, padding=1, name="wide2"), ("wide1_relu",)),
+            Node(Concat(axis=-3, name="cat"), ("proj", "wide2")),
+            Node(MaxPool2d(kernel_size=2, stride=2, name="pool1"), ("cat",)),
+            # residual block at (16,8,8)
+            Node(Conv2d(16, 16, kernel_size=3, padding=1, name="res1"), ("pool1",)),
+            Node(ReLU(name="res1_relu"), ("res1",)),
+            Node(Add(name="add"), ("res1_relu", "pool1")),
+            Node(ReLU(name="add_relu"), ("add",)),
+            Node(Flatten(name="flatten"), ("add_relu",)),
+            Node(Linear(1024, 10, name="fc"), ("flatten",)),
         ]
     )

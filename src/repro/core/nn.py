@@ -14,7 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import (
+    Add,
+    Concat,
     Conv2d,
+    DAGGraph,
     Flatten,
     FusedConvPool,
     FusedLinear,
@@ -132,9 +135,42 @@ def apply_layer(layer, p, x: jax.Array) -> jax.Array:
     raise TypeError(f"unknown layer {layer!r}")
 
 
+def apply_node(layer, p, xs) -> jax.Array:
+    """Apply one layer to its input list (DAG form).
+
+    Join nodes (:class:`Add`, :class:`Concat`) consume all inputs;
+    single-input layers delegate to :func:`apply_layer`.
+    """
+    if isinstance(layer, Add):
+        out = xs[0]
+        for x in xs[1:]:
+            out = out + x
+        return out
+    if isinstance(layer, Concat):
+        return jnp.concatenate(list(xs), axis=layer.axis)
+    if len(xs) != 1:
+        raise ValueError(f"{layer.name or layer.kind}: expected one input, got {len(xs)}")
+    return apply_layer(layer, p, xs[0])
+
+
 def forward(graph: SequentialGraph, params: Params, x: jax.Array) -> jax.Array:
     """Functional forward pass (the oracle the arena executor is tested on)."""
     for layer in graph.layers:
         name = layer.name or layer.kind
         x = apply_layer(layer, params.get(name, {}), x)
     return x
+
+
+def forward_dag(graph: DAGGraph, params: Params, x: jax.Array) -> jax.Array:
+    """Functional DAG forward pass (the float oracle for the DAG executors)."""
+    vals: Dict[str, jax.Array] = {}
+    for node in graph.nodes:
+        if isinstance(node.layer, Input):
+            vals[node.name] = x
+            continue
+        vals[node.name] = apply_node(
+            node.layer,
+            params.get(node.name, {}),
+            [vals[src] for src in node.inputs],
+        )
+    return vals[graph.output]

@@ -36,9 +36,15 @@ from typing import Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import Input, SequentialGraph
-from repro.core.nn import Params, apply_layer
-from repro.core.planner import MemoryPlan, materialized_steps, scan_segments
+from repro.core import schedule as schedule_mod
+from repro.core.graph import DAGGraph, Input, SequentialGraph, as_sequential
+from repro.core.nn import Params, apply_layer, apply_node
+from repro.core.planner import (
+    MemoryPlan,
+    _spec_key,
+    materialized_steps,
+    scan_segments,
+)
 
 # Backends where jit buffer donation is implemented; elsewhere donating only
 # produces a warning, so we skip it.
@@ -58,6 +64,7 @@ def _prod(shape) -> int:
 def check_plan(graph: SequentialGraph, plan: MemoryPlan):
     """Shared walker/scan validation: plan buffers line up 1:1 with the
     graph's materialized layers.  Returns the materialized rows."""
+    graph = as_sequential(graph, caller="pingpong.check_plan")
     rows = [l for l in graph.layers if l.kind not in ("ReLU", "Flatten")]
     if len(rows) != len(plan.buffers):
         raise ValueError(
@@ -85,6 +92,7 @@ def run_with_arena(
     arena takes ``x``'s dtype; ``apply_layer_fn`` supplies the per-layer
     numerics (default: the float oracle).
     """
+    graph = as_sequential(graph, caller="pingpong.run_with_arena")
     check_plan(graph, plan)
 
     arena = jnp.zeros((plan.arena_elems,), dtype=x.dtype)
@@ -169,6 +177,7 @@ def make_scan_executor(
     ``apply_layer_fn`` supplies the per-layer numerics (default: the float
     oracle; the int8 runtime passes its requantizing step).
     """
+    graph = as_sequential(graph, caller="pingpong.make_scan_executor")
     check_plan(graph, plan)
     segments = scan_segments(graph)
     pre_views, steps = materialized_steps(graph)
@@ -294,6 +303,235 @@ def run_batch_with_arena(
     if xs.ndim != in_ndim + 1:
         raise ValueError(f"expected batched input (N, ...), got {xs.shape}")
     fn, stats = _cached_executor(graph, plan)
+    out = fn(params, xs)
+    stats = dict(stats)
+    stats["batch"] = int(xs.shape[0])
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
+# DAG executors (reordered schedules from repro.core.schedule)
+# ---------------------------------------------------------------------------
+
+
+# Shared walker/scan/emitter validation of (graph, plan) schedule pairs.
+check_dag_plan = schedule_mod.check_dag_plan
+
+
+def run_dag_with_arena(
+    graph: DAGGraph,
+    plan: MemoryPlan,
+    params: Params,
+    x: jax.Array,
+    *,
+    apply_node_fn=apply_node,
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """Execute a DAG inside the planned arena, in the plan's schedule order.
+
+    The DAG counterpart of :func:`run_with_arena`: every materialized buffer
+    lives at its planned offset in one flat arena, one eager dispatch per
+    step.  Deliberately unjitted — the slow oracle proving the reordered
+    schedule's offsets clobber-free (a bad interval assignment would diverge
+    from :func:`repro.core.nn.forward_dag`).
+
+    ``apply_node_fn(layer, p, xs)`` supplies the numerics (default: the
+    float oracle; the int8 runtime passes its requantizing node step).
+    """
+    mat, order = check_dag_plan(graph, plan)
+    steps = {s.name: s for s in mat.steps}
+    bufs = {b.name: b for b in plan.buffers}
+
+    arena = jnp.zeros((plan.arena_elems,), dtype=x.dtype)
+
+    in_step = steps[order[0]]
+    in_buf = bufs[order[0]]
+    if _prod(x.shape) != in_buf.size_elems:
+        raise ValueError(f"input size {x.shape} != planned {in_buf.size_elems}")
+    val = x
+    for v in in_step.views:
+        val = apply_node_fn(v, {}, [val])
+    arena = jax.lax.dynamic_update_slice(arena, val.reshape(-1), (in_buf.offset_elems,))
+
+    for name in order[1:]:
+        step = steps[name]
+        xs = []
+        for src in step.inputs:
+            sb = bufs[src]
+            v = jax.lax.dynamic_slice(arena, (sb.offset_elems,), (sb.size_elems,))
+            xs.append(v.reshape(steps[src].out_shape))
+        out = apply_node_fn(step.layer, params.get(name, {}), xs)
+        for v in step.views:
+            out = apply_node_fn(v, {}, [out])
+        dst = bufs[name]
+        if _prod(out.shape) != dst.size_elems:
+            raise ValueError(
+                f"step {name}: produced {out.shape} but plan expects "
+                f"{dst.size_elems} elements"
+            )
+        arena = jax.lax.dynamic_update_slice(
+            arena, out.reshape(-1), (dst.offset_elems,)
+        )
+
+    final = bufs[mat.output]
+    out = jax.lax.dynamic_slice(arena, (final.offset_elems,), (final.size_elems,))
+    stats = {"arena_elems": int(plan.arena_elems), "buffers": len(plan.buffers)}
+    return out.reshape(steps[mat.output].out_shape), stats
+
+
+def _dag_scan_segments(mat, order):
+    """Maximal stackable runs within a DAG schedule.
+
+    A run extends from step *i* to *i+1* iff they form a sole-consumer chain
+    (step *i+1*'s only input is step *i*, which is read by nothing else, and
+    both steps are single-input) with identical layer specs, view kinds and
+    in/out shapes — the exact condition under which the two-bank scan carry
+    of the sequential executor stays valid inside a branching graph.
+    Returns ``(start, names)`` tuples; ``start`` indexes ``order``.
+    """
+    steps = {s.name: s for s in mat.steps}
+    cons = mat.consumers()
+    runs = []
+    i = 1
+    while i < len(order):
+        names = [order[i]]
+        first = steps[order[i]]
+        while len(first.inputs) == 1:
+            j = i + len(names)
+            if j >= len(order):
+                break
+            prev, cur = steps[order[j - 1]], steps[order[j]]
+            if cur.inputs != (prev.name,) or cons[prev.name] != (cur.name,):
+                break
+            if (
+                _spec_key(cur.layer) != _spec_key(prev.layer)
+                or [v.kind for v in cur.views] != [v.kind for v in prev.views]
+                or cur.in_shapes != prev.in_shapes
+                or cur.out_shape != prev.out_shape
+            ):
+                break
+            names.append(cur.name)
+        runs.append((i, tuple(names)))
+        i += len(names)
+    return runs
+
+
+def make_dag_executor(
+    graph: DAGGraph,
+    plan: MemoryPlan,
+    *,
+    donate_input: bool = False,
+    apply_node_fn=apply_node,
+) -> Callable[[Params, jax.Array], jax.Array]:
+    """Build the jitted DAG executor for (graph, plan).
+
+    The whole schedule traces into **one** XLA program, steps in the plan's
+    (reordered) order; sole-consumer homogeneous chain runs execute as
+    ``lax.scan`` over stacked weights with the donated two-bank carry, just
+    like the sequential scan executor — join nodes and branch points are
+    unrolled.  Accepts one input (``in_shape``) or a batch
+    (``(N, *in_shape)``).
+    """
+    mat, order = check_dag_plan(graph, plan)
+    steps = {s.name: s for s in mat.steps}
+    segments = _dag_scan_segments(mat, order)
+    in_shape = tuple(graph.nodes[0].layer.shape)
+    in_elems = _prod(in_shape)
+    sizes = {b.name: b.size_elems for b in plan.buffers}
+
+    def _apply(step, p, xs):
+        out = apply_node_fn(step.layer, p, xs)
+        for v in step.views:
+            out = apply_node_fn(v, {}, [out])
+        return out
+
+    def _exec(params: Params, x: jax.Array) -> jax.Array:
+        nbatch = x.ndim - len(in_shape)
+        if nbatch not in (0, 1):
+            raise ValueError(f"input shape {x.shape} does not match {in_shape}")
+        if _prod(x.shape[nbatch:]) != in_elems:
+            raise ValueError(f"input size {x.shape} != planned {in_elems}")
+        val = x
+        for v in steps[order[0]].views:
+            val = apply_node_fn(v, {}, [val])
+        vals: Dict[str, jax.Array] = {order[0]: val}
+        for start, names in segments:
+            first = steps[names[0]]
+            if len(names) == 1:
+                xs = [vals[src] for src in first.inputs]
+                cur = _apply(first, params.get(first.name, {}), xs)
+            else:
+                cur = vals[first.inputs[0]]
+                stacked = jax.tree.map(
+                    lambda *leaves: jnp.stack(leaves),
+                    *[params.get(n, {}) for n in names],
+                )
+
+                def body(carry, p, _step=first):
+                    bank_cur, bank_prev = carry
+                    del bank_prev  # freed: this step's output lands there
+                    out = _apply(_step, p, [bank_cur])
+                    return (out, bank_cur), None
+
+                (cur, _), _ = jax.lax.scan(body, (cur, cur), stacked,
+                                           length=len(names))
+            if _prod(cur.shape[nbatch:]) != sizes[names[-1]]:
+                raise ValueError(
+                    f"segment {names}: produced {cur.shape} but plan expects "
+                    f"{sizes[names[-1]]} elements"
+                )
+            vals[names[-1]] = cur
+        return vals[mat.output]
+
+    donate = donate_input and jax.default_backend() in _DONATING_BACKENDS
+    return jax.jit(_exec, donate_argnums=(1,) if donate else ())
+
+
+# Keyed by object identity; values keep the graph/plan alive so ids stay valid.
+_DAG_EXEC_CACHE: Dict[
+    Tuple[int, int], Tuple[DAGGraph, MemoryPlan, Callable, Dict[str, int]]
+] = {}
+
+
+def _cached_dag_executor(graph: DAGGraph, plan: MemoryPlan):
+    def build():
+        mat, order = check_dag_plan(graph, plan)
+        segments = _dag_scan_segments(mat, order)
+        stats = {
+            "arena_elems": int(plan.arena_elems),
+            "buffers": len(plan.buffers),
+            "segments": len(segments),
+            "stacked_layers": sum(len(n) for _, n in segments if len(n) > 1),
+        }
+        return (graph, plan, make_dag_executor(graph, plan), stats)
+
+    hit = cache_fifo(_DAG_EXEC_CACHE, (id(graph), id(plan)), _EXEC_CACHE_MAX, build)
+    return hit[2], hit[3]
+
+
+def run_dag_with_arena_scan(
+    graph: DAGGraph,
+    plan: MemoryPlan,
+    params: Params,
+    x: jax.Array,
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """Compiled counterpart of :func:`run_dag_with_arena` (same signature).
+
+    Bit-exact against the walker — same numerics, different bookkeeping."""
+    fn, stats = _cached_dag_executor(graph, plan)
+    return fn(params, x), dict(stats)
+
+
+def run_batch_dag_with_arena(
+    graph: DAGGraph,
+    plan: MemoryPlan,
+    params: Params,
+    xs: jax.Array,  # (N, *in_shape)
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """N images through one reordered DAG plan in a single compiled dispatch."""
+    in_ndim = len(graph.nodes[0].layer.shape)
+    if xs.ndim != in_ndim + 1:
+        raise ValueError(f"expected batched input (N, ...), got {xs.shape}")
+    fn, stats = _cached_dag_executor(graph, plan)
     out = fn(params, xs)
     stats = dict(stats)
     stats["batch"] = int(xs.shape[0])

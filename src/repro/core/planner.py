@@ -30,7 +30,13 @@ import dataclasses
 from typing import List, Optional, Tuple
 
 from repro.core import fusion as fusion_pass
-from repro.core.graph import Conv2d, FusedConvPool, Input, SequentialGraph
+from repro.core.graph import (
+    Conv2d,
+    FusedConvPool,
+    Input,
+    SequentialGraph,
+    as_sequential,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,8 +87,14 @@ class MemoryPlan:
         return self.activation_bytes(db) + self.param_bytes(db)
 
 
-def _materialized(graph: SequentialGraph):
-    """(name, kind, size, scratch) for each buffer-owning layer, in order."""
+def _materialized(graph: SequentialGraph, caller: str = "planner"):
+    """(name, kind, size, scratch) for each buffer-owning layer, in order.
+
+    All sequential plan builders funnel through here, so this is the shared
+    validation/normalization point: chain-shaped DAGs are converted, branching
+    DAGs raise a clear TypeError pointing at `repro.core.schedule.plan_dag`.
+    """
+    graph = as_sequential(graph, caller=caller)
     rows = []
     shapes = graph.shapes()
     cur_shape = ()
@@ -120,7 +132,7 @@ def _buffers_unique(rows) -> Tuple[Tuple[BufferAssignment, ...], int]:
 
 
 def plan_naive(graph: SequentialGraph, io_dtype_bytes: int = 4) -> MemoryPlan:
-    rows = _materialized(graph)
+    rows = _materialized(graph, "plan_naive")
     buffers, arena = _buffers_unique(rows)
     return MemoryPlan(
         strategy="naive",
@@ -163,7 +175,7 @@ def plan_pingpong(
     ``max1 + max2`` is an upper bound on ``size(A) + size(B)``.
     """
     g = fusion_pass.fuse(graph, allow_line_buffer=allow_line_buffer) if fused else graph
-    rows = _materialized(g)
+    rows = _materialized(g, "plan_pingpong")
     sizes = [r[2] for r in rows]
     size_a = max(sizes[0::2]) if sizes[0::2] else 0
     size_b = max(sizes[1::2]) if sizes[1::2] else 0
@@ -194,7 +206,7 @@ def plan_pingpong(
 def paper_pingpong_bound(graph: SequentialGraph, fused: bool = True) -> int:
     """The paper's ``max_1st(L) + max_2nd(L)`` bound, in elements."""
     g = fusion_pass.fuse(graph) if fused else graph
-    sizes = sorted((r[2] for r in _materialized(g)), reverse=True)
+    sizes = sorted((r[2] for r in _materialized(g, "paper_pingpong_bound")), reverse=True)
     if len(sizes) == 1:
         return sizes[0]
     return sizes[0] + sizes[1]
@@ -217,7 +229,7 @@ def plan_optimal_arena(
     optimal 101).
     """
     g = fusion_pass.fuse(graph, allow_line_buffer=allow_line_buffer) if fused else graph
-    rows = _materialized(g)
+    rows = _materialized(g, "plan_optimal_arena")
     sizes = [r[2] for r in rows]
     scratches = [r[3] for r in rows]
     if len(sizes) == 1:
@@ -265,7 +277,7 @@ def plan_cmsis_baseline(graph: SequentialGraph, io_dtype_bytes: int = 1) -> Memo
     scratch is reported in elements too (already scaled by 2/io_dtype_bytes
     so that ``activation_bytes(io_dtype_bytes)`` is correct for int8 nets).
     """
-    rows = _materialized(graph)  # unfused
+    rows = _materialized(graph, "plan_cmsis_baseline")  # unfused
     sizes = sorted((r[2] for r in rows), reverse=True)
     arena = sizes[0] + (sizes[1] if len(sizes) > 1 else 0)
     im2col_int16 = 0
@@ -330,6 +342,7 @@ def materialized_steps(graph: SequentialGraph):
     its output before the next materialized layer.  Steps line up 1:1 with
     ``MemoryPlan.buffers[1:]``.
     """
+    graph = as_sequential(graph, caller="materialized_steps")
     pre_views, steps = [], []
     cur_shape: Tuple[int, ...] = ()
     for layer, shape in zip(graph.layers, graph.shapes()):
@@ -395,10 +408,25 @@ def verify_plan(plan: MemoryPlan) -> None:
     """Check that simultaneously-live buffers never overlap in the arena.
 
     Buffers i and j are simultaneously live iff their [live_from, live_until]
-    windows intersect.  Unique-bank plans trivially pass; ping-pong and
-    optimal-arena plans are genuinely checked.
+    windows intersect.  Offsets are arbitrary — the check covers the banked
+    sequential plans (ping-pong, optimal-arena) and the reordered DAG plans
+    from `repro.core.schedule` (interval-packed offsets, multi-consumer live
+    ranges) alike.  Also checks live ranges are well-formed and every buffer
+    fits inside the declared arena.
     """
     bufs = plan.buffers
+    for a in bufs:
+        if a.live_from > a.live_until or a.live_from < 0:
+            raise AssertionError(
+                f"plan {plan.strategy!r}: buffer {a.name!r} has malformed "
+                f"live range [{a.live_from}, {a.live_until}]"
+            )
+        if a.offset_elems < 0 or a.offset_elems + a.size_elems > plan.arena_elems:
+            raise AssertionError(
+                f"plan {plan.strategy!r}: buffer {a.name!r} "
+                f"[{a.offset_elems},{a.offset_elems + a.size_elems}) exceeds "
+                f"arena [0,{plan.arena_elems})"
+            )
     for i in range(len(bufs)):
         for j in range(i + 1, len(bufs)):
             a, b = bufs[i], bufs[j]
@@ -411,10 +439,6 @@ def verify_plan(plan: MemoryPlan) -> None:
                     f"plan {plan.strategy!r}: buffers {a.name!r} "
                     f"[{a.offset_elems},{a_end}) and {b.name!r} "
                     f"[{b.offset_elems},{b_end}) overlap while both live"
-                )
-            if a_end > plan.arena_elems or b_end > plan.arena_elems:
-                raise AssertionError(
-                    f"plan {plan.strategy!r}: buffer exceeds arena size"
                 )
 
 

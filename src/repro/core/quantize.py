@@ -19,7 +19,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import (
+    Add,
+    Concat,
     Conv2d,
+    DAGGraph,
     Flatten,
     FusedConvPool,
     FusedLinear,
@@ -48,10 +51,25 @@ class QuantizedLayer:
 
 
 @dataclasses.dataclass
+class QuantizedJoin:
+    """Join-node (Add/Concat) requantization: one int8→int8 multiplier per
+    input, rescaling each input's scale onto the join's output scale."""
+
+    name: str
+    in_scales: tuple
+    out_scale: float
+
+    @property
+    def multipliers(self) -> tuple:
+        return tuple(s / self.out_scale for s in self.in_scales)
+
+
+@dataclasses.dataclass
 class QuantizedModel:
-    graph: SequentialGraph
+    graph: SequentialGraph | DAGGraph
     input_scale: float
     layers: Dict[str, QuantizedLayer]
+    joins: Dict[str, QuantizedJoin] = dataclasses.field(default_factory=dict)
 
     def param_bytes(self) -> int:
         total = 0
@@ -76,6 +94,29 @@ def _calibrate_scales(graph: SequentialGraph, params, xs) -> Dict[str, float]:
     return scales
 
 
+def _quantize_layer(name: str, layer_params, in_scale: float, out_scale: float) -> QuantizedLayer:
+    """Quantize one conv/linear layer's parameters — the single definition of
+    the weight/bias scale math shared by the sequential and DAG quantizers."""
+    w = np.asarray(layer_params["w"], np.float32)
+    w_scale = max(float(np.max(np.abs(w))), 1e-8) / 127.0
+    w_q = np.clip(np.round(w / w_scale), -127, 127).astype(np.int8)
+    b = layer_params.get("b")
+    b_q = None
+    if b is not None:
+        # bias lives in the int32 accumulator scale: in_scale*w_scale
+        b_q = np.round(np.asarray(b, np.float32) / (in_scale * w_scale)).astype(
+            np.int32
+        )
+    return QuantizedLayer(
+        name=name,
+        w_q=w_q,
+        b_q=b_q,
+        w_scale=w_scale,
+        in_scale=in_scale,
+        out_scale=out_scale,
+    )
+
+
 def quantize(graph: SequentialGraph, params, calibration_x) -> QuantizedModel:
     """Quantize a (fused) graph's parameters given a calibration batch.
 
@@ -90,24 +131,7 @@ def quantize(graph: SequentialGraph, params, calibration_x) -> QuantizedModel:
         name = layer.name or layer.kind
         out_scale = act_scales[name]
         if name in params:
-            w = np.asarray(params[name]["w"], np.float32)
-            w_scale = max(float(np.max(np.abs(w))), 1e-8) / 127.0
-            w_q = np.clip(np.round(w / w_scale), -127, 127).astype(np.int8)
-            b = params[name].get("b")
-            b_q = None
-            if b is not None:
-                # bias lives in the int32 accumulator scale: in_scale*w_scale
-                b_q = np.round(np.asarray(b, np.float32) / (in_scale * w_scale)).astype(
-                    np.int32
-                )
-            layers[name] = QuantizedLayer(
-                name=name,
-                w_q=w_q,
-                b_q=b_q,
-                w_scale=w_scale,
-                in_scale=in_scale,
-                out_scale=out_scale,
-            )
+            layers[name] = _quantize_layer(name, params[name], in_scale, out_scale)
         in_scale = out_scale
     return QuantizedModel(graph=graph, input_scale=input_scale, layers=layers)
 
@@ -156,60 +180,154 @@ def _requant(acc_i32: jax.Array, in_scale: float, w_scale: float, out_scale: flo
     return requantize(acc_i32, requant_multiplier(in_scale, w_scale, out_scale))
 
 
+def requantize_join(xs_i8, multipliers) -> jax.Array:
+    """Int8 Add semantics shared by every backend: requantize each input onto
+    the output scale, sum in int32, saturate to [-128, 127].
+
+    The C emitter mirrors this exactly (per-input ``rq`` then an int32 sum
+    and clamp), so max-abs calibrated joins stay bit-identical across the
+    simulator, the arena executors and the generated engine.
+    """
+    acc = None
+    for x, m in zip(xs_i8, multipliers):
+        r = requantize(x.astype(jnp.int32), m).astype(jnp.int32)
+        acc = r if acc is None else acc + r
+    return jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+def requantize_concat(xs_i8, multipliers, axis: int) -> jax.Array:
+    """Int8 Concat: each input segment requantized onto the join scale."""
+    parts = [requantize(x.astype(jnp.int32), m) for x, m in zip(xs_i8, multipliers)]
+    return jnp.concatenate(parts, axis=axis)
+
+
 def quantize_input(qm: QuantizedModel, x: jax.Array) -> jax.Array:
     return jnp.clip(jnp.round(x / qm.input_scale), -128, 127).astype(jnp.int8)
+
+
+def quantize_dag(graph: DAGGraph, params, calibration_x) -> QuantizedModel:
+    """Quantize a (fused) DAG's parameters given a calibration batch.
+
+    Per-node symmetric scales, calibrated on the float activations in one
+    topological sweep.  Scale-preserving nodes (ReLU/Flatten/MaxPool) pass
+    their input's scale through — their int8 output really does carry the
+    producer's scale, so calibrating them separately would skew downstream
+    multipliers.  Conv/linear nodes get the paper's accumulator-scale bias +
+    requant multiplier; joins (Add/Concat) get one int8→int8 multiplier per
+    input (:class:`QuantizedJoin`).
+    """
+    input_scale = max(float(jnp.max(jnp.abs(calibration_x))), 1e-8) / 127.0
+    scales: Dict[str, float] = {}
+    vals: Dict[str, jax.Array] = {}
+    layers: Dict[str, QuantizedLayer] = {}
+    joins: Dict[str, QuantizedJoin] = {}
+
+    for node in graph.nodes:
+        name = node.name
+        if isinstance(node.layer, Input):
+            vals[name] = calibration_x
+            scales[name] = input_scale
+            continue
+        xs = [vals[src] for src in node.inputs]
+        val = nn.apply_node(node.layer, params.get(name, {}), xs)
+        vals[name] = val
+        if isinstance(node.layer, (Add, Concat)):
+            out_scale = max(float(jnp.max(jnp.abs(val))), 1e-8) / 127.0
+            joins[name] = QuantizedJoin(
+                name=name,
+                in_scales=tuple(scales[src] for src in node.inputs),
+                out_scale=out_scale,
+            )
+            scales[name] = out_scale
+            continue
+        if name not in params:
+            scales[name] = scales[node.inputs[0]]  # scale-preserving node
+            continue
+        in_scale = scales[node.inputs[0]]
+        out_scale = max(float(jnp.max(jnp.abs(val))), 1e-8) / 127.0
+        layers[name] = _quantize_layer(name, params[name], in_scale, out_scale)
+        scales[name] = out_scale
+    return QuantizedModel(
+        graph=graph, input_scale=input_scale, layers=layers, joins=joins
+    )
 
 
 def simulate_int8_forward(qm: QuantizedModel, x_q: jax.Array) -> jax.Array:
     """Run the int8 network (int8 tensors, int32 accumulation) in JAX.
 
     Returns the final layer's int8 output.  Matches the generated C engine.
+    One chain walk over the shared per-node semantics
+    (:func:`_simulate_int8_node`), so the sequential and DAG simulators
+    cannot drift.
     """
-    g = qm.graph
     x = x_q
-    for layer in g.layers:
-        name = layer.name or layer.kind
+    for layer in qm.graph.layers:
         if isinstance(layer, Input):
             continue
-        if isinstance(layer, ReLU):
-            x = jnp.maximum(x, 0)
-            continue
-        if isinstance(layer, Flatten):
-            x = x.reshape(-1) if x.ndim == 3 else x.reshape(x.shape[0], -1)
-            continue
-        if isinstance(layer, MaxPool2d):
-            x = nn.maxpool2d(x, layer.kernel_size, layer.stride)
-            continue
-        q = qm.layers[name]
-        if isinstance(layer, (Conv2d, FusedConvPool)):
-            conv = layer.conv if isinstance(layer, FusedConvPool) else layer
-            acc = jax.lax.conv_general_dilated(
-                x.astype(jnp.int32)[None] if x.ndim == 3 else x.astype(jnp.int32),
-                jnp.asarray(q.w_q, jnp.int32),
-                window_strides=(conv.stride, conv.stride),
-                padding=[(conv.padding, conv.padding)] * 2,
-                dimension_numbers=("NCHW", "OIHW", "NCHW"),
-            )
-            if x.ndim == 3:
-                acc = acc[0]
-            if q.b_q is not None:
-                bias = jnp.asarray(q.b_q, jnp.int32)
-                acc = acc + (bias[:, None, None] if acc.ndim == 3 else bias[None, :, None, None])
-            if isinstance(layer, FusedConvPool):
-                acc = jnp.maximum(acc, 0)  # relu in accumulator domain
-                y = _requant(acc, q.in_scale, q.w_scale, q.out_scale)
-                x = nn.maxpool2d(y, layer.pool_kernel, layer.pool_stride)
-            else:
-                x = _requant(acc, q.in_scale, q.w_scale, q.out_scale)
-            continue
-        if isinstance(layer, (Linear, FusedLinear)):
-            lin = layer.linear if isinstance(layer, FusedLinear) else layer
-            acc = x.astype(jnp.int32) @ jnp.asarray(q.w_q, jnp.int32).T
-            if q.b_q is not None:
-                acc = acc + jnp.asarray(q.b_q, jnp.int32)
-            if isinstance(layer, FusedLinear) and layer.activation == "relu":
-                acc = jnp.maximum(acc, 0)
-            x = _requant(acc, q.in_scale, q.w_scale, q.out_scale)
-            continue
-        raise TypeError(f"unsupported layer for int8 simulation: {layer!r}")
+        x = _simulate_int8_node(qm, layer, layer.name or layer.kind, [x])
     return x
+
+
+def _simulate_int8_node(qm: QuantizedModel, layer, name: str, xs) -> jax.Array:
+    """One node of the int8 DAG simulation (int8 tensors, int32 accumulate)."""
+    x = xs[0]
+    if isinstance(layer, ReLU):
+        return jnp.maximum(x, 0)
+    if isinstance(layer, Flatten):
+        return x.reshape(-1) if x.ndim == 3 else x.reshape(x.shape[0], -1)
+    if isinstance(layer, MaxPool2d):
+        return nn.maxpool2d(x, layer.kernel_size, layer.stride)
+    if isinstance(layer, (Add, Concat)):
+        j = qm.joins[name]
+        if isinstance(layer, Add):
+            return requantize_join(xs, j.multipliers)
+        return requantize_concat(xs, j.multipliers, axis=layer.axis)
+    q = qm.layers[name]
+    if isinstance(layer, (Conv2d, FusedConvPool)):
+        conv = layer.conv if isinstance(layer, FusedConvPool) else layer
+        acc = jax.lax.conv_general_dilated(
+            x.astype(jnp.int32)[None] if x.ndim == 3 else x.astype(jnp.int32),
+            jnp.asarray(q.w_q, jnp.int32),
+            window_strides=(conv.stride, conv.stride),
+            padding=[(conv.padding, conv.padding)] * 2,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        if x.ndim == 3:
+            acc = acc[0]
+        if q.b_q is not None:
+            bias = jnp.asarray(q.b_q, jnp.int32)
+            acc = acc + (bias[:, None, None] if acc.ndim == 3 else bias[None, :, None, None])
+        if isinstance(layer, FusedConvPool):
+            if layer.activation == "relu":
+                acc = jnp.maximum(acc, 0)
+            y = _requant(acc, q.in_scale, q.w_scale, q.out_scale)
+            return nn.maxpool2d(y, layer.pool_kernel, layer.pool_stride)
+        return _requant(acc, q.in_scale, q.w_scale, q.out_scale)
+    if isinstance(layer, (Linear, FusedLinear)):
+        acc = x.astype(jnp.int32) @ jnp.asarray(q.w_q, jnp.int32).T
+        if q.b_q is not None:
+            acc = acc + jnp.asarray(q.b_q, jnp.int32)
+        if isinstance(layer, FusedLinear) and layer.activation == "relu":
+            acc = jnp.maximum(acc, 0)
+        return _requant(acc, q.in_scale, q.w_scale, q.out_scale)
+    raise TypeError(f"unsupported layer for int8 simulation: {layer!r}")
+
+
+def simulate_int8_dag_forward(qm: QuantizedModel, x_q: jax.Array) -> jax.Array:
+    """Run the int8 DAG (int8 tensors, int32 accumulation) eagerly in JAX.
+
+    The independent slow oracle for the int8 DAG executors and the generated
+    C engine — matches both bit-for-bit.
+    """
+    g = qm.graph
+    if not isinstance(g, DAGGraph):
+        raise TypeError("simulate_int8_dag_forward expects a DAG-quantized model")
+    vals: Dict[str, jax.Array] = {}
+    for node in g.nodes:
+        if isinstance(node.layer, Input):
+            vals[node.name] = x_q
+            continue
+        vals[node.name] = _simulate_int8_node(
+            qm, node.layer, node.name, [vals[src] for src in node.inputs]
+        )
+    return vals[g.output]

@@ -10,9 +10,13 @@ The quantization *math* (scales, requantization) lives in
 """
 from repro.quant.exec import (
     apply_int8_layer,
+    apply_int8_node,
     int8_params,
     make_int8_scan_executor,
+    run_batch_int8_dag_with_arena,
     run_batch_int8_with_arena,
+    run_int8_dag_with_arena,
+    run_int8_dag_with_arena_scan,
     run_int8_with_arena,
     run_int8_with_arena_scan,
 )
@@ -20,11 +24,15 @@ from repro.quant.kernel_q8 import conv_pool_q8, fused_conv_pool_q8
 
 __all__ = [
     "apply_int8_layer",
+    "apply_int8_node",
     "conv_pool_q8",
     "fused_conv_pool_q8",
     "int8_params",
     "make_int8_scan_executor",
+    "run_batch_int8_dag_with_arena",
     "run_batch_int8_with_arena",
+    "run_int8_dag_with_arena",
+    "run_int8_dag_with_arena_scan",
     "run_int8_with_arena",
     "run_int8_with_arena_scan",
 ]

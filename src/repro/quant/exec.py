@@ -28,7 +28,10 @@ import jax.numpy as jnp
 
 from repro.core import nn, pingpong
 from repro.core.graph import (
+    Add,
+    Concat,
     Conv2d,
+    DAGGraph,
     Flatten,
     FusedConvPool,
     FusedLinear,
@@ -38,7 +41,12 @@ from repro.core.graph import (
     ReLU,
 )
 from repro.core.planner import MemoryPlan, scan_segments
-from repro.core.quantize import QuantizedModel, requantize
+from repro.core.quantize import (
+    QuantizedModel,
+    requantize,
+    requantize_concat,
+    requantize_join,
+)
 
 # Compiled int8 executors kept per (qm, plan) object pair, bounded FIFO.
 _EXEC_CACHE_MAX = 32
@@ -49,7 +57,8 @@ def int8_params(qm: QuantizedModel) -> Dict[str, Dict[str, jax.Array]]:
 
     ``w`` int8, ``b`` int32 (accumulator scale, only when present) and ``m``
     — the f32 requant multiplier — as an *array* leaf so homogeneous layer
-    runs can stack it and scan over per-layer multipliers.
+    runs can stack it and scan over per-layer multipliers.  Join nodes
+    (Add/Concat) carry ``ms``: one f32 multiplier per input.
     """
     out: Dict[str, Dict[str, jax.Array]] = {}
     for name, q in qm.layers.items():
@@ -57,6 +66,8 @@ def int8_params(qm: QuantizedModel) -> Dict[str, Dict[str, jax.Array]]:
         if q.b_q is not None:
             p["b"] = jnp.asarray(q.b_q)
         out[name] = p
+    for name, j in qm.joins.items():
+        out[name] = {"ms": jnp.asarray(j.multipliers, jnp.float32)}
     return out
 
 
@@ -106,6 +117,24 @@ def apply_int8_layer(layer, p, x: jax.Array) -> jax.Array:
             acc = jnp.maximum(acc, 0)
         return requantize(acc, p["m"])
     raise TypeError(f"unsupported layer for int8 execution: {layer!r}")
+
+
+def apply_int8_node(layer, p, xs) -> jax.Array:
+    """DAG node step with the §5 int8 semantics.
+
+    Joins requantize each int8 input onto the output scale (``p['ms']``,
+    one f32 multiplier per input) through the shared definitions in
+    ``repro.core.quantize``; single-input layers defer to
+    :func:`apply_int8_layer`.
+    """
+    if isinstance(layer, Add):
+        return requantize_join(xs, [p["ms"][i] for i in range(len(xs))])
+    if isinstance(layer, Concat):
+        return requantize_concat(xs, [p["ms"][i] for i in range(len(xs))],
+                                 axis=layer.axis)
+    if len(xs) != 1:
+        raise ValueError(f"{layer.name or layer.kind}: expected one input, got {len(xs)}")
+    return apply_int8_layer(layer, p, xs[0])
 
 
 def run_int8_with_arena(
@@ -203,6 +232,91 @@ def run_batch_int8_with_arena(
     if xs_q.ndim != in_ndim + 1:
         raise ValueError(f"expected batched input (N, ...), got {xs_q.shape}")
     fn, stats = _cached_executor(qm, plan)
+    out = fn(xs_q)
+    stats = dict(stats)
+    stats["batch"] = int(xs_q.shape[0])
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
+# Int8 DAG executors (reordered schedules, repro.core.schedule plans)
+# ---------------------------------------------------------------------------
+
+
+def run_int8_dag_with_arena(
+    qm: QuantizedModel,
+    plan: MemoryPlan,
+    x_q: jax.Array,
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """Int8 DAG walker: execute a DAG-quantized model inside a genuine int8
+    arena at the reordered plan's offsets.  The slow proof that the interval
+    allocator's offsets are clobber-free under int8 execution; must be
+    bit-exact against ``quantize.simulate_int8_dag_forward``."""
+    if x_q.dtype != jnp.int8:
+        raise TypeError(f"expected int8 input, got {x_q.dtype}")
+    if not isinstance(qm.graph, DAGGraph):
+        raise TypeError("run_int8_dag_with_arena expects a DAG-quantized model")
+    out, stats = pingpong.run_dag_with_arena(
+        qm.graph, plan, int8_params(qm), x_q, apply_node_fn=apply_int8_node
+    )
+    stats = dict(stats)
+    stats["arena_bytes"] = int(plan.arena_elems)  # int8: one byte per element
+    return out, stats
+
+
+_DAG_EXEC_CACHE: Dict[
+    Tuple[int, int], Tuple[QuantizedModel, MemoryPlan, Callable, Dict[str, int]]
+] = {}
+
+
+def _cached_dag_executor(qm: QuantizedModel, plan: MemoryPlan):
+    def build():
+        fn = pingpong.make_dag_executor(
+            qm.graph, plan, apply_node_fn=apply_int8_node
+        )
+        params = int8_params(qm)
+        stats = {
+            "arena_elems": int(plan.arena_elems),
+            "arena_bytes": int(plan.arena_elems),  # int8: 1 B per element
+            "buffers": len(plan.buffers),
+        }
+
+        def _exec(x_q: jax.Array) -> jax.Array:
+            if x_q.dtype != jnp.int8:
+                raise TypeError(f"expected int8 input, got {x_q.dtype}")
+            return fn(params, x_q)
+
+        return (qm, plan, _exec, stats)
+
+    hit = pingpong.cache_fifo(
+        _DAG_EXEC_CACHE, (id(qm), id(plan)), _EXEC_CACHE_MAX, build
+    )
+    return hit[2], hit[3]
+
+
+def run_int8_dag_with_arena_scan(
+    qm: QuantizedModel,
+    plan: MemoryPlan,
+    x_q: jax.Array,
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """Compiled counterpart of :func:`run_int8_dag_with_arena`: the whole
+    reordered schedule in one XLA program (stackable chain runs as
+    ``lax.scan``), bit-exact vs the walker and the eager DAG simulator."""
+    fn, stats = _cached_dag_executor(qm, plan)
+    return fn(x_q), dict(stats)
+
+
+def run_batch_int8_dag_with_arena(
+    qm: QuantizedModel,
+    plan: MemoryPlan,
+    xs_q: jax.Array,  # (N, *in_shape) int8
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """N quantized images through one reordered int8 DAG plan in a single
+    compiled dispatch."""
+    in_ndim = len(qm.graph.nodes[0].layer.shape)
+    if xs_q.ndim != in_ndim + 1:
+        raise ValueError(f"expected batched input (N, ...), got {xs_q.shape}")
+    fn, stats = _cached_dag_executor(qm, plan)
     out = fn(xs_q)
     stats = dict(stats)
     stats["batch"] = int(xs_q.shape[0])

@@ -6,6 +6,12 @@ Planner invariants on random sequential nets:
   * fusion never changes network output, and never increases buffer totals,
   * arena execution equals the functional oracle.
 
+Scheduler invariants on random DAGs (ISSUE 3):
+  * every order the reorder search emits is a valid topological order,
+  * its peak is ≤ the naive (listing-order) schedule's peak,
+  * the packed plan verifies and its arena is ≥ the liveness lower bound,
+  * on chain DAGs the plan never exceeds the ping-pong arena.
+
 Quantization: int8 roundtrip error bounded by scale/2 per tensor.
 Streaming CE: chunked forms equal the naive logsumexp for any shape/chunk.
 """
@@ -17,13 +23,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fusion, nn, pingpong, planner
+from repro.core import fusion, nn, pingpong, planner, schedule
 from repro.core.graph import (
+    Concat,
     Conv2d,
+    DAGGraph,
     Flatten,
     Input,
     Linear,
     MaxPool2d,
+    Node,
+    OpaqueLayer,
     ReLU,
     SequentialGraph,
 )
@@ -133,6 +143,102 @@ def test_opaque_chain_pingpong_bound(n_a, n_b, n_c, seed):
     assert opt.arena_elems == max(
         (a + b for a, b in zip(sizes, sizes[1:])), default=sizes[0]
     )
+
+
+@st.composite
+def random_dag(draw):
+    """Random branching DAGs of 1-D opaque buffers joined by Concat.
+
+    Grown from an open frontier (nodes without consumers): each action
+    extends one open node, branches off it (leaving it open for a later
+    consumer), or concat-joins two open nodes; all remaining open nodes are
+    joined at the end so the graph has a single output.
+    """
+
+    def const(n):
+        return lambda _s, n=n: (int(n),)
+
+    def size_of(shapes, name):
+        return shapes[name][0]
+
+    nodes = [Node(Input(shape=(draw(st.integers(1, 400)),), name="in"))]
+    shapes = {"in": nodes[0].layer.shape}
+    open_names = ["in"]
+    idx = 0
+    for _ in range(draw(st.integers(2, 8))):
+        can_join = len(open_names) >= 2
+        action = draw(st.sampled_from(["extend", "branch", "join"] if can_join
+                                      else ["extend", "branch"]))
+        if action == "join":
+            i, j = sorted(draw(st.permutations(range(len(open_names))))[:2])
+            a, b = open_names[i], open_names[j]
+            name = f"cat{idx}"
+            nodes.append(Node(Concat(axis=-1, name=name), (a, b)))
+            shapes[name] = (size_of(shapes, a) + size_of(shapes, b),)
+            open_names = [n for n in open_names if n not in (a, b)] + [name]
+        else:
+            src = open_names[draw(st.integers(0, len(open_names) - 1))]
+            size = draw(st.integers(1, 400))
+            name = f"op{idx}"
+            nodes.append(Node(OpaqueLayer(out_fn=const(size), name=name), (src,)))
+            shapes[name] = (size,)
+            if action == "extend":
+                open_names.remove(src)
+            open_names.append(name)
+        idx += 1
+    while len(open_names) > 1:
+        a, b = open_names[0], open_names[1]
+        name = f"cat{idx}"
+        nodes.append(Node(Concat(axis=-1, name=name), (a, b)))
+        shapes[name] = (size_of(shapes, a) + size_of(shapes, b),)
+        open_names = open_names[2:] + [name]
+        idx += 1
+    g = DAGGraph(nodes)
+    g.validate()
+    return g
+
+
+@hp.given(random_dag())
+@hp.settings(max_examples=25, deadline=None)
+def test_dag_search_orders_valid_and_never_worse_than_naive(g):
+    """Every order the reorder search emits is a valid topological order and
+    its peak is ≤ the naive (listing) schedule; packed plans verify."""
+    mat = schedule.materialize_dag(g)
+    naive = schedule.naive_order(mat)
+    best, peak = schedule.search_order(mat)
+    assert schedule.is_topological(mat, best)
+    assert peak == schedule.schedule_peak(mat, best)
+    assert peak <= schedule.schedule_peak(mat, naive)
+    for order in schedule.topological_orders(mat, limit=16):
+        assert schedule.is_topological(mat, order)
+    plan = schedule.plan_dag(g, fused=False)
+    planner.verify_plan(plan)
+    # OpaqueLayers carry no scratch, so the schedule peak is exactly the
+    # packing lower bound; the arena can only be at or above it.
+    assert plan.arena_elems >= peak
+    naive_plan = schedule.plan_dag(g, order=naive, fused=False)
+    planner.verify_plan(naive_plan)
+    assert plan.arena_elems <= naive_plan.arena_elems
+
+
+@hp.given(
+    st.lists(st.integers(1, 1000), min_size=2, max_size=12),
+)
+@hp.settings(max_examples=25, deadline=None)
+def test_plan_dag_subsumes_pingpong_on_chains(sizes):
+    """On every sequential chain the DAG planner is ≤ ping-pong bytes."""
+
+    def const(n):
+        return lambda _s, n=n: (int(n),)
+
+    layers = [Input(shape=(int(sizes[0]),), name="in")]
+    for i, s in enumerate(sizes[1:]):
+        layers.append(OpaqueLayer(out_fn=const(s), name=f"op{i}"))
+    g = SequentialGraph(layers)
+    dag_plan = schedule.plan_dag(g, fused=False)
+    pp = planner.plan_pingpong(g, fused=False)
+    planner.verify_plan(dag_plan)
+    assert dag_plan.arena_elems <= pp.arena_elems
 
 
 @hp.given(st.integers(0, 2**31 - 1))
