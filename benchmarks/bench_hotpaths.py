@@ -14,13 +14,22 @@ perf trajectory is measurable from this PR on.  For each batch size it times
 * ``executor.scan``        — the jitted scan executor, whole batch per call,
 * ``executor_q8.sim``      — the eager int8 simulator, per image,
 * ``executor_q8.scan``     — the jitted int8 scan executor, whole batch,
+* ``executor_dag.walker``  — the eager per-node DAG arena walker, per image,
+* ``executor_dag.scan``    — the compiled DAG executor (segment compiler:
+  stacked chain runs + batched isomorphic-branch scan), whole batch,
+* ``executor_dag.scan_perbranch`` — the same executor with branch batching
+  disabled (per-branch dispatch), the baseline the batched scan must beat,
+* ``executor_dag_q8.sim``  — the eager int8 DAG simulator, per image,
+* ``executor_dag_q8.scan`` — the compiled int8 DAG executor, whole batch,
 
-on the CIFAR-testnet conv1 geometry (kernels) and fused LeNet-5 with the
-ping-pong plan (executors; the int8 plan is the same plan at 1 B/elem), and
-writes ``BENCH_hotpaths.json`` including the float-vs-int8 speed and
-arena-bytes ratios plus a ``plans`` section (the §5 planner byte table and
-the residual-net naive vs reordered DAG arenas — the CI arena-regression
-guard):
+on the CIFAR-testnet conv1 geometry (kernels), fused LeNet-5 with the
+ping-pong plan (sequential executors; the int8 plan is the same plan at
+1 B/elem) and the residual CIFAR net with the reordered DAG plan (DAG
+executors), and writes ``BENCH_hotpaths.json`` including the float-vs-int8
+speed and arena-bytes ratios plus a ``plans`` section (the §5 planner byte
+table and the residual-net naive vs reordered DAG arenas — the CI
+arena-regression guard) and a ``dag`` section (segment partition stats and
+the batched-vs-per-branch ratio):
 
     PYTHONPATH=src python benchmarks/bench_hotpaths.py [--smoke] [--out PATH]
 
@@ -243,6 +252,68 @@ def bench_executor_int8(batches, *, reps: int, smoke: bool):
     return rows, arena
 
 
+def bench_executor_dag(batches, *, reps: int, smoke: bool):
+    """Residual CIFAR net through the reordered DAG plan: per-node walker vs
+    the segment-compiled scan executor (float + int8), plus the per-branch
+    dispatch baseline the batched isomorphic-branch scan must beat."""
+    from repro.core import fusion, nn, pingpong, quantize, schedule, segments
+    from repro.core.graph import residual_cifar
+    from repro.quant import exec as qexec
+
+    g = residual_cifar()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(4)))
+    plan = schedule.plan_dag(g)
+    plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+    rng = np.random.default_rng(5)
+    calib = jnp.asarray(rng.standard_normal((16, 3, 32, 32)), jnp.float32)
+    qm = quantize.quantize_dag(fused, params, calib)
+
+    scan_fn = pingpong.make_dag_executor(fused, plan)
+    perbranch_fn = pingpong.make_dag_executor(fused, plan, batch_branches=False)
+    _, _, segs = segments.segments_for_plan(fused, plan)
+
+    rows = []
+    for n in batches:
+        xs = jnp.asarray(rng.standard_normal((n, 3, 32, 32)), jnp.float32)
+        xs_q = quantize.quantize_input(
+            qm, jnp.asarray(rng.standard_normal((n, 3, 32, 32)), jnp.float32)
+        )
+
+        def walker():
+            return [pingpong.run_dag_with_arena(fused, plan, params, xs[i])[0]
+                    for i in range(n)]
+
+        def sim_q8():
+            return [quantize.simulate_int8_dag_forward(qm, xs_q[i])
+                    for i in range(n)]
+
+        rows += [
+            {"path": "executor_dag", "variant": "walker", "batch": n,
+             "us_per_call": _time_us(
+                 walker, reps=1 if smoke else max(3, reps // 5))},
+            # The two compiled variants are close (1.2-1.8x); a single smoke
+            # rep is too noisy to order them reliably, so keep a best-of-5
+            # even in smoke — both calls are ~ms-scale.
+            {"path": "executor_dag", "variant": "scan", "batch": n,
+             "us_per_call": _time_us(lambda: scan_fn(params, xs),
+                                     reps=5 if smoke else reps)},
+            {"path": "executor_dag", "variant": "scan_perbranch", "batch": n,
+             "us_per_call": _time_us(lambda: perbranch_fn(params, xs),
+                                     reps=5 if smoke else reps)},
+            {"path": "executor_dag_q8", "variant": "sim", "batch": n,
+             "us_per_call": _time_us(
+                 sim_q8, reps=1 if smoke else max(3, reps // 5))},
+            {"path": "executor_dag_q8", "variant": "scan", "batch": n,
+             "us_per_call": _time_us(
+                 lambda: qexec.run_batch_int8_dag_with_arena(qm, plan_q, xs_q)[0],
+                 reps=1 if smoke else reps)},
+        ]
+    dag = dict(segments.segment_stats(segs))
+    dag["arena_bytes_int8"] = int(plan_q.arena_bytes)
+    return rows, dag
+
+
 def plan_table() -> dict:
     """The planner's §5 arena numbers + the DAG reorder result (ISSUE 3).
 
@@ -274,9 +345,11 @@ def plan_table() -> dict:
 def speedups(rows) -> dict:
     """speedup of the compiled variant over its baseline, per path/batch."""
     base = {"kernel": "interpret", "executor": "pyloop",
-            "kernel_q8": "eager", "executor_q8": "sim"}
+            "kernel_q8": "eager", "executor_q8": "sim",
+            "executor_dag": "walker", "executor_dag_q8": "sim"}
     fast = {"kernel": "compiled", "executor": "scan",
-            "kernel_q8": "compiled", "executor_q8": "scan"}
+            "kernel_q8": "compiled", "executor_q8": "scan",
+            "executor_dag": "scan", "executor_dag_q8": "scan"}
     by = {(r["path"], r["variant"], r["batch"]): r["us_per_call"] for r in rows}
     out = {}
     for (path, variant, n), us in sorted(by.items()):
@@ -304,6 +377,8 @@ def main(argv=None) -> None:
     rows += bench_executor(batches, reps=args.reps, smoke=args.smoke)
     q8_rows, arena = bench_executor_int8(batches, reps=args.reps, smoke=args.smoke)
     rows += q8_rows
+    dag_rows, dag = bench_executor_dag(batches, reps=args.reps, smoke=args.smoke)
+    rows += dag_rows
     rows += interpret_baseline()
 
     # float-vs-int8 speed ratio per compiled path (f32 µs / int8 µs).
@@ -316,6 +391,14 @@ def main(argv=None) -> None:
             if f and q:
                 f32_vs_q8[f"{fpath}.batch{n}"] = round(f / q, 2)
 
+    # batched isomorphic-branch scan vs per-branch dispatch, per batch.
+    branch_batching = {}
+    for n in batches:
+        b, p = (by.get(("executor_dag", "scan", n)),
+                by.get(("executor_dag", "scan_perbranch", n)))
+        if b and p:
+            branch_batching[f"batch{n}"] = round(p / b, 2)
+
     result = {
         "backend": jax.default_backend(),
         "jax": jax.__version__,
@@ -323,6 +406,7 @@ def main(argv=None) -> None:
         "rows": rows,
         "speedup": speedups(rows),
         "int8": {**arena, "f32_over_int8_us": f32_vs_q8},
+        "dag": {**dag, "perbranch_over_batched_us": branch_batching},
         "plans": plan_table(),
     }
     Path(args.out).write_text(json.dumps(result, indent=2) + "\n")

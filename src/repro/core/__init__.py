@@ -6,6 +6,7 @@ Public API:
               DAG sole-consumer windows)
   planner   — §3.2 ping-pong / §3.3 read-only-param memory plans
   schedule  — operator-reordering DAG arena planner (DESIGN.md §7)
+  segments  — segment compiler: schedule → stacked/batched scan segments
   pingpong  — arena executors (run the net inside the planned arena)
   nn        — pure-jnp functional oracle
   quantize  — §5 int8 post-training quantization (+ DAG joins)
@@ -20,6 +21,7 @@ from repro.core import (
     planner,
     quantize,
     schedule,
+    segments,
 )
 
 __all__ = [
@@ -31,4 +33,5 @@ __all__ = [
     "planner",
     "quantize",
     "schedule",
+    "segments",
 ]

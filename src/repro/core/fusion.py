@@ -101,14 +101,16 @@ def fuse(graph: SequentialGraph, allow_line_buffer: bool = True) -> SequentialGr
     return fused
 
 
-def fuse_dag(graph: DAGGraph, allow_line_buffer: bool = True) -> DAGGraph:
-    """DAG counterpart of :func:`fuse`: fuse conv/act/pool and linear/act
-    *chains* whose intermediate values have exactly one consumer.
+def _iter_dag_windows(graph: DAGGraph, allow_line_buffer: bool):
+    """Yield every fuse-able window in ``graph``.
 
-    A window ``Conv2d → ReLU → MaxPool2d`` (or ``Linear → ReLU``) fuses only
-    when each intermediate node is consumed solely by the next window member —
-    a branch reading the pre-pool (or pre-activation) value keeps the window
-    unfused, because fusion would destroy the value the branch needs.
+    A window is ``(head_node, fused_node, consumed_names, tail_name)``:
+    ``head_node`` is the Conv2d/Linear the window starts at, ``fused_node``
+    the replacement, ``consumed_names`` the swallowed member nodes and
+    ``tail_name`` the window's last original node (whose consumers must be
+    re-pointed at the fused node).  Shared by :func:`fuse_dag` (applies the
+    windows) and :func:`fusion_candidates` (enumerates them for the
+    schedule-priced fusion in `repro.core.schedule`).
     """
     cons = graph.consumers()
     nodes_by_name = {n.name: n for n in graph.nodes}
@@ -120,10 +122,6 @@ def fuse_dag(graph: DAGGraph, allow_line_buffer: bool = True) -> DAGGraph:
             return None
         node = nodes_by_name[c[0]]
         return node if node.layer.kind == kind else None
-
-    consumed: set = set()   # nodes swallowed into a fused window
-    rename: Dict[str, str] = {}  # window-tail name -> fused node name
-    fused_for: Dict[str, Node] = {}  # window-head name -> fused node
 
     for node in graph.nodes:
         layer = node.layer
@@ -139,7 +137,7 @@ def fuse_dag(graph: DAGGraph, allow_line_buffer: bool = True) -> DAGGraph:
             else:
                 continue
             fused_name = f"{layer.name or 'conv'}+{pool.layer.name or 'pool'}"
-            fused_for[node.name] = Node(
+            fused_node = Node(
                 FusedConvPool(
                     conv=layer,
                     activation=_ACTIVATIONS[relu.layer.kind],
@@ -150,14 +148,13 @@ def fuse_dag(graph: DAGGraph, allow_line_buffer: bool = True) -> DAGGraph:
                 ),
                 node.inputs,
             )
-            consumed.update({relu.name, pool.name})
-            rename[pool.name] = fused_name
+            yield node, fused_node, (relu.name, pool.name), pool.name
         elif isinstance(layer, Linear):
             relu = _sole_consumer(node.name, "ReLU")
             if relu is None:
                 continue
             fused_name = f"{layer.name or 'fc'}+{relu.layer.name or 'act'}"
-            fused_for[node.name] = Node(
+            fused_node = Node(
                 FusedLinear(
                     linear=layer,
                     activation=_ACTIVATIONS[relu.layer.kind],
@@ -165,8 +162,55 @@ def fuse_dag(graph: DAGGraph, allow_line_buffer: bool = True) -> DAGGraph:
                 ),
                 node.inputs,
             )
-            consumed.add(relu.name)
-            rename[relu.name] = fused_name
+            yield node, fused_node, (relu.name,), relu.name
+
+
+def fusion_candidates(
+    graph: DAGGraph, allow_line_buffer: bool = True
+) -> tuple:
+    """``(head_name, line_buffer_rows)`` for every window :func:`fuse_dag`
+    would fuse.
+
+    The schedule-priced fusion (`repro.core.schedule.fuse_dag_priced`)
+    enumerates these, prices the windows through the planner — only the
+    ``line_buffer_rows > 0`` ones can fail to pay — and re-invokes
+    :func:`fuse_dag` with a ``window_filter`` keeping the ones that do.
+    """
+    return tuple(
+        (head.name, getattr(fused.layer, "line_buffer_rows", 0))
+        for head, fused, *_ in _iter_dag_windows(graph, allow_line_buffer)
+    )
+
+
+def fuse_dag(
+    graph: DAGGraph,
+    allow_line_buffer: bool = True,
+    window_filter=None,
+) -> DAGGraph:
+    """DAG counterpart of :func:`fuse`: fuse conv/act/pool and linear/act
+    *chains* whose intermediate values have exactly one consumer.
+
+    A window ``Conv2d → ReLU → MaxPool2d`` (or ``Linear → ReLU``) fuses only
+    when each intermediate node is consumed solely by the next window member —
+    a branch reading the pre-pool (or pre-activation) value keeps the window
+    unfused, because fusion would destroy the value the branch needs.
+
+    ``window_filter(head_name) -> bool``, when given, additionally restricts
+    which candidate windows are applied — the hook the schedule-priced
+    fusion uses to decline windows the memory plan says do not pay.
+    """
+    consumed: set = set()   # nodes swallowed into a fused window
+    rename: Dict[str, str] = {}  # window-tail name -> fused node name
+    fused_for: Dict[str, Node] = {}  # window-head name -> fused node
+
+    for head, fused_node, members, tail in _iter_dag_windows(
+        graph, allow_line_buffer
+    ):
+        if window_filter is not None and not window_filter(head.name):
+            continue
+        fused_for[head.name] = fused_node
+        consumed.update(members)
+        rename[tail] = fused_node.layer.name
 
     out: List[Node] = []
     for node in graph.nodes:

@@ -290,6 +290,27 @@ class Concat(LayerSpec):
 _INPLACE_KINDS = ("ReLU", "Flatten")
 
 
+def spec_key(layer: LayerSpec) -> LayerSpec:
+    """Layer identity modulo names — equal keys ⇒ identical specs.
+
+    Two layers with equal spec keys have the same kind and hyper-parameters
+    (hence identical parameter shapes): their weights stack along a new
+    leading axis and they can share one compiled dispatch.  This is the
+    isomorphism test the segment compiler (`repro.core.segments`) uses both
+    along chains (stacked ``lax.scan`` runs) and across branches (batched
+    isomorphic-branch scans).  The key is itself a frozen dataclass, so it
+    hashes — segment grouping can bucket layers by ``hash(spec_key(l))``.
+    """
+    stripped = dataclasses.replace(layer, name="")
+    inner = getattr(stripped, "conv", None)
+    if inner is not None:
+        stripped = dataclasses.replace(stripped, conv=dataclasses.replace(inner, name=""))
+    inner = getattr(stripped, "linear", None)
+    if inner is not None:
+        stripped = dataclasses.replace(stripped, linear=dataclasses.replace(inner, name=""))
+    return stripped
+
+
 @dataclasses.dataclass
 class SequentialGraph:
     """A strictly sequential network: ``layers[0]`` must be :class:`Input`."""
@@ -545,35 +566,54 @@ def cifar_testnet() -> SequentialGraph:
 
 
 def residual_cifar() -> DAGGraph:
-    """A small branching CIFAR net: one Concat merge block + one Add residual.
+    """A small branching CIFAR net: a Concat merge block + a two-tower
+    residual block with *isomorphic* branches.
 
-    This is the first non-sequential workload (ROADMAP): a two-branch merge
-    block whose *listing* order (projection branch first) is deliberately the
+    This is the non-sequential workload (ROADMAP): a two-branch merge block
+    whose *listing* order (projection branch first) is deliberately the
     memory-naive one — the wide branch's 16×16×16 intermediate then coexists
     with the projection output — so the reorder search in
     `repro.core.schedule` has a strict win to find (run the wide branch while
     only the block input is live, the fat-output projection last).
+
+    The residual block runs two branches with identical specs (two
+    conv+relu pairs each, weights independent): the segment compiler
+    (`repro.core.segments`) detects the isomorphism and compiles both
+    branches into one ``lax.scan`` with a batched two-bank carry instead of
+    per-branch dispatch — the DAG counterpart of the sequential
+    stacked-weight scan.
     """
-    return DAGGraph(
-        [
-            Node(Input(shape=(3, 32, 32), name="input")),
-            # stem: conv+relu+pool (fuses to one FusedConvPool, (8,16,16))
-            Node(Conv2d(3, 8, kernel_size=3, padding=1, name="conv0"), ("input",)),
-            Node(ReLU(name="relu0"), ("conv0",)),
-            Node(MaxPool2d(kernel_size=2, stride=2, name="pool0"), ("relu0",)),
-            # merge block, naive listing: projection branch first
-            Node(Conv2d(8, 12, kernel_size=1, name="proj"), ("pool0",)),
-            Node(Conv2d(8, 16, kernel_size=3, padding=1, name="wide1"), ("pool0",)),
-            Node(ReLU(name="wide1_relu"), ("wide1",)),
-            Node(Conv2d(16, 4, kernel_size=3, padding=1, name="wide2"), ("wide1_relu",)),
-            Node(Concat(axis=-3, name="cat"), ("proj", "wide2")),
-            Node(MaxPool2d(kernel_size=2, stride=2, name="pool1"), ("cat",)),
-            # residual block at (16,8,8)
-            Node(Conv2d(16, 16, kernel_size=3, padding=1, name="res1"), ("pool1",)),
-            Node(ReLU(name="res1_relu"), ("res1",)),
-            Node(Add(name="add"), ("res1_relu", "pool1")),
-            Node(ReLU(name="add_relu"), ("add",)),
-            Node(Flatten(name="flatten"), ("add_relu",)),
-            Node(Linear(1024, 10, name="fc"), ("flatten",)),
-        ]
-    )
+    nodes = [
+        Node(Input(shape=(3, 32, 32), name="input")),
+        # stem: conv+relu+pool (fuses to one FusedConvPool, (8,16,16))
+        Node(Conv2d(3, 8, kernel_size=3, padding=1, name="conv0"), ("input",)),
+        Node(ReLU(name="relu0"), ("conv0",)),
+        Node(MaxPool2d(kernel_size=2, stride=2, name="pool0"), ("relu0",)),
+        # merge block, naive listing: projection branch first
+        Node(Conv2d(8, 12, kernel_size=1, name="proj"), ("pool0",)),
+        Node(Conv2d(8, 16, kernel_size=3, padding=1, name="wide1"), ("pool0",)),
+        Node(ReLU(name="wide1_relu"), ("wide1",)),
+        Node(Conv2d(16, 4, kernel_size=3, padding=1, name="wide2"), ("wide1_relu",)),
+        Node(Concat(axis=-3, name="cat"), ("proj", "wide2")),
+        Node(MaxPool2d(kernel_size=2, stride=2, name="pool1"), ("cat",)),
+    ]
+    # residual block at (16,8,8): two isomorphic towers of two conv+relu
+    # pairs, joined with the block input by a three-way Add.
+    tails = []
+    for tower in ("a", "b"):
+        prev = "pool1"
+        for depth in (1, 2):
+            conv = f"res{depth}{tower}"
+            nodes.append(
+                Node(Conv2d(16, 16, kernel_size=3, padding=1, name=conv), (prev,))
+            )
+            nodes.append(Node(ReLU(name=f"{conv}_relu"), (conv,)))
+            prev = f"{conv}_relu"
+        tails.append(prev)
+    nodes += [
+        Node(Add(name="add"), (*tails, "pool1")),
+        Node(ReLU(name="add_relu"), ("add",)),
+        Node(Flatten(name="flatten"), ("add_relu",)),
+        Node(Linear(1024, 10, name="fc"), ("flatten",)),
+    ]
+    return DAGGraph(nodes)

@@ -10,8 +10,8 @@ Two executors share the plan-validation logic:
 
 * :func:`run_with_arena_scan` — the compiled executor (DESIGN.md §2).  The
   whole network traces into **one** XLA program: homogeneous layer runs
-  (``repro.core.planner.scan_segments``) execute as ``lax.scan`` over stacked
-  weights with a two-bank carry ``(cur, prev)``.  Each step writes the bank
+  (``repro.core.segments``, the segment compiler) execute as ``lax.scan``
+  over stacked weights with a two-bank carry ``(cur, prev)``.  Each step writes the bank
   the step before read from — with buffer donation XLA aliases the two carry
   slots onto two alternating HBM buffers, which *is* the paper's §3.2
   ping-pong discipline realized on TPU.  ``run_batch_with_arena`` pushes N
@@ -37,14 +37,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import schedule as schedule_mod
+from repro.core import segments as segments_mod
 from repro.core.graph import DAGGraph, Input, SequentialGraph, as_sequential
 from repro.core.nn import Params, apply_layer, apply_node
-from repro.core.planner import (
-    MemoryPlan,
-    _spec_key,
-    materialized_steps,
-    scan_segments,
-)
+from repro.core.planner import MemoryPlan, materialized_steps
+from repro.core.segments import cache_fifo  # shared bounded-FIFO memo
 
 # Backends where jit buffer donation is implemented; elsewhere donating only
 # produces a warning, so we skip it.
@@ -179,7 +176,7 @@ def make_scan_executor(
     """
     graph = as_sequential(graph, caller="pingpong.make_scan_executor")
     check_plan(graph, plan)
-    segments = scan_segments(graph)
+    segments = segments_mod.sequential_segments(graph)
     pre_views, steps = materialized_steps(graph)
     in_shape = tuple(graph.shapes()[0])
     in_elems = _prod(in_shape)
@@ -198,6 +195,7 @@ def make_scan_executor(
         for v in pre_views:
             cur = apply_layer_fn(v, {}, cur)
         for seg in segments:
+            names = seg.branches[0]
             first_layer, first_views = steps[seg.start][0], steps[seg.start][1]
             if not seg.stacked:
                 name = first_layer.name or first_layer.kind
@@ -209,7 +207,7 @@ def make_scan_executor(
                 # producer freed — the donated ping-pong pair.
                 stacked = jax.tree.map(
                     lambda *leaves: jnp.stack(leaves),
-                    *[params.get(n, {}) for n in seg.layer_names],
+                    *[params.get(n, {}) for n in names],
                 )
 
                 def body(carry, p, _layer=first_layer, _views=first_views):
@@ -224,26 +222,13 @@ def make_scan_executor(
             # buffers[0] is the input, so step i writes plan buffer i+1.
             if _prod(cur.shape[nbatch:]) != sizes[seg.start + seg.length]:
                 raise ValueError(
-                    f"segment {seg.layer_names}: produced {cur.shape} but plan "
+                    f"segment {names}: produced {cur.shape} but plan "
                     f"expects {sizes[seg.start + seg.length]} elements"
                 )
         return cur
 
     donate = donate_input and jax.default_backend() in _DONATING_BACKENDS
     return jax.jit(_exec, donate_argnums=(1,) if donate else ())
-
-
-def cache_fifo(cache: Dict, key, max_entries: int, build: Callable):
-    """Bounded-FIFO memo shared by the executor caches (here and
-    ``repro.quant.exec``).  The cached value must hold strong references to
-    every object whose ``id`` appears in ``key`` — that is what keeps the
-    id-based keys valid for the entry's lifetime."""
-    hit = cache.get(key)
-    if hit is None:
-        while len(cache) >= max_entries:
-            cache.pop(next(iter(cache)))
-        hit = cache[key] = build()
-    return hit
 
 
 # Keyed by object identity; values keep the graph/plan alive so ids stay
@@ -259,12 +244,11 @@ def _cached_executor(graph: SequentialGraph, plan: MemoryPlan):
     """(executor, stats) for (graph, plan), computed once per pair."""
 
     def build():
-        segments = scan_segments(graph)
+        segments = segments_mod.sequential_segments(graph)
         stats = {
             "arena_elems": int(plan.arena_elems),
             "buffers": len(plan.buffers),
-            "segments": len(segments),
-            "stacked_layers": sum(s.length for s in segments if s.stacked),
+            **segments_mod.segment_stats(segments),
         }
         return (graph, plan, make_scan_executor(graph, plan), stats)
 
@@ -378,62 +362,34 @@ def run_dag_with_arena(
     return out.reshape(steps[mat.output].out_shape), stats
 
 
-def _dag_scan_segments(mat, order):
-    """Maximal stackable runs within a DAG schedule.
-
-    A run extends from step *i* to *i+1* iff they form a sole-consumer chain
-    (step *i+1*'s only input is step *i*, which is read by nothing else, and
-    both steps are single-input) with identical layer specs, view kinds and
-    in/out shapes — the exact condition under which the two-bank scan carry
-    of the sequential executor stays valid inside a branching graph.
-    Returns ``(start, names)`` tuples; ``start`` indexes ``order``.
-    """
-    steps = {s.name: s for s in mat.steps}
-    cons = mat.consumers()
-    runs = []
-    i = 1
-    while i < len(order):
-        names = [order[i]]
-        first = steps[order[i]]
-        while len(first.inputs) == 1:
-            j = i + len(names)
-            if j >= len(order):
-                break
-            prev, cur = steps[order[j - 1]], steps[order[j]]
-            if cur.inputs != (prev.name,) or cons[prev.name] != (cur.name,):
-                break
-            if (
-                _spec_key(cur.layer) != _spec_key(prev.layer)
-                or [v.kind for v in cur.views] != [v.kind for v in prev.views]
-                or cur.in_shapes != prev.in_shapes
-                or cur.out_shape != prev.out_shape
-            ):
-                break
-            names.append(cur.name)
-        runs.append((i, tuple(names)))
-        i += len(names)
-    return runs
-
-
 def make_dag_executor(
     graph: DAGGraph,
     plan: MemoryPlan,
     *,
     donate_input: bool = False,
     apply_node_fn=apply_node,
+    batch_branches: bool = True,
 ) -> Callable[[Params, jax.Array], jax.Array]:
     """Build the jitted DAG executor for (graph, plan).
 
     The whole schedule traces into **one** XLA program, steps in the plan's
-    (reordered) order; sole-consumer homogeneous chain runs execute as
+    (reordered) order, partitioned by the segment compiler
+    (`repro.core.segments`): sole-consumer homogeneous chain runs execute as
     ``lax.scan`` over stacked weights with the donated two-bank carry, just
-    like the sequential scan executor — join nodes and branch points are
-    unrolled.  Accepts one input (``in_shape``) or a batch
-    (``(N, *in_shape)``).
+    like the sequential scan executor, and **isomorphic branches** (specs
+    identical up to weights) execute as a *single* scan with a batched
+    two-bank carry — branch inputs stacked on a leading axis, per-position
+    weights stacked ``(L, B, ...)``, outputs split back apart at the join.
+    Join nodes and heterogeneous steps are unrolled.  Accepts one input
+    (``in_shape``) or a batch (``(N, *in_shape)``).
+
+    ``batch_branches=False`` disables the isomorphic-branch batching — the
+    per-branch dispatch baseline the benchmarks compare against.
     """
-    mat, order = check_dag_plan(graph, plan)
+    mat, order, segments = segments_mod.segments_for_plan(
+        graph, plan, batch_branches=batch_branches
+    )
     steps = {s.name: s for s in mat.steps}
-    segments = _dag_scan_segments(mat, order)
     in_shape = tuple(graph.nodes[0].layer.shape)
     in_elems = _prod(in_shape)
     sizes = {b.name: b.size_elems for b in plan.buffers}
@@ -443,6 +399,12 @@ def make_dag_executor(
         for v in step.views:
             out = apply_node_fn(v, {}, [out])
         return out
+
+    def _stack_params(params, names):
+        return jax.tree.map(
+            lambda *leaves: jnp.stack(leaves),
+            *[params.get(n, {}) for n in names],
+        )
 
     def _exec(params: Params, x: jax.Array) -> jax.Array:
         nbatch = x.ndim - len(in_shape)
@@ -454,17 +416,56 @@ def make_dag_executor(
         for v in steps[order[0]].views:
             val = apply_node_fn(v, {}, [val])
         vals: Dict[str, jax.Array] = {order[0]: val}
-        for start, names in segments:
-            first = steps[names[0]]
+        for seg in segments:
+            first = steps[seg.branches[0][0]]
+            if seg.batched:
+                # Batched isomorphic branches: stack the B branch inputs on a
+                # new leading axis and run the whole group as one dispatch
+                # (L = 1) or one lax.scan with a batched two-bank carry
+                # (L > 1; the chain-run invariants guarantee a constant
+                # carry shape).  Weights stack to (L, B, ...).
+                xs = jnp.stack(
+                    [vals[steps[br[0]].inputs[0]] for br in seg.branches]
+                )
+                per_pos = [
+                    _stack_params(params, [br[j] for br in seg.branches])
+                    for j in range(seg.length)
+                ]
+                if seg.length == 1:
+                    ys = jax.vmap(
+                        lambda p, xx, _step=first: _apply(_step, p, [xx])
+                    )(per_pos[0], xs)
+                else:
+                    stacked = jax.tree.map(
+                        lambda *leaves: jnp.stack(leaves), *per_pos
+                    )
+
+                    def body(carry, p, _step=first):
+                        bank_cur, bank_prev = carry
+                        del bank_prev  # freed: this step's output lands there
+                        out = jax.vmap(
+                            lambda pp, xx: _apply(_step, pp, [xx])
+                        )(p, bank_cur)
+                        return (out, bank_cur), None
+
+                    (ys, _), _ = jax.lax.scan(body, (xs, xs), stacked,
+                                              length=seg.length)
+                for k, br in enumerate(seg.branches):
+                    tail = br[-1]
+                    if _prod(ys.shape[1 + nbatch:]) != sizes[tail]:
+                        raise ValueError(
+                            f"segment {seg.branches}: produced {ys.shape} but "
+                            f"plan expects {sizes[tail]} elements"
+                        )
+                    vals[tail] = ys[k]
+                continue
+            names = seg.branches[0]
             if len(names) == 1:
                 xs = [vals[src] for src in first.inputs]
                 cur = _apply(first, params.get(first.name, {}), xs)
             else:
                 cur = vals[first.inputs[0]]
-                stacked = jax.tree.map(
-                    lambda *leaves: jnp.stack(leaves),
-                    *[params.get(n, {}) for n in names],
-                )
+                stacked = _stack_params(params, names)
 
                 def body(carry, p, _step=first):
                     bank_cur, bank_prev = carry
@@ -494,13 +495,13 @@ _DAG_EXEC_CACHE: Dict[
 
 def _cached_dag_executor(graph: DAGGraph, plan: MemoryPlan):
     def build():
-        mat, order = check_dag_plan(graph, plan)
-        segments = _dag_scan_segments(mat, order)
+        # The segment cache makes this the same compilation the executor
+        # builder uses — computed once per (graph, plan) pair.
+        _, _, segments = segments_mod.segments_for_plan(graph, plan)
         stats = {
             "arena_elems": int(plan.arena_elems),
             "buffers": len(plan.buffers),
-            "segments": len(segments),
-            "stacked_layers": sum(len(n) for _, n in segments if len(n) > 1),
+            **segments_mod.segment_stats(segments),
         }
         return (graph, plan, make_dag_executor(graph, plan), stats)
 

@@ -321,16 +321,9 @@ class StackedRun:
         return self.length > 1
 
 
-def _spec_key(layer):
-    """Layer identity modulo names — equal keys ⇒ stackable parameters."""
-    stripped = dataclasses.replace(layer, name="")
-    inner = getattr(stripped, "conv", None)
-    if inner is not None:
-        stripped = dataclasses.replace(stripped, conv=dataclasses.replace(inner, name=""))
-    inner = getattr(stripped, "linear", None)
-    if inner is not None:
-        stripped = dataclasses.replace(stripped, linear=dataclasses.replace(inner, name=""))
-    return stripped
+# Layer identity modulo names — now the public spec-isomorphism key in
+# `repro.core.graph` (the segment compiler uses it across branches too).
+from repro.core.graph import spec_key as _spec_key  # noqa: E402
 
 
 def materialized_steps(graph: SequentialGraph):
@@ -370,37 +363,26 @@ def scan_segments(graph: SequentialGraph) -> Tuple[StackedRun, ...]:
     same run iff their layer specs (ignoring names), trailing view kinds, and
     in/out shapes all coincide.  View layers change no buffer, so a run's
     scan carry keeps a constant shape by construction.
-    """
-    _, steps = materialized_steps(graph)
 
+    Thin compatibility shim: the partition itself now lives in the segment
+    compiler (`repro.core.segments.sequential_segments`), shared with the
+    DAG executors.
+    """
+    from repro.core import segments as segments_mod
+
+    _, steps = materialized_steps(graph)
     runs: List[StackedRun] = []
-    i = 0
-    while i < len(steps):
-        layer, views, in_s, out_s = steps[i]
-        j = i + 1
-        while j < len(steps):
-            nlayer, nviews, nin, nout = steps[j]
-            if (
-                _spec_key(nlayer) != _spec_key(layer)
-                or [v.kind for v in nviews] != [v.kind for v in views]
-                or nin != in_s
-                or nout != out_s
-            ):
-                break
-            j += 1
+    for seg in segments_mod.sequential_segments(graph):
         runs.append(
             StackedRun(
-                start=i,
-                length=j - i,
-                kind=layer.kind,
-                layer_names=tuple(
-                    (steps[t][0].name or steps[t][0].kind) for t in range(i, j)
-                ),
-                in_shape=tuple(in_s),
-                out_shape=tuple(out_s),
+                start=seg.start,
+                length=seg.length,
+                kind=seg.kind,
+                layer_names=seg.branches[0],
+                in_shape=tuple(steps[seg.start][2]),
+                out_shape=tuple(steps[seg.start][3]),
             )
         )
-        i = j
     return tuple(runs)
 
 

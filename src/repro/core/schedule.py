@@ -344,7 +344,9 @@ def pack_intervals(
 ) -> Tuple[List[int], int]:
     """Assign offsets to lifetime intervals, minimizing the arena size.
 
-    Runs first-fit heuristics (by birth, by decreasing size); if neither
+    Runs first-fit heuristics (by birth, by decreasing size, by decreasing
+    size×lifetime area — the strip-packing ordering that wins when small
+    long-lived buffers must thread between large short-lived ones); if none
     reaches the liveness lower bound, a branch-and-bound placement search
     (candidate offsets: 0 and the ends of conflicting placed buffers) runs
     under an expansion ``budget``.  Returns ``(offsets, arena_elems)``.
@@ -385,10 +387,15 @@ def pack_intervals(
 
     by_birth = list(range(n))
     by_size = sorted(range(n), key=lambda i: (-sizes[i], i))
+    by_area = sorted(
+        range(n),
+        key=lambda i: (-sizes[i] * (intervals[i][1] - intervals[i][0] + 1), i),
+    )
     best_off, best_arena = first_fit(by_birth)
-    off2, arena2 = first_fit(by_size)
-    if arena2 < best_arena:
-        best_off, best_arena = off2, arena2
+    for order in (by_size, by_area):
+        off2, arena2 = first_fit(order)
+        if arena2 < best_arena:
+            best_off, best_arena = off2, arena2
     if best_arena == lb:
         return best_off, best_arena
 
@@ -485,11 +492,98 @@ def _pingpong_pack(mat: MaterializedDAG, order: Sequence[str]):
     return offsets, size_a + (max(sizes[1::2]) if sizes[1::2] else 0)
 
 
+def _priced_arena(
+    mat: MaterializedDAG, *, search_budget: int, pack_budget: int
+) -> Tuple[int, int]:
+    """``(arena_elems, scratch_elems)`` the planner would assign to ``mat``.
+
+    The pricing primitive for schedule-aware fusion: reorder-search +
+    interval-pack, no offsets kept.  ``arena + scratch`` is exactly the
+    ``total_activation_elems`` a :func:`plan_dag` plan of the same graph
+    reports.
+    """
+    order, _ = search_order(mat, budget=search_budget)
+    steps = {s.name: s for s in mat.steps}
+    death = _death_positions(mat, order)
+    pos = {name: i for i, name in enumerate(order)}
+    sizes = [steps[name].size_elems for name in order]
+    intervals = [(pos[name], death[name]) for name in order]
+    _, arena = pack_intervals(sizes, intervals, budget=pack_budget)
+    if _is_chain(mat, order):
+        # plan_dag prices the two-bank ping-pong packing on chains and keeps
+        # the smaller arena — the pricer must apply the same candidate or its
+        # cost model diverges from the plan it predicts.
+        _, pp_arena = _pingpong_pack(mat, order)
+        arena = min(arena, pp_arena)
+    return arena, max((s.scratch_elems for s in mat.steps), default=0)
+
+
+def fuse_dag_priced(
+    graph: DAGGraph,
+    *,
+    allow_line_buffer: bool = True,
+    search_budget: int = 20000,
+    pack_budget: int = 200000,
+) -> DAGGraph:
+    """Schedule-aware fusion: keep only the windows the memory plan says pay.
+
+    `repro.core.fusion.fuse_dag` fuses *every* sole-consumer window; here
+    each candidate window that could cost memory is priced through the
+    planner — reorder-search and interval-pack the graph with and without
+    the window — and declined when dropping it yields strictly fewer
+    activation elements (arena + scratch).  Only ``stride < kernel``
+    windows need pricing: a zero-scratch §3.1 window removes a buffer and
+    charges nothing, so it can never raise the plan and always stays fused
+    (and the paper nets — LeNet-5, the §5 CIFAR net, `residual_cifar` —
+    therefore plan identically to plain :func:`fuse_dag`, at no extra
+    search cost).  A line-buffer window whose conv-output elimination does
+    not lower the peak still charges its scratch — the §7 trade-off — so
+    the plan says it does not pay; windows that price equal stay fused
+    (fewer dispatches, same bytes).
+
+    Greedy single pass: windows are reconsidered against the current
+    selection in discovery order.
+    """
+    if isinstance(graph, SequentialGraph):
+        graph = DAGGraph.from_sequential(graph)
+    cands = fusion_pass.fusion_candidates(graph, allow_line_buffer=allow_line_buffer)
+    priceable = [head for head, line_rows in cands if line_rows > 0]
+    if not priceable:
+        return fusion_pass.fuse_dag(graph, allow_line_buffer=allow_line_buffer)
+
+    def price(selected) -> int:
+        g2 = fusion_pass.fuse_dag(
+            graph,
+            allow_line_buffer=allow_line_buffer,
+            window_filter=lambda head: head in selected,
+        )
+        arena, scratch = _priced_arena(
+            materialize_dag(g2),
+            search_budget=search_budget,
+            pack_budget=pack_budget,
+        )
+        return arena + scratch
+
+    selected = {head for head, _ in cands}
+    cost = price(selected)
+    for head in priceable:
+        trial_cost = price(selected - {head})
+        if trial_cost < cost:
+            selected.discard(head)
+            cost = trial_cost
+    return fusion_pass.fuse_dag(
+        graph,
+        allow_line_buffer=allow_line_buffer,
+        window_filter=lambda head: head in selected,
+    )
+
+
 def plan_dag(
     graph,
     order: Optional[Sequence[str]] = None,
     *,
     fused: bool = True,
+    schedule_priced: bool = True,
     allow_line_buffer: bool = True,
     io_dtype_bytes: int = 4,
     search_budget: int = 20000,
@@ -497,13 +591,16 @@ def plan_dag(
 ) -> MemoryPlan:
     """Operator-reordering arena plan for a DAG (or sequential) graph.
 
-    Fuses (§3.1), searches topological orders for minimum peak live memory,
-    then packs buffer lifetimes into one arena.  On chain graphs the result
-    is provably ≤ the paper's ping-pong plan: the two-bank packing is
-    computed as a fallback candidate and the smaller arena wins.
+    Fuses (§3.1, schedule-priced by default: :func:`fuse_dag_priced` asks
+    the planner whether each window pays), searches topological orders for
+    minimum peak live memory, then packs buffer lifetimes into one arena.
+    On chain graphs the result is provably ≤ the paper's ping-pong plan: the
+    two-bank packing is computed as a fallback candidate and the smaller
+    arena wins.
 
     ``order`` forces a specific schedule (must be topological over the
     materialized steps) — used to price the naive listing order and by tests.
+    ``schedule_priced=False`` reverts to fusing every sole-consumer window.
     Returns a :class:`MemoryPlan` whose ``buffers[i]`` is step *i*'s output
     buffer; executors recover the schedule from the buffer name order.
     """
@@ -513,7 +610,17 @@ def plan_dag(
         raise TypeError(
             f"plan_dag expects DAGGraph or SequentialGraph, got {type(graph).__name__}"
         )
-    g = fusion_pass.fuse_dag(graph, allow_line_buffer=allow_line_buffer) if fused else graph
+    if fused and schedule_priced:
+        g = fuse_dag_priced(
+            graph,
+            allow_line_buffer=allow_line_buffer,
+            search_budget=search_budget,
+            pack_budget=pack_budget,
+        )
+    elif fused:
+        g = fusion_pass.fuse_dag(graph, allow_line_buffer=allow_line_buffer)
+    else:
+        g = graph
     mat = materialize_dag(g)
 
     if order is None:

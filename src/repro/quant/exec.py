@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import nn, pingpong
+from repro.core import segments as segments_mod
 from repro.core.graph import (
     Add,
     Concat,
@@ -40,7 +41,7 @@ from repro.core.graph import (
     MaxPool2d,
     ReLU,
 )
-from repro.core.planner import MemoryPlan, scan_segments
+from repro.core.planner import MemoryPlan
 from repro.core.quantize import (
     QuantizedModel,
     requantize,
@@ -193,13 +194,12 @@ _EXEC_CACHE: Dict[
 
 def _cached_executor(qm: QuantizedModel, plan: MemoryPlan):
     def build():
-        segments = scan_segments(qm.graph)
+        segments = segments_mod.sequential_segments(qm.graph)
         stats = {
             "arena_elems": int(plan.arena_elems),
             "arena_bytes": int(plan.arena_elems),  # int8: 1 B per element
             "buffers": len(plan.buffers),
-            "segments": len(segments),
-            "stacked_layers": sum(s.length for s in segments if s.stacked),
+            **segments_mod.segment_stats(segments),
         }
         return (qm, plan, make_int8_scan_executor(qm, plan), stats)
 
@@ -275,10 +275,13 @@ def _cached_dag_executor(qm: QuantizedModel, plan: MemoryPlan):
             qm.graph, plan, apply_node_fn=apply_int8_node
         )
         params = int8_params(qm)
+        # Same cached compilation the executor builder above just used.
+        _, _, segments = segments_mod.segments_for_plan(qm.graph, plan)
         stats = {
             "arena_elems": int(plan.arena_elems),
             "arena_bytes": int(plan.arena_elems),  # int8: 1 B per element
             "buffers": len(plan.buffers),
+            **segments_mod.segment_stats(segments),
         }
 
         def _exec(x_q: jax.Array) -> jax.Array:

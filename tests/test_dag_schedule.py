@@ -256,11 +256,13 @@ def test_dag_scan_stacks_homogeneous_chain_runs():
     nodes.append(Node(Add(name="add"), (prev, "c2")))
     g = DAGGraph(nodes)
     # c2 feeds both c3 and add, so only c0->c1->c2 can run as one segment
+    from repro.core import segments as segments_mod
+
     mat = schedule.materialize_dag(g)
     plan = schedule.plan_dag(g, fused=False)
-    segs = pingpong._dag_scan_segments(mat, tuple(b.name for b in plan.buffers))
-    stacked = [names for _, names in segs if len(names) > 1]
-    assert stacked and max(len(n) for n in stacked) >= 2
+    segs = segments_mod.compile_segments(mat, tuple(b.name for b in plan.buffers))
+    stacked = [s for s in segs if s.stacked]
+    assert stacked and max(s.length for s in stacked) >= 2
     params = nn.init_params(g, jax.random.PRNGKey(2))
     x = jax.random.normal(jax.random.PRNGKey(3), (3, 8, 8))
     y_ref = nn.forward_dag(g, params, x)

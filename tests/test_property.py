@@ -12,6 +12,12 @@ Scheduler invariants on random DAGs (ISSUE 3):
   * the packed plan verifies and its arena is ≥ the liveness lower bound,
   * on chain DAGs the plan never exceeds the ping-pong arena.
 
+Segment-compiler invariants on random branching conv DAGs (ISSUE 4):
+  * segments cover the schedule exactly once,
+  * isomorphic-branch detection never merges branches with differing specs,
+  * the batched-branch scan matches `nn.forward_dag` (float, fp tolerance)
+    and `simulate_int8_dag_forward` (int8, bit-exact).
+
 Quantization: int8 roundtrip error bounded by scale/2 per tensor.
 Streaming CE: chunked forms equal the naive logsumexp for any shape/chunk.
 """
@@ -239,6 +245,87 @@ def test_plan_dag_subsumes_pingpong_on_chains(sizes):
     pp = planner.plan_pingpong(g, fused=False)
     planner.verify_plan(dag_plan)
     assert dag_plan.arena_elems <= pp.arena_elems
+
+
+@st.composite
+def random_branchy_convnet(draw):
+    """Random branching conv DAGs with sometimes-isomorphic branches.
+
+    A stem feeds B branches; each branch is a chain of convs whose specs are
+    drawn from a small pool, so some branch pairs are spec-identical (and
+    must batch) while others differ (and must never merge).  All convs are
+    channel- and shape-preserving, so any branch combination joins cleanly.
+    """
+    c = draw(st.sampled_from([2, 4]))
+    h = draw(st.sampled_from([6, 8]))
+    specs = [(3, True), (3, False), (5, True)]  # (kernel, trailing relu)
+    n_branches = draw(st.integers(2, 3))
+    length = draw(st.integers(1, 2))
+    nodes = [Node(Input(shape=(c, h, h), name="input"))]
+    tails = []
+    for b in range(n_branches):
+        prev = "input"
+        for j in range(length):
+            k, relu = specs[draw(st.integers(0, len(specs) - 1))]
+            name = f"b{b}c{j}"
+            nodes.append(
+                Node(Conv2d(c, c, kernel_size=k, padding=k // 2, name=name),
+                     (prev,))
+            )
+            prev = name
+            if relu:
+                nodes.append(Node(ReLU(name=f"{name}_relu"), (prev,)))
+                prev = f"{name}_relu"
+        tails.append(prev)
+    if draw(st.booleans()):
+        nodes.append(Node(Add(name="join"), tuple(tails)))
+    else:
+        nodes.append(Node(Concat(axis=-3, name="join"), tuple(tails)))
+    g = DAGGraph(nodes)
+    g.validate()
+    return g
+
+
+@hp.given(random_branchy_convnet(), st.integers(0, 2**31 - 1))
+@hp.settings(max_examples=10, deadline=None)
+def test_segment_compiler_on_random_branching_dags(g, seed):
+    from repro.core import quantize, segments
+    from repro.core.graph import spec_key
+    from repro.quant import exec as qexec
+
+    plan = schedule.plan_dag(g, fused=False)
+    planner.verify_plan(plan)
+    mat, order, segs = segments.segments_for_plan(g, plan)
+    steps = {s.name: s for s in mat.steps}
+    # exact cover of the schedule
+    assert [n for s in segs for n in s.names] == list(order[1:])
+    # batched groups are isomorphic position-wise: differing specs never merge
+    for seg in segs:
+        for br in seg.branches[1:]:
+            for a, b in zip(seg.branches[0], br):
+                assert spec_key(steps[a].layer) == spec_key(steps[b].layer)
+                assert [v.kind for v in steps[a].views] == \
+                    [v.kind for v in steps[b].views]
+                assert steps[a].in_shapes == steps[b].in_shapes
+                assert steps[a].out_shape == steps[b].out_shape
+
+    params = nn.init_params(g, jax.random.PRNGKey(seed % 2**31))
+    x = jax.random.normal(jax.random.PRNGKey((seed + 1) % 2**31),
+                          g.nodes[0].layer.shape)
+    y_ref = nn.forward_dag(g, params, x)
+    y_scan, _ = pingpong.run_dag_with_arena_scan(g, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_scan),
+                               rtol=1e-5, atol=1e-5)
+
+    # int8: batched-branch scan is bit-exact vs the eager DAG simulator
+    calib = jax.random.normal(jax.random.PRNGKey((seed + 2) % 2**31),
+                              (4,) + tuple(g.nodes[0].layer.shape))
+    qm = quantize.quantize_dag(g, params, calib)
+    plan_q = schedule.plan_dag(g, fused=False, io_dtype_bytes=1)
+    x_q = quantize.quantize_input(qm, x)
+    y_sim = np.asarray(quantize.simulate_int8_dag_forward(qm, x_q))
+    y_qscan, _ = qexec.run_int8_dag_with_arena_scan(qm, plan_q, x_q)
+    np.testing.assert_array_equal(np.asarray(y_qscan), y_sim)
 
 
 @hp.given(st.integers(0, 2**31 - 1))

@@ -1,0 +1,300 @@
+"""Segment compiler + schedule-priced fusion (ISSUE 4).
+
+Covers the acceptance criteria:
+  * the segment compiler partitions a scheduled DAG into single steps,
+    stacked chain runs and batched isomorphic-branch groups that cover the
+    schedule exactly once,
+  * isomorphic-branch detection never merges branches with differing specs,
+  * the batched-branch scan executor matches the eager oracles — float
+    within fp tolerance, int8 bit-for-bit — with branch batching on and off,
+  * the sequential executors ride the same compiler (planner.scan_segments
+    is a shim over it),
+  * schedule-priced fusion declines windows that do not pay and preserves
+    the paper-byte baselines where every window pays.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusion, nn, pingpong, planner, quantize, schedule, segments
+from repro.core.graph import (
+    Add,
+    Concat,
+    Conv2d,
+    DAGGraph,
+    Flatten,
+    Input,
+    Linear,
+    MaxPool2d,
+    Node,
+    ReLU,
+    SequentialGraph,
+    cifar_testnet,
+    lenet5,
+    residual_cifar,
+    spec_key,
+)
+
+
+@pytest.fixture(scope="module")
+def residual_setup():
+    g = residual_cifar()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    plan = schedule.plan_dag(g)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32, 32))
+    return g, fused, params, plan, x
+
+
+# ---------------------------------------------------------------------------
+# Partition structure
+# ---------------------------------------------------------------------------
+
+
+def test_segments_cover_schedule_exactly_once(residual_setup):
+    g, fused, params, plan, x = residual_setup
+    mat, order, segs = segments.segments_for_plan(fused, plan)
+    flat = [n for s in segs for n in s.names]
+    assert flat == list(order[1:])  # order[0] is the input step
+
+
+def test_residual_towers_batch_into_one_segment(residual_setup):
+    g, fused, params, plan, x = residual_setup
+    _, _, segs = segments.segments_for_plan(fused, plan)
+    batched = [s for s in segs if s.batched]
+    assert len(batched) == 1
+    (seg,) = batched
+    assert seg.n_branches == 2 and seg.length == 2 and seg.kind == "Conv2d"
+    assert sorted(br[0][:4] for br in seg.branches) == ["res1", "res1"]
+    # the executor stats report the same partition
+    _, stats = pingpong.run_dag_with_arena_scan(fused, plan, params, x)
+    assert stats["batched_branches"] == 2
+    assert stats["stacked_layers"] == 4
+
+
+def test_batched_branches_always_isomorphic(residual_setup):
+    g, fused, params, plan, x = residual_setup
+    mat, _, segs = segments.segments_for_plan(fused, plan)
+    steps = {s.name: s for s in mat.steps}
+    for seg in segs:
+        for br in seg.branches[1:]:
+            for a, b in zip(seg.branches[0], br):
+                assert spec_key(steps[a].layer) == spec_key(steps[b].layer)
+                assert steps[a].out_shape == steps[b].out_shape
+                assert steps[a].in_shapes == steps[b].in_shapes
+
+
+def _two_branch_dag(spec_a: Conv2d, spec_b: Conv2d) -> DAGGraph:
+    return DAGGraph(
+        [
+            Node(Input(shape=(4, 8, 8), name="input")),
+            Node(spec_a, ("input",)),
+            Node(spec_b, ("input",)),
+            Node(Concat(axis=-3, name="cat"), (spec_a.name, spec_b.name)),
+        ]
+    )
+
+
+def test_differing_specs_never_merge():
+    """Branches that differ in any hyper-parameter stay separate segments."""
+    base = dict(kernel_size=3, padding=1)
+    a = Conv2d(4, 4, name="a", **base)
+    for b in (
+        Conv2d(4, 6, name="b", **base),          # out_channels differ
+        Conv2d(4, 4, kernel_size=5, padding=2, name="b"),  # kernel differs
+        Conv2d(4, 4, bias=False, name="b", **base),        # bias differs
+    ):
+        g = _two_branch_dag(a, b)
+        plan = schedule.plan_dag(g, fused=False)
+        mat, order, segs = segments.segments_for_plan(g, plan)
+        assert all(not s.batched for s in segs), (b, segs)
+    # identical specs (differing only by name) do merge
+    g = _two_branch_dag(a, Conv2d(4, 4, name="b", **base))
+    plan = schedule.plan_dag(g, fused=False)
+    _, _, segs = segments.segments_for_plan(g, plan)
+    assert any(s.batched for s in segs)
+
+
+def test_dependent_runs_do_not_batch():
+    """A 'branch' that reads another branch's output cannot run batched."""
+    a = Conv2d(4, 4, kernel_size=3, padding=1, name="a")
+    b = Conv2d(4, 4, kernel_size=3, padding=1, name="b")
+    g = DAGGraph(
+        [
+            Node(Input(shape=(4, 8, 8), name="input")),
+            Node(a, ("input",)),
+            Node(b, ("a",)),
+            Node(Add(name="add"), ("a", "b")),
+        ]
+    )
+    plan = schedule.plan_dag(g, fused=False)
+    _, _, segs = segments.segments_for_plan(g, plan)
+    assert all(not s.batched for s in segs)
+    # a feeds both b and add, so (a, b) is not a chain run either
+    assert all(not s.stacked for s in segs)
+
+
+def test_sequential_segments_back_compat():
+    """planner.scan_segments is a shim over the segment compiler."""
+    fused = fusion.fuse(lenet5())
+    runs = planner.scan_segments(fused)
+    segs = segments.sequential_segments(fused)
+    assert [(r.kind, r.length, r.layer_names) for r in runs] == [
+        (s.kind, s.length, s.branches[0]) for s in segs
+    ]
+    assert all(not s.batched for s in segs)
+
+
+# ---------------------------------------------------------------------------
+# Batched-branch executors: float + int8, vs the eager oracles
+# ---------------------------------------------------------------------------
+
+
+def test_batched_branch_scan_matches_oracles(residual_setup):
+    g, fused, params, plan, x = residual_setup
+    y_ref = nn.forward_dag(fused, params, x)
+    y_walk, _ = pingpong.run_dag_with_arena(fused, plan, params, x)
+    y_scan, _ = pingpong.run_dag_with_arena_scan(fused, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_scan),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_walk), np.asarray(y_scan),
+                               rtol=1e-5, atol=1e-6)
+    # per-branch dispatch (batching off) computes the same numbers
+    fn_pb = pingpong.make_dag_executor(fused, plan, batch_branches=False)
+    np.testing.assert_allclose(np.asarray(fn_pb(params, x)),
+                               np.asarray(y_scan), rtol=1e-5, atol=1e-6)
+    # batched input
+    xs = jax.random.normal(jax.random.PRNGKey(7), (3, 3, 32, 32))
+    yb, _ = pingpong.run_batch_dag_with_arena(fused, plan, params, xs)
+    yv = jax.vmap(lambda im: nn.forward_dag(fused, params, im))(xs)
+    np.testing.assert_allclose(np.asarray(yb), np.asarray(yv),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batched_branch_scan_int8_bit_exact(residual_setup):
+    from repro.quant import exec as qexec
+
+    g, fused, params, plan, x = residual_setup
+    calib = jax.random.normal(jax.random.PRNGKey(4), (8, 3, 32, 32))
+    qm = quantize.quantize_dag(fused, params, calib)
+    plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+    x_q = quantize.quantize_input(qm, x)
+    y_sim = np.asarray(quantize.simulate_int8_dag_forward(qm, x_q))
+    y_scan, stats = qexec.run_int8_dag_with_arena_scan(qm, plan_q, x_q)
+    np.testing.assert_array_equal(np.asarray(y_scan), y_sim)
+    assert stats["batched_branches"] == 2
+    fn_pb = pingpong.make_dag_executor(
+        qm.graph, plan_q, apply_node_fn=qexec.apply_int8_node,
+        batch_branches=False,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fn_pb(qexec.int8_params(qm), x_q)), y_sim
+    )
+
+
+def test_single_step_isomorphic_branches_batch():
+    """Length-1 branches batch as one vmapped dispatch (no scan carry),
+    including shape-changing specs where in_shape != out_shape."""
+    a = Conv2d(4, 6, kernel_size=3, name="a")  # (4,8,8) -> (6,6,6)
+    b = Conv2d(4, 6, kernel_size=3, name="b")
+    g = _two_branch_dag(a, b)
+    plan = schedule.plan_dag(g, fused=False)
+    _, _, segs = segments.segments_for_plan(g, plan)
+    (seg,) = [s for s in segs if s.batched]
+    assert seg.length == 1 and seg.n_branches == 2
+    params = nn.init_params(g, jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 8, 8))
+    y_ref = nn.forward_dag(g, params, x)
+    y_scan, _ = pingpong.run_dag_with_arena_scan(g, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_scan),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_three_way_branches_batch():
+    convs = [Conv2d(4, 4, kernel_size=3, padding=1, name=f"t{i}") for i in range(3)]
+    g = DAGGraph(
+        [Node(Input(shape=(4, 8, 8), name="input"))]
+        + [Node(c, ("input",)) for c in convs]
+        + [Node(Add(name="add"), tuple(c.name for c in convs))]
+    )
+    plan = schedule.plan_dag(g, fused=False)
+    _, _, segs = segments.segments_for_plan(g, plan)
+    (seg,) = [s for s in segs if s.batched]
+    assert seg.n_branches == 3
+    params = nn.init_params(g, jax.random.PRNGKey(8))
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 8, 8))
+    y_ref = nn.forward_dag(g, params, x)
+    y_scan, _ = pingpong.run_dag_with_arena_scan(g, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_scan),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Schedule-priced fusion
+# ---------------------------------------------------------------------------
+
+
+def _line_buffer_net() -> SequentialGraph:
+    """The §7 trade-off case: the peak lives in the linear pair, so fusing
+    the stride<kernel pool only charges its line-buffer scratch."""
+    return SequentialGraph(
+        [
+            Input(shape=(2, 12, 12), name="input"),
+            Conv2d(2, 2, kernel_size=3, padding=1, name="conv"),
+            ReLU(name="relu"),
+            MaxPool2d(kernel_size=2, stride=1, name="pool"),
+            Flatten(name="flatten"),
+            Linear(2 * 11 * 11, 512, name="fc1"),
+            ReLU(name="fc1_relu"),
+            Linear(512, 4, name="fc2"),
+        ]
+    )
+
+
+def test_priced_fusion_declines_non_paying_line_buffer():
+    g = _line_buffer_net()
+    plain = schedule.plan_dag(g, schedule_priced=False)
+    priced = schedule.plan_dag(g)
+    assert plain.scratch_elems > 0  # the line-buffer window fused
+    assert priced.scratch_elems == 0  # ...and was declined by pricing
+    assert priced.total_activation_elems < plain.total_activation_elems
+    # the linear window still pays and stays fused
+    assert any("fc1+" in b.name for b in priced.buffers)
+    assert all("conv+" not in b.name for b in priced.buffers)
+    # executors run the priced graph and match the oracle
+    gp = schedule.fuse_dag_priced(DAGGraph.from_sequential(g))
+    params = fusion.rename_params(gp, nn.init_params(g, jax.random.PRNGKey(2)))
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 12, 12))
+    y_ref = nn.forward_dag(gp, params, x)
+    y_scan, _ = pingpong.run_dag_with_arena_scan(gp, priced, params, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_scan),
+                               rtol=1e-5, atol=1e-5)
+    y_full = nn.forward(g, fusion.rename_params(
+        gp, nn.init_params(g, jax.random.PRNGKey(2))), x)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_scan),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_priced_fusion_preserves_paper_baselines():
+    """Where every window pays, pricing changes nothing: the §3.2/§5/DAG
+    byte baselines hold exactly (ISSUE 4 acceptance)."""
+    assert schedule.plan_dag(lenet5()).activation_bytes(4) == 8800
+    assert schedule.plan_dag(
+        cifar_testnet(), io_dtype_bytes=1).activation_bytes(1) == 11264
+    assert schedule.plan_dag(
+        residual_cifar(), io_dtype_bytes=1).arena_bytes == 8192
+    # priced fusion is never worse than fuse-everything on these nets
+    for g in (lenet5(), cifar_testnet(), residual_cifar()):
+        priced = schedule.plan_dag(g)
+        plain = schedule.plan_dag(g, schedule_priced=False)
+        assert priced.total_activation_elems <= plain.total_activation_elems
+
+
+def test_priced_fusion_identical_windows_on_paper_nets():
+    """On the paper nets pricing keeps every window, so downstream
+    (graph, plan) consumers see identical buffer names either way."""
+    for g in (lenet5(), cifar_testnet(), residual_cifar()):
+        priced = schedule.plan_dag(g)
+        plain = schedule.plan_dag(g, schedule_priced=False)
+        assert [b.name for b in priced.buffers] == [b.name for b in plain.buffers]
