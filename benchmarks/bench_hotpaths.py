@@ -21,6 +21,10 @@ perf trajectory is measurable from this PR on.  For each batch size it times
   disabled (per-branch dispatch), the baseline the batched scan must beat,
 * ``executor_dag_q8.sim``  — the eager int8 DAG simulator, per image,
 * ``executor_dag_q8.scan`` — the compiled int8 DAG executor, whole batch,
+* ``kernel_dw.{eager,compiled}`` / ``kernel_dw_q8.compiled`` — the fused
+  depthwise kernel (DS-CNN dw-block geometry) vs op-by-op eager dispatch,
+* ``executor_ds_cnn.{walker,scan}`` / ``executor_ds_cnn_q8.{sim,scan}`` —
+  DS-CNN through the DAG executors (float + int8),
 
 on the CIFAR-testnet conv1 geometry (kernels), fused LeNet-5 with the
 ping-pong plan (sequential executors; the int8 plan is the same plan at
@@ -41,6 +45,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import platform
+import subprocess
 import sys
 import time
 from pathlib import Path
@@ -50,6 +56,26 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def run_metadata() -> dict:
+    """Stamp the bench with the run environment (jax version, commit, host)
+    so the checked-in trajectory is comparable across PRs."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=Path(__file__).resolve().parent, capture_output=True,
+            text=True, check=True,
+        ).stdout.strip()
+    except (subprocess.SubprocessError, FileNotFoundError):
+        commit = None
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "commit": commit,
+    }
 
 
 def _time_us(fn, *, reps: int, warmup: int = 1) -> float:
@@ -314,15 +340,98 @@ def bench_executor_dag(batches, *, reps: int, smoke: bool):
     return rows, dag
 
 
+def bench_ds_cnn(batches, *, reps: int, smoke: bool):
+    """DS-CNN (Zhang et al.'s keyword-spotting net, ISSUE 5) through the DAG
+    executors (float walker vs compiled scan; int8 eager simulator vs
+    compiled scan) plus the fused depthwise kernel on the net's dw-block
+    geometry (64 ch, 25×5, 3×3, pad 1 — un-pooled, pool_k = 1) against the
+    op-by-op eager dispatch."""
+    from repro.core import fusion, nn, pingpong, quantize, schedule
+    from repro.core.graph import ds_cnn
+    from repro.kernels.conv_pool import depthwise as dwk
+    from repro.quant import exec as qexec, kernel_q8
+
+    g = ds_cnn()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(6)))
+    plan = schedule.plan_dag(g)
+    plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+    rng = np.random.default_rng(7)
+    calib = jnp.asarray(rng.standard_normal((16, 1, 49, 10)), jnp.float32)
+    qm = quantize.quantize_dag(fused, params, calib)
+    scan_fn = pingpong.make_dag_executor(fused, plan)
+
+    # fused depthwise kernel operands (DS-CNN dw-block geometry)
+    w = jnp.asarray(rng.standard_normal((64, 1, 3, 3)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((64,)) * 0.1, jnp.float32)
+    w_q = jnp.asarray(rng.integers(-127, 128, (64, 1, 3, 3)), jnp.int8)
+    b_q = jnp.asarray(rng.integers(-1000, 1000, (64,)), jnp.int32)
+    ms = tuple(float(m) for m in rng.uniform(1e-4, 5e-4, 64))
+
+    def eager_dw(xk):
+        # op-by-op eager dispatch (the walker's style): conv, bias, relu.
+        y = nn.depthwise_conv2d(xk, w, b, 1, 1)
+        return jax.nn.relu(y)
+
+    rows = []
+    for n in batches:
+        xs = jnp.asarray(rng.standard_normal((n, 1, 49, 10)), jnp.float32)
+        xs_q = quantize.quantize_input(
+            qm, jnp.asarray(rng.standard_normal((n, 1, 49, 10)), jnp.float32))
+        xk = jnp.asarray(rng.standard_normal((n, 64, 25, 5)), jnp.float32)
+        xk_q = jnp.asarray(rng.integers(-128, 128, (n, 64, 25, 5)), jnp.int8)
+
+        def walker():
+            return [pingpong.run_dag_with_arena(fused, plan, params, xs[i])[0]
+                    for i in range(n)]
+
+        def sim_q8():
+            return [quantize.simulate_int8_dag_forward(qm, xs_q[i])
+                    for i in range(n)]
+
+        rows += [
+            {"path": "kernel_dw", "variant": "compiled", "batch": n,
+             "us_per_call": _time_us(
+                 lambda: dwk.fused_depthwise_conv_pool(
+                     xk, w, b, padding=1, pool_k=1, pool_stride=1, impl="auto"),
+                 reps=reps)},
+            {"path": "kernel_dw", "variant": "eager", "batch": n,
+             "us_per_call": _time_us(lambda: eager_dw(xk),
+                                     reps=1 if smoke else max(3, reps // 5))},
+            {"path": "kernel_dw_q8", "variant": "compiled", "batch": n,
+             "us_per_call": _time_us(
+                 lambda: kernel_q8.fused_depthwise_conv_pool_q8(
+                     xk_q, w_q, b_q, multiplier=ms, padding=1, impl="auto"),
+                 reps=reps)},
+            {"path": "executor_ds_cnn", "variant": "walker", "batch": n,
+             "us_per_call": _time_us(
+                 walker, reps=1 if smoke else max(3, reps // 5))},
+            {"path": "executor_ds_cnn", "variant": "scan", "batch": n,
+             "us_per_call": _time_us(lambda: scan_fn(params, xs),
+                                     reps=1 if smoke else reps)},
+            {"path": "executor_ds_cnn_q8", "variant": "sim", "batch": n,
+             "us_per_call": _time_us(
+                 sim_q8, reps=1 if smoke else max(3, reps // 5))},
+            {"path": "executor_ds_cnn_q8", "variant": "scan", "batch": n,
+             "us_per_call": _time_us(
+                 lambda: qexec.run_batch_int8_dag_with_arena(qm, plan_q, xs_q)[0],
+                 reps=1 if smoke else reps)},
+        ]
+    return rows
+
+
 def plan_table() -> dict:
-    """The planner's §5 arena numbers + the DAG reorder result (ISSUE 3).
+    """The planner's §5 arena numbers + the DAG reorder result (ISSUE 3) +
+    the DS-CNN table (ISSUE 5: naive / ping-pong / reordered vs the CMSIS
+    baseline on the net CMSIS-NN actually benchmarks).
 
     Pure planning (no timing): the CI smoke check asserts these against the
-    paper's Table 1 and the residual net's expected reorder win, so a planner
-    regression fails the build even when every executor still runs.
+    paper's Table 1, the residual net's expected reorder win and the DS-CNN
+    reordered-beats-CMSIS row, so a planner regression fails the build even
+    when every executor still runs.
     """
     from repro.core import fusion, planner, schedule
-    from repro.core.graph import cifar_testnet, residual_cifar
+    from repro.core.graph import cifar_testnet, ds_cnn, residual_cifar
 
     g = cifar_testnet()
     res = residual_cifar()
@@ -330,6 +439,7 @@ def plan_table() -> dict:
     naive = schedule.plan_dag(res, order=schedule.naive_order(mat),
                               io_dtype_bytes=1)
     reordered = schedule.plan_dag(res, io_dtype_bytes=1)
+    ds = ds_cnn()
     return {
         "pingpong_cifar_int8_bytes": planner.plan_pingpong(
             g, io_dtype_bytes=1).activation_bytes(),
@@ -339,6 +449,14 @@ def plan_table() -> dict:
             g, io_dtype_bytes=1).activation_bytes(),
         "residual_naive_int8_bytes": naive.arena_bytes,
         "residual_reordered_int8_bytes": reordered.arena_bytes,
+        "ds_cnn_naive_int8_bytes": planner.plan_naive(
+            ds.to_sequential(), io_dtype_bytes=1).activation_bytes(),
+        "ds_cnn_pingpong_int8_bytes": planner.plan_pingpong(
+            ds, io_dtype_bytes=1).activation_bytes(),
+        "ds_cnn_reordered_int8_bytes": schedule.plan_dag(
+            ds, io_dtype_bytes=1).activation_bytes(),
+        "ds_cnn_cmsis_int8_bytes": planner.plan_cmsis_baseline(
+            ds).activation_bytes(),
     }
 
 
@@ -346,14 +464,19 @@ def speedups(rows) -> dict:
     """speedup of the compiled variant over its baseline, per path/batch."""
     base = {"kernel": "interpret", "executor": "pyloop",
             "kernel_q8": "eager", "executor_q8": "sim",
-            "executor_dag": "walker", "executor_dag_q8": "sim"}
+            "executor_dag": "walker", "executor_dag_q8": "sim",
+            "kernel_dw": "eager",
+            "executor_ds_cnn": "walker", "executor_ds_cnn_q8": "sim"}
     fast = {"kernel": "compiled", "executor": "scan",
             "kernel_q8": "compiled", "executor_q8": "scan",
-            "executor_dag": "scan", "executor_dag_q8": "scan"}
+            "executor_dag": "scan", "executor_dag_q8": "scan",
+            "kernel_dw": "compiled",
+            "executor_ds_cnn": "scan", "executor_ds_cnn_q8": "scan"}
     by = {(r["path"], r["variant"], r["batch"]): r["us_per_call"] for r in rows}
     out = {}
     for (path, variant, n), us in sorted(by.items()):
-        if variant != base[path]:
+        # paths without a baseline variant (e.g. kernel_dw_q8) report raw rows
+        if variant != base.get(path):
             continue
         f = by.get((path, fast[path], n))
         if f:
@@ -379,6 +502,7 @@ def main(argv=None) -> None:
     rows += q8_rows
     dag_rows, dag = bench_executor_dag(batches, reps=args.reps, smoke=args.smoke)
     rows += dag_rows
+    rows += bench_ds_cnn(batches, reps=args.reps, smoke=args.smoke)
     rows += interpret_baseline()
 
     # float-vs-int8 speed ratio per compiled path (f32 µs / int8 µs).
@@ -400,8 +524,8 @@ def main(argv=None) -> None:
             branch_batching[f"batch{n}"] = round(p / b, 2)
 
     result = {
-        "backend": jax.default_backend(),
-        "jax": jax.__version__,
+        # jax/backend/commit live in "meta" — the single source of run info.
+        "meta": run_metadata(),
         "smoke": args.smoke,
         "rows": rows,
         "speedup": speedups(rows),

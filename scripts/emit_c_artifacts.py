@@ -11,6 +11,8 @@ Engines:
   * cifar_testnet_q8.c    — paper §5 int8 path (CMSIS-NN comparison net)
   * residual_f32.c        — ISSUE 3 DAG path, reordered arena plan
   * residual_q8.c         — ISSUE 3 int8 DAG path, reordered arena plan
+  * ds_cnn_f32.c          — ISSUE 5 DS-CNN (depthwise separable KWS net)
+  * ds_cnn_q8.c           — ISSUE 5 int8 DS-CNN, per-channel dw requant
 """
 from __future__ import annotations
 
@@ -44,7 +46,7 @@ def main(argv=None) -> None:
     out.mkdir(parents=True, exist_ok=True)
 
     from repro.core import export_c, fusion, nn, planner, quantize, schedule
-    from repro.core.graph import cifar_testnet, lenet5, residual_cifar
+    from repro.core.graph import cifar_testnet, ds_cnn, lenet5, residual_cifar
 
     # paper §3/§4: LeNet-5 float, fused + ping-pong plan
     g = lenet5()
@@ -76,6 +78,20 @@ def main(argv=None) -> None:
     plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
     src = export_c.generate_c_int8_dag(qm, plan_q, with_main=True)
     (out / "residual_q8.c").write_text(src)
+
+    # ISSUE 5: DS-CNN (keyword spotting, depthwise separable), float + int8
+    g = ds_cnn()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(5)))
+    plan = schedule.plan_dag(g)
+    src = export_c.generate_c_dag(fused, plan, params, with_main=True)
+    (out / "ds_cnn_f32.c").write_text(src)
+
+    calib = jax.random.normal(jax.random.PRNGKey(6), (8, 1, 49, 10))
+    qm = quantize.quantize_dag(fused, params, calib)
+    plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+    src = export_c.generate_c_int8_dag(qm, plan_q, with_main=True)
+    (out / "ds_cnn_q8.c").write_text(src)
 
     for c in sorted(out.glob("*.c")):
         _compile(c)

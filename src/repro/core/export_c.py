@@ -32,6 +32,7 @@ from repro.core.graph import (
     Concat,
     Conv2d,
     DAGGraph,
+    DepthwiseConv2d,
     Flatten,
     FusedConvPool,
     FusedLinear,
@@ -79,6 +80,22 @@ class _Emitter:
         self.body.append(s)
 
 
+def _decl_requant(e: _Emitter, tag: str, q) -> str:
+    """Declare a layer's requant multiplier(s); return the requant template.
+
+    Per-tensor layers get one scalar ``M_tag``; per-channel (depthwise)
+    layers get a ``float M_tag[C]`` table indexed by the conv loops'
+    output-channel variable ``c``.
+    """
+    m = q.multiplier
+    if np.ndim(m):
+        vals = ",".join(_fmt_float(v) for v in np.asarray(m, np.float32).reshape(-1))
+        e.decl(f"static const float M_{tag}[{np.size(m)}] = {{{vals}}};")
+        return "rq({acc}, M_{tag}[c])"
+    e.decl(f"static const float M_{tag} = {_fmt_float(m)};")
+    return "rq({acc}, M_{tag})"
+
+
 def _conv_pool_loops(
     e: _Emitter,
     tag: str,
@@ -101,12 +118,20 @@ def _conv_pool_loops(
     has_bias: bool,
     activation: str,
     requant: Optional[str],
+    depthwise: bool = False,
 ) -> None:
-    """Emit the paper's Algorithm 1: fused conv + activation + max-pool."""
+    """Emit the paper's Algorithm 1: fused conv + activation + max-pool.
+
+    ``depthwise=True`` drops the input-channel contraction: output channel
+    ``c`` reads only input channel ``c`` with its own k×k filter (weights
+    flat ``(C, k, k)`` — the grouped OIHW layout with the singleton squeezed
+    by flattening).
+    """
     zero = "0" if acc_type.startswith("int") else "0.0f"
     neg_inf = "-3.4e38f" if ctype == "float" else "-128"
     init = zero if activation == "relu" else neg_inf  # Alg.1 inits max to 0 (ReLU)
-    e.emit(f"  /* {tag}: fused conv{k}x{k}/s{cs}/p{pad} + {activation} + maxpool{pk}/s{ps} (Alg. 1) */")
+    kind = "dwconv" if depthwise else "conv"
+    e.emit(f"  /* {tag}: fused {kind}{k}x{k}/s{cs}/p{pad} + {activation} + maxpool{pk}/s{ps} (Alg. 1) */")
     e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
     e.emit(f"    for (int c = 0; c < {oc}; ++c)")
     e.emit(f"      for (int y = 0; y < {ph}; ++y)")
@@ -117,16 +142,27 @@ def _conv_pool_loops(
     e.emit(f"              const int oy = y*{ps} + i, ox = x*{ps} + j;")
     bias = f"B_{tag}[c]" if has_bias else zero
     e.emit(f"              {acc_type} sum = {bias};")
-    e.emit(f"              for (int z = 0; z < {ic}; ++z)")
-    e.emit(f"                for (int t = 0; t < {k}; ++t)")
-    e.emit(f"                  for (int u = 0; u < {k}; ++u) {{")
-    e.emit(f"                    const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
-    e.emit(f"                    if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
-    e.emit(
-        f"                      sum += ({acc_type})in[(z*{ih} + iy)*{iw} + ix] * "
-        f"({acc_type})W_{tag}[((c*{ic} + z)*{k} + t)*{k} + u];"
-    )
-    e.emit(f"                  }}")
+    if depthwise:
+        e.emit(f"              for (int t = 0; t < {k}; ++t)")
+        e.emit(f"                for (int u = 0; u < {k}; ++u) {{")
+        e.emit(f"                  const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
+        e.emit(f"                  if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
+        e.emit(
+            f"                    sum += ({acc_type})in[(c*{ih} + iy)*{iw} + ix] * "
+            f"({acc_type})W_{tag}[(c*{k} + t)*{k} + u];"
+        )
+        e.emit(f"                }}")
+    else:
+        e.emit(f"              for (int z = 0; z < {ic}; ++z)")
+        e.emit(f"                for (int t = 0; t < {k}; ++t)")
+        e.emit(f"                  for (int u = 0; u < {k}; ++u) {{")
+        e.emit(f"                    const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
+        e.emit(f"                    if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
+        e.emit(
+            f"                      sum += ({acc_type})in[(z*{ih} + iy)*{iw} + ix] * "
+            f"({acc_type})W_{tag}[((c*{ic} + z)*{k} + t)*{k} + u];"
+        )
+        e.emit(f"                  }}")
     if activation == "relu":
         e.emit(f"              if (sum < {zero}) sum = {zero};")
     e.emit(f"              if (sum > mx) mx = sum;")
@@ -140,25 +176,37 @@ def _conv_pool_loops(
 
 
 def _conv_loops(e, tag, *, ctype, acc_type, ic, ih, iw, oc, oh, ow, k, cs, pad,
-                in_off, out_off, has_bias, requant):
+                in_off, out_off, has_bias, requant, depthwise=False):
     zero = "0" if acc_type.startswith("int") else "0.0f"
-    e.emit(f"  /* {tag}: conv{k}x{k}/s{cs}/p{pad} */")
+    kind = "dwconv" if depthwise else "conv"
+    e.emit(f"  /* {tag}: {kind}{k}x{k}/s{cs}/p{pad} */")
     e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
     e.emit(f"    for (int c = 0; c < {oc}; ++c)")
     e.emit(f"      for (int oy = 0; oy < {oh}; ++oy)")
     e.emit(f"        for (int ox = 0; ox < {ow}; ++ox) {{")
     bias = f"B_{tag}[c]" if has_bias else zero
     e.emit(f"          {acc_type} sum = {bias};")
-    e.emit(f"          for (int z = 0; z < {ic}; ++z)")
-    e.emit(f"            for (int t = 0; t < {k}; ++t)")
-    e.emit(f"              for (int u = 0; u < {k}; ++u) {{")
-    e.emit(f"                const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
-    e.emit(f"                if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
-    e.emit(
-        f"                  sum += ({acc_type})in[(z*{ih} + iy)*{iw} + ix] * "
-        f"({acc_type})W_{tag}[((c*{ic} + z)*{k} + t)*{k} + u];"
-    )
-    e.emit(f"              }}")
+    if depthwise:
+        e.emit(f"          for (int t = 0; t < {k}; ++t)")
+        e.emit(f"            for (int u = 0; u < {k}; ++u) {{")
+        e.emit(f"              const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
+        e.emit(f"              if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
+        e.emit(
+            f"                sum += ({acc_type})in[(c*{ih} + iy)*{iw} + ix] * "
+            f"({acc_type})W_{tag}[(c*{k} + t)*{k} + u];"
+        )
+        e.emit(f"            }}")
+    else:
+        e.emit(f"          for (int z = 0; z < {ic}; ++z)")
+        e.emit(f"            for (int t = 0; t < {k}; ++t)")
+        e.emit(f"              for (int u = 0; u < {k}; ++u) {{")
+        e.emit(f"                const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
+        e.emit(f"                if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
+        e.emit(
+            f"                  sum += ({acc_type})in[(z*{ih} + iy)*{iw} + ix] * "
+            f"({acc_type})W_{tag}[((c*{ic} + z)*{k} + t)*{k} + u];"
+        )
+        e.emit(f"              }}")
     out = "sum" if requant is None else requant.format(acc="sum", tag=tag)
     e.emit(f"          out[(c*{oh} + oy)*{ow} + ox] = {out};")
     e.emit(f"        }}")
@@ -182,9 +230,13 @@ def _linear_loops(e, tag, *, ctype, acc_type, n_in, n_out, in_off, out_off,
     e.emit(f"  }}")
 
 
-def _maxpool_loops(e, tag, *, ctype, c, ih, iw, oh, ow, pk, ps, in_off, out_off):
+def _maxpool_loops(e, tag, *, ctype, c, ih, iw, oh, ow, pk, ps, pad, in_off, out_off):
+    """Max-pool step.  ``pad`` taps outside the input are skipped against a
+    dtype-minimum running max — identical to the oracle's dtype-min padding
+    (``nn.maxpool2d``); every window intersects the input when ``pad < pk``,
+    which :meth:`MaxPool2d.out_shape` guarantees."""
     neg = "-3.4e38f" if ctype == "float" else "-128"
-    e.emit(f"  /* {tag}: maxpool{pk}/s{ps} */")
+    e.emit(f"  /* {tag}: maxpool{pk}/s{ps}/p{pad} */")
     e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
     e.emit(f"    for (int z = 0; z < {c}; ++z)")
     e.emit(f"      for (int y = 0; y < {oh}; ++y)")
@@ -192,7 +244,13 @@ def _maxpool_loops(e, tag, *, ctype, c, ih, iw, oh, ow, pk, ps, in_off, out_off)
     e.emit(f"          {ctype} mx = {neg};")
     e.emit(f"          for (int i = 0; i < {pk}; ++i)")
     e.emit(f"            for (int j = 0; j < {pk}; ++j) {{")
-    e.emit(f"              const {ctype} v = in[(z*{ih} + y*{ps}+i)*{iw} + x*{ps}+j];")
+    if pad:
+        e.emit(f"              const int iy = y*{ps} - {pad} + i, ix = x*{ps} - {pad} + j;")
+        e.emit(f"              if (iy < 0 || iy >= {ih} || ix < 0 || ix >= {iw}) continue;")
+        e.emit(f"              const {ctype} v = in[(z*{ih} + iy)*{iw} + ix];")
+    else:
+        # unpadded: every tap is in bounds — keep the branch-free hot loop
+        e.emit(f"              const {ctype} v = in[(z*{ih} + y*{ps}+i)*{iw} + x*{ps}+j];")
     e.emit(f"              if (v > mx) mx = v;")
     e.emit(f"            }}")
     e.emit(f"          out[(z*{oh} + y)*{ow} + x] = mx;")
@@ -300,9 +358,9 @@ def _walk_and_emit(
                 ph=ph, pw=pw, pk=layer.pool_kernel, ps=layer.pool_stride,
                 in_off=src.offset_elems, out_off=dst.offset_elems,
                 has_bias="b" in weights[name], activation=layer.activation,
-                requant=rq,
+                requant=rq, depthwise=isinstance(conv, DepthwiseConv2d),
             )
-        elif isinstance(layer, Conv2d):
+        elif isinstance(layer, (Conv2d, DepthwiseConv2d)):
             ic, ih, iw = cur_shape
             oc, oh, ow = out_shape
             _conv_loops(
@@ -310,14 +368,14 @@ def _walk_and_emit(
                 oc=oc, oh=oh, ow=ow, k=layer.kernel_size, cs=layer.stride,
                 pad=layer.padding, in_off=src.offset_elems,
                 out_off=dst.offset_elems, has_bias="b" in weights[name],
-                requant=rq,
+                requant=rq, depthwise=isinstance(layer, DepthwiseConv2d),
             )
         elif isinstance(layer, MaxPool2d):
             c, ih, iw = cur_shape
             _, oh, ow = out_shape
             _maxpool_loops(
                 e, tag, ctype=ctype, c=c, ih=ih, iw=iw, oh=oh, ow=ow,
-                pk=layer.kernel_size, ps=layer.stride,
+                pk=layer.kernel_size, ps=layer.stride, pad=layer.padding,
                 in_off=src.offset_elems, out_off=dst.offset_elems,
             )
         elif isinstance(layer, (Linear, FusedLinear)):
@@ -360,16 +418,17 @@ def _emit_step(
     if isinstance(layer, FusedConvPool):
         conv = layer.conv
         ic, ih, iw = step.in_shapes[0]
+        oc, _, _ = conv.out_shape(step.in_shapes[0])
         _, ph, pw = layer.out_shape(step.in_shapes[0])
         _conv_pool_loops(
             e, tag, ctype=ctype, acc_type=acc_type, ic=ic, ih=ih, iw=iw,
-            oc=conv.out_channels, k=conv.kernel_size, cs=conv.stride,
+            oc=oc, k=conv.kernel_size, cs=conv.stride,
             pad=conv.padding, ph=ph, pw=pw, pk=layer.pool_kernel,
             ps=layer.pool_stride, in_off=in_offs[0], out_off=out_off,
             has_bias="b" in weights[name], activation=layer.activation,
-            requant=rq,
+            requant=rq, depthwise=isinstance(conv, DepthwiseConv2d),
         )
-    elif isinstance(layer, Conv2d):
+    elif isinstance(layer, (Conv2d, DepthwiseConv2d)):
         ic, ih, iw = step.in_shapes[0]
         oc, oh, ow = layer.out_shape(step.in_shapes[0])
         _conv_loops(
@@ -377,13 +436,14 @@ def _emit_step(
             oc=oc, oh=oh, ow=ow, k=layer.kernel_size, cs=layer.stride,
             pad=layer.padding, in_off=in_offs[0], out_off=out_off,
             has_bias="b" in weights[name], requant=rq,
+            depthwise=isinstance(layer, DepthwiseConv2d),
         )
     elif isinstance(layer, MaxPool2d):
         c, ih, iw = step.in_shapes[0]
         _, oh, ow = layer.out_shape(step.in_shapes[0])
         _maxpool_loops(
             e, tag, ctype=ctype, c=c, ih=ih, iw=iw, oh=oh, ow=ow,
-            pk=layer.kernel_size, ps=layer.stride,
+            pk=layer.kernel_size, ps=layer.stride, pad=layer.padding,
             in_off=in_offs[0], out_off=out_off,
         )
     elif isinstance(layer, (Linear, FusedLinear)):
@@ -547,8 +607,7 @@ def generate_c_int8(
             if q.b_q is not None:
                 e.decl(_fmt_array(q.b_q, "int32_t", f"B_{tag}"))
                 weights[name]["b"] = q.b_q
-            e.decl(f"static const float M_{tag} = {_fmt_float(q.multiplier)};")
-            requants[name] = "rq({acc}, M_{tag})"
+            requants[name] = _decl_requant(e, tag, q)
 
     in_elems = plan.buffers[0].size_elems
     e.decl(REQUANT_C)
@@ -643,8 +702,7 @@ def generate_c_int8_dag(
             if q.b_q is not None:
                 e.decl(_fmt_array(q.b_q, "int32_t", f"B_{tag}"))
                 weights[name]["b"] = q.b_q
-            e.decl(f"static const float M_{tag} = {_fmt_float(q.multiplier)};")
-            requants[name] = "rq({acc}, M_{tag})"
+            requants[name] = _decl_requant(e, tag, q)
         elif name in qm.joins:
             ms = qm.joins[name].multipliers
             for i, m in enumerate(ms):

@@ -22,6 +22,7 @@ from typing import Dict, List
 from repro.core.graph import (
     Conv2d,
     DAGGraph,
+    DepthwiseConv2d,
     FusedConvPool,
     FusedLinear,
     Linear,
@@ -31,6 +32,10 @@ from repro.core.graph import (
     SequentialGraph,
     as_sequential,
 )
+
+# Layers eligible as the conv of a fused conv+act+pool window: the fused
+# running-max loop is identical for dense and depthwise convolutions.
+_CONV_KINDS = (Conv2d, DepthwiseConv2d)
 
 _ACTIVATIONS = {"ReLU": "relu"}
 
@@ -55,7 +60,7 @@ def fuse(graph: SequentialGraph, allow_line_buffer: bool = True) -> SequentialGr
         nxt2 = layers[i + 2] if i + 2 < len(layers) else None
 
         if (
-            isinstance(layer, Conv2d)
+            isinstance(layer, _CONV_KINDS)
             and nxt is not None
             and nxt.kind in _ACTIVATIONS
             and isinstance(nxt2, MaxPool2d)
@@ -125,7 +130,7 @@ def _iter_dag_windows(graph: DAGGraph, allow_line_buffer: bool):
 
     for node in graph.nodes:
         layer = node.layer
-        if isinstance(layer, Conv2d):
+        if isinstance(layer, _CONV_KINDS):
             relu = _sole_consumer(node.name, "ReLU")
             pool = relu and _sole_consumer(relu.name, "MaxPool2d")
             if pool is None or pool.layer.padding != 0:

@@ -111,6 +111,47 @@ class Conv2d(LayerSpec):
 
 
 @dataclasses.dataclass(frozen=True)
+class DepthwiseConv2d(LayerSpec):
+    """Depthwise 2D convolution: one k×k filter per channel (groups = C).
+
+    The MobileNet/DS-CNN building block (Howard et al. 2017; Zhang et al.
+    2017 "Hello Edge"); CMSIS-NN ships it as
+    ``arm_depthwise_separable_conv_HWC_q7``.  Weight layout is grouped OIHW
+    ``(C, 1, k, k)`` — exactly PyTorch's ``Conv2d(C, C, k, groups=C)`` —
+    so per-channel filters stack like ordinary conv weights under the scan
+    executors.  Channel count is preserved by construction; the following
+    1×1 :class:`Conv2d` supplies the cross-channel mixing (the separable
+    pair).
+    """
+
+    channels: int = 0
+    kernel_size: int = 1
+    stride: int = 1
+    padding: int = 0
+    bias: bool = True
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        c, h, w = in_shape
+        if c != self.channels:
+            raise ValueError(
+                f"{self.name or 'DepthwiseConv2d'}: expected {self.channels} "
+                f"input channels, got shape {in_shape}"
+            )
+        oh = (h + 2 * self.padding - self.kernel_size) // self.stride + 1
+        ow = (w + 2 * self.padding - self.kernel_size) // self.stride + 1
+        return (self.channels, oh, ow)
+
+    def param_count(self) -> int:
+        n = self.channels * self.kernel_size**2
+        if self.bias:
+            n += self.channels
+        return n
+
+    def weight_count(self) -> int:
+        return self.channels * self.kernel_size**2
+
+
+@dataclasses.dataclass(frozen=True)
 class ReLU(LayerSpec):
     def out_shape(self, in_shape: Shape) -> Shape:
         return in_shape
@@ -171,13 +212,42 @@ class FusedConvPool(LayerSpec):
     ``stride < kernel_size`` the fusion still applies but needs a line buffer
     of ``kernel_size - stride`` pooled rows (accounted by the planner as
     scratch, not as an inter-layer buffer).
+
+    ``conv`` may be a :class:`Conv2d` or a :class:`DepthwiseConv2d` — the
+    fused loop structure is identical, only the per-tap accumulation
+    differs.  ``pool_padding`` exists solely to make the fusion pass's
+    restriction explicit at construction time: the fused running-max loop
+    assumes an unpadded pool (``fusion`` declines padded windows), so a
+    hand-built ``FusedConvPool`` over a padded pool raises here instead of
+    silently mis-shaping the arena plan (``out_shape`` would otherwise
+    drop the padding the pool's ``out_shape`` honored).
     """
 
     conv: Conv2d = None  # type: ignore[assignment]
     activation: str = "relu"
     pool_kernel: int = 2
     pool_stride: int = 2
+    pool_padding: int = 0
     line_buffer_rows: int = 0
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.conv, (Conv2d, DepthwiseConv2d)):
+            raise TypeError(
+                f"{self.name or 'FusedConvPool'}: conv must be Conv2d or "
+                f"DepthwiseConv2d, got {self.conv!r}"
+            )
+        if self.pool_padding != 0:
+            raise ValueError(
+                f"{self.name or 'FusedConvPool'}: fused pooling does not "
+                f"support pool padding (got {self.pool_padding}) — the fusion "
+                f"pass declines padded MaxPool2d windows; keep the pool as a "
+                f"standalone layer"
+            )
+        if self.pool_kernel < 1 or self.pool_stride < 1:
+            raise ValueError(
+                f"{self.name or 'FusedConvPool'}: pool_kernel/pool_stride "
+                f"must be >= 1"
+            )
 
     def out_shape(self, in_shape: Shape) -> Shape:
         conv_out = self.conv.out_shape(in_shape)
@@ -193,8 +263,8 @@ class FusedConvPool(LayerSpec):
         """Extra scratch needed beyond the output buffer (paper §7 case)."""
         if self.line_buffer_rows == 0:
             return 0
-        _, _, ow_conv = self.conv.out_shape(in_shape)
-        return self.line_buffer_rows * ow_conv * self.conv.out_channels
+        oc, _, ow_conv = self.conv.out_shape(in_shape)
+        return self.line_buffer_rows * ow_conv * oc
 
     def param_count(self) -> int:
         return self.conv.param_count()
@@ -563,6 +633,50 @@ def cifar_testnet() -> SequentialGraph:
             Linear(512, 10, name="fc1"),
         ]
     )
+
+
+def ds_cnn() -> DAGGraph:
+    """Zhang et al. (2017) "Hello Edge" DS-CNN — the keyword-spotting
+    depthwise-separable CNN CMSIS-NN uses as its flagship benchmark —
+    expressed in this repo's square-kernel layer family.
+
+    Input is the standard KWS feature map: 49 MFCC frames × 10 cepstral
+    coefficients, one channel.  A strided stem conv lifts to 64 channels,
+    then four depthwise-separable blocks (3×3 :class:`DepthwiseConv2d` +
+    ReLU, 1×1 pointwise :class:`Conv2d` + ReLU) at constant width, a final
+    pool collapsing the 25×5 map, and the 12-way FC (10 keywords +
+    silence + unknown).  Deviations from the paper's exact net: the 10×4
+    stem kernel becomes 5×5 (this IR is square-kernel) and the average
+    pool becomes a max pool (the only pool the deployment stack emits);
+    buffer sizes — what the planner tables measure — are unchanged.
+
+    The net is a chain, so it exercises the sequential *and* DAG stacks:
+    `repro.core.schedule.plan_dag` prices the two-bank ping-pong packing,
+    and the last pointwise conv + ReLU + pool fuses to a zero-scratch
+    :class:`FusedConvPool`.
+    """
+    nodes = [
+        Node(Input(shape=(1, 49, 10), name="input")),
+        Node(Conv2d(1, 64, kernel_size=5, stride=2, padding=2, name="conv1"),
+             ("input",)),
+        Node(ReLU(name="conv1_relu"), ("conv1",)),
+    ]
+    prev = "conv1_relu"
+    for i in range(1, 5):
+        dw, pw = f"dw{i}", f"pw{i}"
+        nodes += [
+            Node(DepthwiseConv2d(64, kernel_size=3, padding=1, name=dw), (prev,)),
+            Node(ReLU(name=f"{dw}_relu"), (dw,)),
+            Node(Conv2d(64, 64, kernel_size=1, name=pw), (f"{dw}_relu",)),
+            Node(ReLU(name=f"{pw}_relu"), (pw,)),
+        ]
+        prev = f"{pw}_relu"
+    nodes += [
+        Node(MaxPool2d(kernel_size=5, stride=5, name="pool"), (prev,)),
+        Node(Flatten(name="flatten"), ("pool",)),
+        Node(Linear(320, 12, name="fc"), ("flatten",)),
+    ]
+    return DAGGraph(nodes)
 
 
 def residual_cifar() -> DAGGraph:

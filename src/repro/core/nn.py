@@ -18,6 +18,7 @@ from repro.core.graph import (
     Concat,
     Conv2d,
     DAGGraph,
+    DepthwiseConv2d,
     Flatten,
     FusedConvPool,
     FusedLinear,
@@ -48,8 +49,34 @@ def conv2d(x: jax.Array, w: jax.Array, b, stride: int = 1, padding: int = 0) -> 
     return out[0] if squeeze else out
 
 
-def maxpool2d(x: jax.Array, kernel: int, stride: int) -> jax.Array:
-    """x: (C,H,W) or (N,C,H,W)."""
+def depthwise_conv2d(x: jax.Array, w: jax.Array, b, stride: int = 1, padding: int = 0) -> jax.Array:
+    """x: (C,H,W) or (N,C,H,W); w: (C,1,k,k) [grouped OIHW]; b: (C,) or None."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=w.shape[0],
+    )
+    if b is not None:
+        out = out + b[None, :, None, None]
+    return out[0] if squeeze else out
+
+
+def maxpool2d(x: jax.Array, kernel: int, stride: int, padding: int = 0) -> jax.Array:
+    """x: (C,H,W) or (N,C,H,W).
+
+    ``padding`` pads with the dtype minimum (``-inf`` float, ``-128`` int8)
+    before the window reduction — the identity of ``max`` — so padded
+    windows agree with :meth:`MaxPool2d.out_shape` and the emitted C
+    engine (which skips out-of-bounds taps against a dtype-min running
+    max).  ``reduce_window`` realizes exactly that: padded positions take
+    the init value.
+    """
     squeeze = x.ndim == 3
     if squeeze:
         x = x[None]
@@ -63,9 +90,16 @@ def maxpool2d(x: jax.Array, kernel: int, stride: int) -> jax.Array:
         jax.lax.max,
         window_dimensions=(1, 1, kernel, kernel),
         window_strides=(1, 1, stride, stride),
-        padding="VALID",
+        padding=((0, 0), (0, 0), (padding, padding), (padding, padding)),
     )
     return out[0] if squeeze else out
+
+
+def _conv_like(conv, p, x: jax.Array) -> jax.Array:
+    """Dispatch the conv of a (fused) conv layer: dense or depthwise."""
+    if isinstance(conv, DepthwiseConv2d):
+        return depthwise_conv2d(x, p["w"], p.get("b"), conv.stride, conv.padding)
+    return conv2d(x, p["w"], p.get("b"), conv.stride, conv.padding)
 
 
 def linear(x: jax.Array, w: jax.Array, b) -> jax.Array:
@@ -102,6 +136,19 @@ def init_params(graph: SequentialGraph, rng: jax.Array, dtype=jnp.float32) -> Pa
             )
             b = jax.random.uniform(k2, (inner.out_channels,), dtype, -bound, bound) if inner.bias else None
             params[name] = {"w": w} | ({"b": b} if b is not None else {})
+        elif isinstance(inner, DepthwiseConv2d):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            # PyTorch grouped-conv fan_in: in_channels/groups * k² = k².
+            bound = 1.0 / np.sqrt(inner.kernel_size**2)
+            w = jax.random.uniform(
+                k1,
+                (inner.channels, 1, inner.kernel_size, inner.kernel_size),
+                dtype,
+                -bound,
+                bound,
+            )
+            b = jax.random.uniform(k2, (inner.channels,), dtype, -bound, bound) if inner.bias else None
+            params[name] = {"w": w} | ({"b": b} if b is not None else {})
         elif isinstance(inner, Linear):
             rng, k1, k2 = jax.random.split(rng, 3)
             bound = 1.0 / np.sqrt(inner.in_features)
@@ -117,17 +164,18 @@ def apply_layer(layer, p, x: jax.Array) -> jax.Array:
         return x
     if isinstance(layer, Conv2d):
         return conv2d(x, p["w"], p.get("b"), layer.stride, layer.padding)
+    if isinstance(layer, DepthwiseConv2d):
+        return depthwise_conv2d(x, p["w"], p.get("b"), layer.stride, layer.padding)
     if isinstance(layer, ReLU):
         return jax.nn.relu(x)
     if isinstance(layer, MaxPool2d):
-        return maxpool2d(x, layer.kernel_size, layer.stride)
+        return maxpool2d(x, layer.kernel_size, layer.stride, layer.padding)
     if isinstance(layer, Flatten):
         return x.reshape(x.shape[:-3] + (-1,)) if x.ndim > 3 else x.reshape(-1)
     if isinstance(layer, Linear):
         return linear(x, p["w"], p.get("b"))
     if isinstance(layer, FusedConvPool):
-        c = layer.conv
-        y = conv2d(x, p["w"], p.get("b"), c.stride, c.padding)
+        y = _conv_like(layer.conv, p, x)
         y = _ACT[layer.activation](y)
         return maxpool2d(y, layer.pool_kernel, layer.pool_stride)
     if isinstance(layer, FusedLinear):

@@ -32,6 +32,7 @@ from typing import List, Optional, Tuple
 from repro.core import fusion as fusion_pass
 from repro.core.graph import (
     Conv2d,
+    DepthwiseConv2d,
     FusedConvPool,
     Input,
     SequentialGraph,
@@ -282,8 +283,11 @@ def plan_cmsis_baseline(graph: SequentialGraph, io_dtype_bytes: int = 1) -> Memo
     arena = sizes[0] + (sizes[1] if len(sizes) > 1 else 0)
     im2col_int16 = 0
     for layer in graph.layers:
-        if isinstance(layer, Conv2d):
-            im2col_int16 = max(im2col_int16, 2 * layer.in_channels * layer.kernel_size**2)
+        # arm_convolve / arm_depthwise_separable_conv alike need bufferA of
+        # 2·ch·k² int16 elements (ch = input channels; = channels depthwise).
+        if isinstance(layer, (Conv2d, DepthwiseConv2d)):
+            ch = layer.in_channels if isinstance(layer, Conv2d) else layer.channels
+            im2col_int16 = max(im2col_int16, 2 * ch * layer.kernel_size**2)
     scratch_elems = im2col_int16 * 2 // io_dtype_bytes  # int16 → io dtype units
     buffers, _ = _buffers_unique(rows)
     return MemoryPlan(

@@ -23,6 +23,7 @@ from repro.core.graph import (
     Concat,
     Conv2d,
     DAGGraph,
+    DepthwiseConv2d,
     Flatten,
     FusedConvPool,
     FusedLinear,
@@ -40,14 +41,26 @@ class QuantizedLayer:
     name: str
     w_q: np.ndarray  # int8
     b_q: np.ndarray | None  # int32 (bias in accumulator scale)
-    w_scale: float
+    # float (per-tensor) or (C,) float array (per-output-channel: depthwise
+    # convs, where each channel owns its own k×k filter and a shared scale
+    # would be dominated by the widest channel).
+    w_scale: float | np.ndarray
     in_scale: float
     out_scale: float
 
     @property
-    def multiplier(self) -> float:
-        """The layer's requantization multiplier (accumulator → int8)."""
+    def multiplier(self):
+        """The layer's requantization multiplier (accumulator → int8).
+
+        A scalar for per-tensor layers, a ``(C,)`` float array for
+        per-channel (depthwise) layers — ``requant_multiplier`` is
+        elementwise, so both fall out of the same expression.
+        """
         return requant_multiplier(self.in_scale, self.w_scale, self.out_scale)
+
+    @property
+    def per_channel(self) -> bool:
+        return np.ndim(self.w_scale) > 0
 
 
 @dataclasses.dataclass
@@ -94,16 +107,41 @@ def _calibrate_scales(graph: SequentialGraph, params, xs) -> Dict[str, float]:
     return scales
 
 
-def _quantize_layer(name: str, layer_params, in_scale: float, out_scale: float) -> QuantizedLayer:
+def _is_depthwise(layer) -> bool:
+    """True for layers quantized per-output-channel (depthwise, incl. fused)."""
+    inner = layer.conv if isinstance(layer, FusedConvPool) else layer
+    return isinstance(inner, DepthwiseConv2d)
+
+
+def _quantize_layer(
+    name: str,
+    layer_params,
+    in_scale: float,
+    out_scale: float,
+    per_channel: bool = False,
+) -> QuantizedLayer:
     """Quantize one conv/linear layer's parameters — the single definition of
-    the weight/bias scale math shared by the sequential and DAG quantizers."""
+    the weight/bias scale math shared by the sequential and DAG quantizers.
+
+    ``per_channel=True`` (depthwise convs) gives every output channel its own
+    symmetric weight scale — ``w_scale`` becomes a ``(C,)`` array and the
+    bias/requant math applies channel-wise.
+    """
     w = np.asarray(layer_params["w"], np.float32)
-    w_scale = max(float(np.max(np.abs(w))), 1e-8) / 127.0
-    w_q = np.clip(np.round(w / w_scale), -127, 127).astype(np.int8)
+    if per_channel:
+        flat = np.abs(w.reshape(w.shape[0], -1)).max(axis=1)
+        w_scale = np.maximum(flat, 1e-8) / 127.0  # (C,)
+        w_q = np.clip(
+            np.round(w / w_scale.reshape((-1,) + (1,) * (w.ndim - 1))), -127, 127
+        ).astype(np.int8)
+    else:
+        w_scale = max(float(np.max(np.abs(w))), 1e-8) / 127.0
+        w_q = np.clip(np.round(w / w_scale), -127, 127).astype(np.int8)
     b = layer_params.get("b")
     b_q = None
     if b is not None:
         # bias lives in the int32 accumulator scale: in_scale*w_scale
+        # (per-channel: each channel's own accumulator scale)
         b_q = np.round(np.asarray(b, np.float32) / (in_scale * w_scale)).astype(
             np.int32
         )
@@ -131,7 +169,10 @@ def quantize(graph: SequentialGraph, params, calibration_x) -> QuantizedModel:
         name = layer.name or layer.kind
         out_scale = act_scales[name]
         if name in params:
-            layers[name] = _quantize_layer(name, params[name], in_scale, out_scale)
+            layers[name] = _quantize_layer(
+                name, params[name], in_scale, out_scale,
+                per_channel=_is_depthwise(layer),
+            )
         in_scale = out_scale
     return QuantizedModel(graph=graph, input_scale=input_scale, layers=layers)
 
@@ -164,6 +205,18 @@ def requantize(acc_i32: jax.Array, multiplier) -> jax.Array:
     return jnp.clip(jnp.round(acc_i32.astype(jnp.float32) * m), -128, 127).astype(jnp.int8)
 
 
+def requantize_per_channel(acc_i32: jax.Array, multipliers) -> jax.Array:
+    """Per-output-channel requantization (depthwise convs).
+
+    ``acc_i32`` is ``(..., C, H, W)``; ``multipliers`` a ``(C,)`` vector of
+    f32 scales (one accumulator→int8 multiplier per channel), reshaped to
+    broadcast over the spatial dims and fed through the shared scalar
+    :func:`requantize` math — same rounding, same saturation.
+    """
+    m = jnp.asarray(multipliers, jnp.float32).reshape((-1, 1, 1))
+    return requantize(acc_i32, m)
+
+
 # The same math as C (nearbyintf rounds half-to-even under the default
 # FE_TONEAREST mode, matching jnp.round above bit-for-bit).
 REQUANT_C = """
@@ -178,6 +231,14 @@ static int8_t rq(int32_t acc, float m) {
 def _requant(acc_i32: jax.Array, in_scale: float, w_scale: float, out_scale: float) -> jax.Array:
     """int32 accumulator → int8 output (float rescale, round-to-nearest)."""
     return requantize(acc_i32, requant_multiplier(in_scale, w_scale, out_scale))
+
+
+def _requant_conv(acc_i32: jax.Array, q: QuantizedLayer) -> jax.Array:
+    """Requantize a conv accumulator with the layer's scalar or per-channel
+    multiplier (the simulator-side dispatch)."""
+    if q.per_channel:
+        return requantize_per_channel(acc_i32, q.multiplier)
+    return requantize(acc_i32, q.multiplier)
 
 
 def requantize_join(xs_i8, multipliers) -> jax.Array:
@@ -245,7 +306,10 @@ def quantize_dag(graph: DAGGraph, params, calibration_x) -> QuantizedModel:
             continue
         in_scale = scales[node.inputs[0]]
         out_scale = max(float(jnp.max(jnp.abs(val))), 1e-8) / 127.0
-        layers[name] = _quantize_layer(name, params[name], in_scale, out_scale)
+        layers[name] = _quantize_layer(
+            name, params[name], in_scale, out_scale,
+            per_channel=_is_depthwise(node.layer),
+        )
         scales[name] = out_scale
     return QuantizedModel(
         graph=graph, input_scale=input_scale, layers=layers, joins=joins
@@ -276,14 +340,16 @@ def _simulate_int8_node(qm: QuantizedModel, layer, name: str, xs) -> jax.Array:
     if isinstance(layer, Flatten):
         return x.reshape(-1) if x.ndim == 3 else x.reshape(x.shape[0], -1)
     if isinstance(layer, MaxPool2d):
-        return nn.maxpool2d(x, layer.kernel_size, layer.stride)
+        # padding pads with -128 (the int8 minimum) — the identity of max —
+        # matching the float oracle's -inf padding and the C engine.
+        return nn.maxpool2d(x, layer.kernel_size, layer.stride, layer.padding)
     if isinstance(layer, (Add, Concat)):
         j = qm.joins[name]
         if isinstance(layer, Add):
             return requantize_join(xs, j.multipliers)
         return requantize_concat(xs, j.multipliers, axis=layer.axis)
     q = qm.layers[name]
-    if isinstance(layer, (Conv2d, FusedConvPool)):
+    if isinstance(layer, (Conv2d, DepthwiseConv2d, FusedConvPool)):
         conv = layer.conv if isinstance(layer, FusedConvPool) else layer
         acc = jax.lax.conv_general_dilated(
             x.astype(jnp.int32)[None] if x.ndim == 3 else x.astype(jnp.int32),
@@ -291,6 +357,9 @@ def _simulate_int8_node(qm: QuantizedModel, layer, name: str, xs) -> jax.Array:
             window_strides=(conv.stride, conv.stride),
             padding=[(conv.padding, conv.padding)] * 2,
             dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=(
+                conv.channels if isinstance(conv, DepthwiseConv2d) else 1
+            ),
         )
         if x.ndim == 3:
             acc = acc[0]
@@ -300,9 +369,9 @@ def _simulate_int8_node(qm: QuantizedModel, layer, name: str, xs) -> jax.Array:
         if isinstance(layer, FusedConvPool):
             if layer.activation == "relu":
                 acc = jnp.maximum(acc, 0)
-            y = _requant(acc, q.in_scale, q.w_scale, q.out_scale)
+            y = _requant_conv(acc, q)
             return nn.maxpool2d(y, layer.pool_kernel, layer.pool_stride)
-        return _requant(acc, q.in_scale, q.w_scale, q.out_scale)
+        return _requant_conv(acc, q)
     if isinstance(layer, (Linear, FusedLinear)):
         acc = x.astype(jnp.int32) @ jnp.asarray(q.w_q, jnp.int32).T
         if q.b_q is not None:

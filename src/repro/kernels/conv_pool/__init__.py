@@ -4,4 +4,9 @@ MCU version: running max in a register, conv output never written to SRAM.
 TPU version (kernel.py): conv rows staged in VMEM, activation + pooling
 reduction applied before writeback — the conv output never reaches HBM, so
 HBM write traffic drops by s² exactly as SRAM usage did in the paper.
+
+depthwise.py is the grouped sibling (one filter per channel, MobileNet /
+DS-CNN building block): same grid, halo tiling and pooling reduction via
+the shared ``conv_pool_call`` builder, per-channel VPU multiply-adds in
+place of the k² MXU dots.
 """

@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: fused depthwise conv + activation + max-pool.
+
+The depthwise sibling of ``repro.kernels.conv_pool.kernel``: one k×k filter
+per channel (groups = C), the MobileNet/DS-CNN building block.  All the
+dtype- and geometry-independent plumbing — the ``(N, PH // row_block)``
+batch grid, the overlapping ``pl.Unblocked`` halo row windows, the
+VMEM-budget ``row_block`` sizing — is the shared
+:func:`repro.kernels.conv_pool.kernel.conv_pool_call` builder, so the dense
+and depthwise tilings cannot diverge.  Only the accumulation differs: there
+is no cross-channel contraction, so the k² MXU dots become k² *elementwise*
+multiply-adds on the VPU — each tap broadcasts its per-channel filter row
+``w[dz, dt]`` of shape ``(1, C)`` over the ``(conv_rows, ow, C)`` window
+slice, channels riding the TPU lane dimension.
+
+``pool_k == pool_stride == 1`` degenerates the pooling reduction to the
+identity, which is how DS-CNN's un-pooled depthwise+ReLU blocks run through
+the same fused kernel (conv output still never materializes in HBM).
+
+``fused_depthwise_conv_pool`` is the jitted NCHW entry point with the same
+``impl`` contract as the dense ops wrapper: ``"auto"`` is always a
+*compiled* path — Pallas on TPU/GPU, a fused XLA grouped-conv chain on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv_pool.kernel import conv_pool_call, has_compiled_pallas_backend
+
+
+def _kernel_dw(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
+               k, activation, out_w, row_block):
+    cs, pk, ps, R = conv_stride, pool_k, pool_stride, row_block
+    x = x_ref[0]  # (window_rows, W, C) — this program's halo window
+    w = w_ref[...]  # (k, k, 1, C) — grouped HWIO, one filter tap per channel
+    ow = out_w
+    # Conv rows this tile's pooled rows consume, relative to the window start.
+    cr = (R - 1) * ps + pk
+
+    # depthwise conv: k² static strided slices, one per-channel VPU
+    # multiply-add each (no cross-channel contraction to feed the MXU).
+    acc = jnp.zeros((cr, ow, x.shape[-1]), jnp.float32)
+    for dz in range(k):
+        rows = x[dz : dz + (cr - 1) * cs + 1 : cs]  # (cr, W, C)
+        for dt in range(k):
+            cols = rows[:, dt : dt + (ow - 1) * cs + 1 : cs]  # (cr, ow, C)
+            acc = acc + cols.astype(jnp.float32) * w[dz, dt].astype(jnp.float32)
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.float32)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+
+    # pooling reduction in VMEM, identical to the dense kernel; pk == ps == 1
+    # degenerates to the identity (fused conv+act without pooling).
+    pw = (ow - pk) // ps + 1
+    pooled_rows = None
+    for j in range(pk):
+        rows = acc[j : j + (R - 1) * ps + 1 : ps]  # (R, ow, C)
+        pooled_rows = rows if pooled_rows is None else jnp.maximum(pooled_rows, rows)
+    pooled = None
+    for j in range(pk):
+        cols = pooled_rows[:, j : j + (pw - 1) * ps + 1 : ps]  # (R, pw, C)
+        pooled = cols if pooled is None else jnp.maximum(pooled, cols)
+    o_ref[0] = pooled.astype(o_ref.dtype)
+
+
+def depthwise_conv_pool(
+    x: jax.Array,  # (H, W, C) or (N, H, W, C), pre-padded
+    w: jax.Array,  # (k, k, 1, C) grouped HWIO
+    b: jax.Array | None,
+    *,
+    conv_stride: int = 1,
+    pool_k: int = 2,
+    pool_stride: int = 2,
+    activation: str = "relu",
+    interpret: bool | None = None,
+    row_block: int | None = None,
+) -> jax.Array:
+    """Fused depthwise conv+act+pool.  Returns (PH, PW, C) or batched."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    out = conv_pool_call(
+        x, w, b,
+        kernel_factory=lambda ow, rb: functools.partial(
+            _kernel_dw, conv_stride=conv_stride, pool_k=pool_k,
+            pool_stride=pool_stride, k=w.shape[0], activation=activation,
+            out_w=ow, row_block=rb,
+        ),
+        out_dtype=x.dtype,
+        conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride,
+        interpret=interpret, row_block=row_block,
+    )
+    return out[0] if squeeze else out
+
+
+def _xla_depthwise_conv_pool(x, w, b, *, conv_stride, padding, pool_k,
+                             pool_stride, activation):
+    """Batched XLA realization on the NCHW input: the compiled fallback for
+    backends without a compiled Pallas lowering (grouped conv + pool fuse
+    inside the enclosing jit)."""
+    from repro.core import nn as core_nn
+
+    out = core_nn.depthwise_conv2d(x, w, b, stride=conv_stride, padding=padding)
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    return core_nn.maxpool2d(out, pool_k, pool_stride)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("conv_stride", "padding", "pool_k", "pool_stride",
+                     "activation", "impl", "interpret", "row_block"),
+)
+def fused_depthwise_conv_pool(
+    x: jax.Array,  # (C, H, W) or (N, C, H, W) — paper/PyTorch layout
+    w: jax.Array,  # (C, 1, k, k) grouped OIHW
+    b: jax.Array | None = None,
+    *,
+    conv_stride: int = 1,
+    padding: int = 0,
+    pool_k: int = 1,
+    pool_stride: int = 1,
+    activation: str = "relu",
+    impl: str = "auto",  # "auto" | "pallas" | "xla"
+    interpret: bool | None = None,
+    row_block: int | None = None,
+) -> jax.Array:
+    """Returns (C, PH, PW) or (N, C, PH, PW)."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+
+    if impl == "auto":
+        impl = "pallas" if has_compiled_pallas_backend() else "xla"
+    if impl == "xla":
+        out = _xla_depthwise_conv_pool(
+            x, w, b, conv_stride=conv_stride, padding=padding, pool_k=pool_k,
+            pool_stride=pool_stride, activation=activation,
+        )
+        return out[0] if squeeze else out
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    xh = jnp.transpose(x, (0, 2, 3, 1))  # NHWC (TPU lanes-last)
+    if padding:
+        xh = jnp.pad(xh, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    wh = jnp.transpose(w, (2, 3, 1, 0))  # (k, k, 1, C)
+    out = depthwise_conv_pool(
+        xh, wh, b, conv_stride=conv_stride, pool_k=pool_k,
+        pool_stride=pool_stride, activation=activation, interpret=interpret,
+        row_block=row_block,
+    )
+    out = jnp.transpose(out, (0, 3, 1, 2))  # NCHW
+    return out[0] if squeeze else out

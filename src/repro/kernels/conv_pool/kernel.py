@@ -124,7 +124,7 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
 
 def conv_pool_call(
     x: jax.Array,  # (N, H, W, Cin), pre-padded
-    w: jax.Array,  # (k, k, Cin, Cout)
+    w: jax.Array,  # (k, k, Cin, Cout) — or (k, k, 1, C) grouped/depthwise
     b: jax.Array | None,
     *,
     kernel_factory,  # (out_w, row_block) -> kern(x_ref, w_ref, b_ref, o_ref)
@@ -134,15 +134,22 @@ def conv_pool_call(
     pool_stride: int,
     interpret: bool | None,
     row_block: int | None,
+    extra_args: tuple = (),
 ) -> jax.Array:
     """Shared pallas_call plumbing for the fused conv+pool kernel family.
 
     Owns everything dtype-independent — shape math, auto row_block sizing
     against the VMEM budget (input/weight/output widths from the array
     dtypes, 4 B per accumulator element for both f32 and int32), overlapping
-    halo BlockSpecs, grid and bias unpacking — so the float kernel and the
-    int8 q8 kernel (``repro.quant.kernel_q8``) cannot diverge in tiling.
-    Only the kernel body, supplied via ``kernel_factory``, differs.
+    halo BlockSpecs, grid and bias unpacking — so the float kernel, the
+    int8 q8 kernel (``repro.quant.kernel_q8``) and the depthwise siblings
+    cannot diverge in tiling.  Only the kernel body, supplied via
+    ``kernel_factory``, differs.
+
+    ``extra_args`` are additional whole-array operands (e.g. the q8
+    depthwise kernel's per-channel requant multipliers — data a Pallas
+    kernel cannot capture as a trace constant); their refs are appended to
+    the kernel call after ``o_ref``: ``kern(x, w, b, o, *extras)``.
     """
     n, H, W, cin = x.shape
     k = w.shape[0]
@@ -158,7 +165,8 @@ def conv_pool_call(
     if row_block is None:
         in_item = x.dtype.itemsize
         out_item = jnp.dtype(out_dtype).itemsize
-        w_bytes = k * k * cin * cout * w.dtype.itemsize
+        # w.size, not k²·cin·cout: grouped (depthwise) weights are (k,k,1,C).
+        w_bytes = w.size * w.dtype.itemsize
 
         def _tile_bytes(r: int) -> int:
             window = halo_window_rows(r, **geom)  # input rows resident
@@ -189,14 +197,17 @@ def conv_pool_call(
     if b is not None:
         args.append(b)
         in_specs.append(pl.BlockSpec(b.shape, lambda i, t: (0,)))
+    for a in extra_args:
+        args.append(a)
+        in_specs.append(
+            pl.BlockSpec(a.shape, lambda i, t, _nd=a.ndim: (0,) * _nd)
+        )
 
     def wrapper(*refs):
-        if b is not None:
-            x_ref, w_ref, b_ref, o_ref = refs
-        else:
-            x_ref, w_ref, o_ref = refs
-            b_ref = None
-        kern(x_ref, w_ref, b_ref, o_ref)
+        x_ref, w_ref, rest = refs[0], refs[1], list(refs[2:-1])
+        o_ref = refs[-1]
+        b_ref = rest.pop(0) if b is not None else None
+        kern(x_ref, w_ref, b_ref, o_ref, *rest)
 
     return pl.pallas_call(
         wrapper,

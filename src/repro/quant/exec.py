@@ -33,6 +33,7 @@ from repro.core.graph import (
     Concat,
     Conv2d,
     DAGGraph,
+    DepthwiseConv2d,
     Flatten,
     FusedConvPool,
     FusedLinear,
@@ -47,6 +48,7 @@ from repro.core.quantize import (
     requantize,
     requantize_concat,
     requantize_join,
+    requantize_per_channel,
 )
 
 # Compiled int8 executors kept per (qm, plan) object pair, bounded FIFO.
@@ -58,12 +60,14 @@ def int8_params(qm: QuantizedModel) -> Dict[str, Dict[str, jax.Array]]:
 
     ``w`` int8, ``b`` int32 (accumulator scale, only when present) and ``m``
     — the f32 requant multiplier — as an *array* leaf so homogeneous layer
-    runs can stack it and scan over per-layer multipliers.  Join nodes
-    (Add/Concat) carry ``ms``: one f32 multiplier per input.
+    runs can stack it and scan over per-layer multipliers.  ``m`` is a
+    scalar for per-tensor layers and a ``(C,)`` vector for per-channel
+    (depthwise) layers; both stack along a new leading axis identically.
+    Join nodes (Add/Concat) carry ``ms``: one f32 multiplier per input.
     """
     out: Dict[str, Dict[str, jax.Array]] = {}
     for name, q in qm.layers.items():
-        p = {"w": jnp.asarray(q.w_q), "m": jnp.float32(q.multiplier)}
+        p = {"w": jnp.asarray(q.w_q), "m": jnp.asarray(q.multiplier, jnp.float32)}
         if q.b_q is not None:
             p["b"] = jnp.asarray(q.b_q)
         out[name] = p
@@ -88,9 +92,10 @@ def apply_int8_layer(layer, p, x: jax.Array) -> jax.Array:
     if isinstance(layer, Flatten):
         return x.reshape(x.shape[:-3] + (-1,)) if x.ndim > 3 else x.reshape(-1)
     if isinstance(layer, MaxPool2d):
-        return nn.maxpool2d(x, layer.kernel_size, layer.stride)
-    if isinstance(layer, (Conv2d, FusedConvPool)):
+        return nn.maxpool2d(x, layer.kernel_size, layer.stride, layer.padding)
+    if isinstance(layer, (Conv2d, DepthwiseConv2d, FusedConvPool)):
         conv = layer.conv if isinstance(layer, FusedConvPool) else layer
+        depthwise = isinstance(conv, DepthwiseConv2d)
         squeeze = x.ndim == 3
         acc = jax.lax.conv_general_dilated(
             x.astype(jnp.int32)[None] if squeeze else x.astype(jnp.int32),
@@ -98,6 +103,7 @@ def apply_int8_layer(layer, p, x: jax.Array) -> jax.Array:
             window_strides=(conv.stride, conv.stride),
             padding=[(conv.padding, conv.padding)] * 2,
             dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=conv.channels if depthwise else 1,
         )
         if squeeze:
             acc = acc[0]
@@ -107,8 +113,11 @@ def apply_int8_layer(layer, p, x: jax.Array) -> jax.Array:
         if isinstance(layer, FusedConvPool):
             if layer.activation == "relu":
                 acc = jnp.maximum(acc, 0)  # relu in accumulator domain
-            y = requantize(acc, p["m"])
+            y = (requantize_per_channel(acc, p["m"]) if depthwise
+                 else requantize(acc, p["m"]))
             return nn.maxpool2d(y, layer.pool_kernel, layer.pool_stride)
+        if depthwise:
+            return requantize_per_channel(acc, p["m"])
         return requantize(acc, p["m"])
     if isinstance(layer, (Linear, FusedLinear)):
         acc = x.astype(jnp.int32) @ p["w"].astype(jnp.int32).T

@@ -33,7 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import requantize
+from repro.core.quantize import requantize, requantize_per_channel
 from repro.kernels.conv_pool.kernel import conv_pool_call, has_compiled_pallas_backend
 
 
@@ -78,6 +78,43 @@ def _kernel_q8(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
         pooled = cols if pooled is None else jnp.maximum(pooled, cols)
     # In-kernel requantization: int32 → int8 once, on the pooled tile.
     o_ref[0] = requantize(pooled, multiplier)
+
+
+def _kernel_dw_q8(x_ref, w_ref, b_ref, o_ref, m_ref, *, conv_stride, pool_k,
+                  pool_stride, k, activation, out_w, row_block):
+    """Depthwise sibling of :func:`_kernel_q8`: per-channel int8 VPU
+    multiply-adds instead of the k² MXU dots, and per-*channel* requant
+    multipliers (``m_ref``, a (C,) f32 operand — Pallas kernels cannot bake
+    array constants in at trace time) broadcast over the pooled tile's lane
+    dimension."""
+    cs, pk, ps, R = conv_stride, pool_k, pool_stride, row_block
+    x = x_ref[0]  # (window_rows, W, C) int8
+    w = w_ref[...]  # (k, k, 1, C) int8
+    ow = out_w
+    cr = (R - 1) * ps + pk
+
+    acc = jnp.zeros((cr, ow, x.shape[-1]), jnp.int32)
+    for dz in range(k):
+        rows = x[dz : dz + (cr - 1) * cs + 1 : cs]  # (cr, W, C)
+        for dt in range(k):
+            cols = rows[:, dt : dt + (ow - 1) * cs + 1 : cs]  # (cr, ow, C)
+            acc = acc + cols.astype(jnp.int32) * w[dz, dt].astype(jnp.int32)
+    if b_ref is not None:
+        acc = acc + b_ref[...]  # int32, accumulator scale
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0)
+
+    pw = (ow - pk) // ps + 1
+    pooled_rows = None
+    for j in range(pk):
+        rows = acc[j : j + (R - 1) * ps + 1 : ps]
+        pooled_rows = rows if pooled_rows is None else jnp.maximum(pooled_rows, rows)
+    pooled = None
+    for j in range(pk):
+        cols = pooled_rows[:, j : j + (pw - 1) * ps + 1 : ps]
+        pooled = cols if pooled is None else jnp.maximum(pooled, cols)
+    # per-channel requantization: (C,) multipliers broadcast over (R, pw, C).
+    o_ref[0] = requantize(pooled, m_ref[...])
 
 
 def conv_pool_q8(
@@ -178,6 +215,128 @@ def fused_conv_pool_q8(
         xh = jnp.pad(xh, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
     wh = jnp.transpose(w, (2, 3, 1, 0))  # HWIO
     out = conv_pool_q8(
+        xh, wh, b, multiplier=multiplier, conv_stride=conv_stride,
+        pool_k=pool_k, pool_stride=pool_stride, activation=activation,
+        interpret=interpret, row_block=row_block,
+    )
+    out = jnp.transpose(out, (0, 3, 1, 2))  # NCHW
+    return out[0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# Depthwise (grouped) int8 kernel — the DS-CNN / MobileNet building block
+# ---------------------------------------------------------------------------
+
+
+def depthwise_conv_pool_q8(
+    x: jax.Array,  # (H, W, C) or (N, H, W, C) int8, pre-padded
+    w: jax.Array,  # (k, k, 1, C) int8, grouped HWIO
+    b: jax.Array | None,  # (C,) int32, accumulator scale
+    *,
+    multiplier,  # tuple of C floats: per-channel requant multipliers
+    conv_stride: int = 1,
+    pool_k: int = 1,
+    pool_stride: int = 1,
+    activation: str = "relu",
+    interpret: bool | None = None,
+    row_block: int | None = None,
+) -> jax.Array:
+    """Fused int8 depthwise conv+act+pool.  Returns int8 (PH, PW, C)."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    # Per-channel multipliers ride as a (C,) f32 kernel operand (a scalar
+    # broadcasts to all channels).
+    ms = jnp.broadcast_to(
+        jnp.asarray(multiplier, jnp.float32).reshape(-1), (w.shape[-1],)
+    )
+    out = conv_pool_call(
+        x, w, b,
+        kernel_factory=lambda ow, rb: functools.partial(
+            _kernel_dw_q8, conv_stride=conv_stride, pool_k=pool_k,
+            pool_stride=pool_stride, k=w.shape[0], activation=activation,
+            out_w=ow, row_block=rb,
+        ),
+        out_dtype=jnp.int8,
+        conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride,
+        interpret=interpret, row_block=row_block,
+        extra_args=(ms,),
+    )
+    return out[0] if squeeze else out
+
+
+def _xla_depthwise_conv_pool_q8(x, w, b, *, multiplier, conv_stride, padding,
+                                pool_k, pool_stride, activation):
+    """Fused XLA int8 grouped-conv realization on the NCHW input: the
+    compiled fallback for backends without a compiled Pallas lowering.
+    Simulator op order (conv → bias → act → requant → pool), per-channel
+    requantization."""
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=(conv_stride, conv_stride),
+        padding=[(padding, padding)] * 2,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=w.shape[0],
+    )
+    if b is not None:
+        acc = acc + b[None, :, None, None]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0)
+    from repro.core import nn as core_nn
+
+    y = requantize_per_channel(acc, jnp.asarray(multiplier, jnp.float32))
+    return core_nn.maxpool2d(y, pool_k, pool_stride)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("multiplier", "conv_stride", "padding", "pool_k",
+                     "pool_stride", "activation", "impl", "interpret",
+                     "row_block"),
+)
+def fused_depthwise_conv_pool_q8(
+    x: jax.Array,  # (C, H, W) or (N, C, H, W) int8 — paper/PyTorch layout
+    w: jax.Array,  # (C, 1, k, k) int8, grouped OIHW
+    b: jax.Array | None = None,  # (C,) int32
+    *,
+    multiplier=(1.0,),  # tuple of C floats (per-channel; static/hashable)
+    conv_stride: int = 1,
+    padding: int = 0,
+    pool_k: int = 1,
+    pool_stride: int = 1,
+    activation: str = "relu",
+    impl: str = "auto",  # "auto" | "pallas" | "xla"
+    interpret: bool | None = None,
+    row_block: int | None = None,
+) -> jax.Array:
+    """Returns int8 (C, PH, PW) or (N, C, PH, PW).
+
+    ``pool_k == pool_stride == 1`` (the default) runs the un-pooled
+    depthwise+act+requant block — DS-CNN's shape — through the same fused
+    kernel; the int32 accumulator still never leaves VMEM/VREGs.
+    """
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+
+    if impl == "auto":
+        impl = "pallas" if has_compiled_pallas_backend() else "xla"
+    if impl == "xla":
+        out = _xla_depthwise_conv_pool_q8(
+            x, w, b, multiplier=multiplier, conv_stride=conv_stride,
+            padding=padding, pool_k=pool_k, pool_stride=pool_stride,
+            activation=activation,
+        )
+        return out[0] if squeeze else out
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    xh = jnp.transpose(x, (0, 2, 3, 1))  # NHWC (TPU lanes-last)
+    if padding:
+        xh = jnp.pad(xh, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    wh = jnp.transpose(w, (2, 3, 1, 0))  # (k, k, 1, C)
+    out = depthwise_conv_pool_q8(
         xh, wh, b, multiplier=multiplier, conv_stride=conv_stride,
         pool_k=pool_k, pool_stride=pool_stride, activation=activation,
         interpret=interpret, row_block=row_block,

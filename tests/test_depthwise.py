@@ -1,0 +1,463 @@
+"""Depthwise conv end-to-end + DS-CNN workload + padded-pool bugfix (ISSUE 5).
+
+Covers the acceptance criteria:
+  * `DepthwiseConv2d` behaves identically across every level of the stack:
+    spec shapes/params, float oracle (vs a per-channel dense-conv reference),
+    the fused Pallas kernels (float + int8, pooled and un-pooled), per-channel
+    int8 quantization/requant, fusion eligibility, segment stacking/batching,
+    and gcc-verified C emission;
+  * `ds_cnn()` plans (naive / ping-pong / reordered / CMSIS baseline bytes),
+    runs (float + int8, walker + compiled scan, bit-exact vs the oracles) and
+    emits gcc-verified C, with the reordered arena beating the CMSIS baseline;
+  * the padded-pool oracle/planner/emitter mismatch is fixed: `nn.maxpool2d`
+    honors `MaxPool2d.padding` (dtype-minimum padding; -128 on the int8
+    path), so oracle, `plan_dag` shapes, and the emitted C agree for
+    `padding != 0` — the regression tests compare all three;
+  * a hand-built `FusedConvPool` over a padded pool raises instead of
+    silently mis-shaping the plan.
+"""
+import shutil
+import subprocess
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import export_c, fusion, nn, pingpong, planner, quantize, schedule, segments
+from repro.core.graph import (
+    Add,
+    Conv2d,
+    DAGGraph,
+    DepthwiseConv2d,
+    Flatten,
+    FusedConvPool,
+    Input,
+    Linear,
+    MaxPool2d,
+    Node,
+    ReLU,
+    SequentialGraph,
+    ds_cnn,
+    spec_key,
+)
+from repro.quant import exec as qexec
+
+jax.config.update("jax_platform_name", "cpu")
+
+needs_gcc = pytest.mark.skipif(shutil.which("gcc") is None, reason="gcc not available")
+
+
+def _gcc_run(src: str, x: np.ndarray, dtype) -> np.ndarray:
+    with tempfile.TemporaryDirectory() as td:
+        c, b = Path(td) / "net.c", Path(td) / "net"
+        c.write_text(src)
+        subprocess.run(["gcc", "-O2", "-std=c99", str(c), "-o", str(b), "-lm"],
+                       check=True, capture_output=True)
+        out = subprocess.run([str(b)], input=np.asarray(x, dtype).tobytes(),
+                             capture_output=True, check=True).stdout
+    return np.frombuffer(out, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Spec + oracle
+# ---------------------------------------------------------------------------
+
+
+def test_depthwise_spec_shapes_and_params():
+    dw = DepthwiseConv2d(8, kernel_size=3, stride=2, padding=1, name="dw")
+    assert dw.out_shape((8, 9, 9)) == (8, 5, 5)
+    assert dw.param_count() == 8 * 9 + 8
+    assert dw.weight_count() == 8 * 9
+    with pytest.raises(ValueError):
+        dw.out_shape((4, 9, 9))  # channel mismatch
+    # spec isomorphism: equal hyper-params ⇒ equal keys, modulo names
+    assert spec_key(dw) == spec_key(DepthwiseConv2d(8, kernel_size=3, stride=2,
+                                                    padding=1, name="other"))
+    assert spec_key(dw) != spec_key(Conv2d(8, 8, kernel_size=3, stride=2, padding=1))
+
+
+def test_depthwise_oracle_matches_per_channel_dense_conv():
+    """Grouped conv == C independent single-channel dense convs."""
+    rng = np.random.default_rng(0)
+    C, k = 5, 3
+    x = jnp.asarray(rng.standard_normal((C, 10, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((C, 1, k, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((C,)), jnp.float32)
+    y = nn.depthwise_conv2d(x, w, b, stride=1, padding=1)
+    ref = jnp.stack([
+        nn.conv2d(x[c:c + 1], w[c:c + 1], b[c:c + 1], 1, 1)[0] for c in range(C)
+    ])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Padded max-pool: the oracle/planner/emitter mismatch (headline bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_padded_maxpool_oracle_matches_spec_shape():
+    mp = MaxPool2d(kernel_size=2, stride=2, padding=1)
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 8))
+    y = nn.apply_layer(mp, {}, x)
+    assert tuple(y.shape) == mp.out_shape((3, 8, 8)) == (3, 5, 5)
+    # value semantics: padding is the dtype minimum ⇒ border maxima come
+    # from the real values only
+    ref = nn.maxpool2d(jnp.pad(x, ((0, 0), (1, 1), (1, 1)),
+                               constant_values=-np.inf), 2, 2)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+
+
+def test_padded_maxpool_int8_pads_with_minus_128():
+    x = jnp.full((1, 2, 2), -100, jnp.int8)  # all values > -128
+    y = nn.maxpool2d(x, 2, 2, padding=1)
+    assert y.shape == (1, 2, 2)
+    np.testing.assert_array_equal(np.asarray(y), np.full((1, 2, 2), -100, np.int8))
+
+
+def _padded_pool_net():
+    return SequentialGraph([
+        Input(shape=(3, 10, 10), name="input"),
+        Conv2d(3, 4, kernel_size=3, padding=1, name="conv1"),
+        ReLU(name="relu1"),
+        MaxPool2d(kernel_size=2, stride=2, padding=1, name="pool1"),
+        Flatten(name="flatten"),
+        Linear(4 * 6 * 6, 5, name="fc"),
+    ])
+
+
+def test_padded_pool_never_fuses():
+    g = _padded_pool_net()
+    assert all(l.kind != "FusedConvPool" for l in fusion.fuse(g).layers)
+    assert all(n.layer.kind != "FusedConvPool"
+               for n in fusion.fuse_dag(DAGGraph.from_sequential(g)).nodes)
+
+
+@needs_gcc
+def test_padded_pool_regression_oracle_plan_and_c_agree():
+    """The ISSUE-5 regression: with padding=1 the oracle, the plan's shapes
+    and the emitted C engine must agree (they formerly three-way diverged:
+    the oracle hard-coded padding="VALID")."""
+    g = _padded_pool_net()
+    fused = fusion.fuse(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (3, 10, 10)), np.float32)
+
+    y_oracle = np.asarray(nn.forward(fused, params, jnp.asarray(x)))
+
+    # plan shapes: the planner's buffer sizes follow MaxPool2d.out_shape
+    plan = schedule.plan_dag(g)
+    bufs = {b.name: b.size_elems for b in plan.buffers}
+    assert bufs["pool1"] == 4 * 6 * 6  # (10/2 rounded with pad) not 5*5
+    y_walk, _ = pingpong.run_dag_with_arena(
+        fusion.fuse_dag(DAGGraph.from_sequential(g)), plan,
+        params, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y_walk), y_oracle, rtol=1e-5, atol=1e-6)
+
+    # emitted C
+    src = export_c.generate_c(fused, planner.plan_pingpong(g), params, with_main=True)
+    y_c = _gcc_run(src, x, np.float32)
+    np.testing.assert_allclose(y_c, y_oracle, rtol=1e-4, atol=1e-5)
+
+
+@needs_gcc
+def test_padded_pool_regression_int8_c_bit_exact():
+    g = _padded_pool_net()
+    fused = fusion.fuse(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(2)))
+    calib = jax.random.normal(jax.random.PRNGKey(3), (8, 3, 10, 10))
+    qm = quantize.quantize(fused, params, calib)
+    x_q = np.asarray(quantize.quantize_input(
+        qm, jax.random.normal(jax.random.PRNGKey(4), (3, 10, 10))), np.int8)
+    y_sim = np.asarray(quantize.simulate_int8_forward(qm, jnp.asarray(x_q)))
+    src = export_c.generate_c_int8(
+        qm, planner.plan_pingpong(g, io_dtype_bytes=1), with_main=True)
+    np.testing.assert_array_equal(_gcc_run(src, x_q, np.int8), y_sim)
+
+
+def test_fused_conv_pool_rejects_pool_padding():
+    conv = Conv2d(3, 4, kernel_size=3, padding=1, name="c")
+    with pytest.raises(ValueError, match="pool padding"):
+        FusedConvPool(conv=conv, pool_padding=1)
+    with pytest.raises(TypeError):
+        FusedConvPool(conv=None)  # conv is mandatory
+    # the valid form still constructs, with or without a depthwise conv
+    FusedConvPool(conv=conv)
+    FusedConvPool(conv=DepthwiseConv2d(4, kernel_size=3))
+
+
+# ---------------------------------------------------------------------------
+# Kernels (Pallas interpret on CPU + XLA fallback)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pool_k,pool_stride,padding",
+                         [(2, 2, 1), (1, 1, 1), (3, 2, 0), (1, 1, 0)])
+@pytest.mark.parametrize("impl,interpret", [("xla", None), ("pallas", True)])
+def test_depthwise_kernel_float_matches_oracle(pool_k, pool_stride, padding,
+                                               impl, interpret):
+    from repro.kernels.conv_pool.depthwise import fused_depthwise_conv_pool
+
+    rng = np.random.default_rng(1)
+    C, H, W, k = 6, 12, 10, 3
+    x = jnp.asarray(rng.standard_normal((2, C, H, W)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((C, 1, k, k)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((C,)) * 0.1, jnp.float32)
+    ref = nn.maxpool2d(
+        jax.nn.relu(nn.depthwise_conv2d(x, w, b, 1, padding)),
+        pool_k, pool_stride)
+    out = fused_depthwise_conv_pool(
+        x, w, b, padding=padding, pool_k=pool_k, pool_stride=pool_stride,
+        impl=impl, interpret=interpret)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("pool_k,pool_stride,padding", [(2, 2, 1), (1, 1, 1)])
+@pytest.mark.parametrize("impl,interpret", [("xla", None), ("pallas", True)])
+def test_depthwise_kernel_q8_bit_exact(pool_k, pool_stride, padding, impl, interpret):
+    from repro.quant.kernel_q8 import fused_depthwise_conv_pool_q8
+
+    rng = np.random.default_rng(2)
+    C, H, W, k = 6, 12, 10, 3
+    x_q = jnp.asarray(rng.integers(-128, 128, (2, C, H, W)), jnp.int8)
+    w_q = jnp.asarray(rng.integers(-127, 128, (C, 1, k, k)), jnp.int8)
+    b_q = jnp.asarray(rng.integers(-500, 500, (C,)), jnp.int32)
+    ms = tuple(float(m) for m in rng.uniform(1e-4, 5e-4, C))
+
+    acc = jax.lax.conv_general_dilated(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32), (1, 1),
+        [(padding, padding)] * 2, dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=C)
+    acc = jnp.maximum(acc + b_q[None, :, None, None], 0)
+    ref = nn.maxpool2d(
+        quantize.requantize_per_channel(acc, jnp.asarray(ms, jnp.float32)),
+        pool_k, pool_stride)
+    out = fused_depthwise_conv_pool_q8(
+        x_q, w_q, b_q, multiplier=ms, padding=padding, pool_k=pool_k,
+        pool_stride=pool_stride, impl=impl, interpret=interpret)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Per-channel quantization
+# ---------------------------------------------------------------------------
+
+
+def test_depthwise_quantizes_per_channel():
+    g = ds_cnn()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    calib = jax.random.normal(jax.random.PRNGKey(1), (8, 1, 49, 10))
+    qm = quantize.quantize_dag(fused, params, calib)
+    q = qm.layers["dw1"]
+    assert q.per_channel and np.shape(q.multiplier) == (64,)
+    assert len(set(np.asarray(q.multiplier).tolist())) > 1  # scales differ
+    # per-channel roundtrip bound: each channel within its own scale/2
+    w = np.asarray(params["dw1"]["w"], np.float32)
+    deq = q.w_q.astype(np.float32) * np.asarray(q.w_scale).reshape(-1, 1, 1, 1)
+    per_ch_err = np.abs(deq - w).reshape(64, -1).max(axis=1)
+    assert np.all(per_ch_err <= np.asarray(q.w_scale) / 2 + 1e-7)
+    # pointwise/dense layers stay per-tensor
+    assert not qm.layers["pw1"].per_channel
+
+
+# ---------------------------------------------------------------------------
+# Segment compiler: depthwise stacks and batches
+# ---------------------------------------------------------------------------
+
+
+def _dw_towers():
+    """Two isomorphic depthwise towers (3 DW+ReLU pairs each) + Add join."""
+    nodes = [Node(Input(shape=(4, 8, 8), name="input"))]
+    tails = []
+    for t in ("a", "b"):
+        prev = "input"
+        for d in (1, 2, 3):
+            name = f"dw{d}{t}"
+            nodes.append(Node(DepthwiseConv2d(4, kernel_size=3, padding=1,
+                                              name=name), (prev,)))
+            nodes.append(Node(ReLU(name=f"{name}_relu"), (name,)))
+            prev = f"{name}_relu"
+        tails.append(prev)
+    nodes.append(Node(Add(name="join"), tuple(tails)))
+    return DAGGraph(nodes)
+
+
+def test_depthwise_chains_stack_and_towers_batch():
+    g = _dw_towers()
+    plan = schedule.plan_dag(g, fused=False)
+    planner.verify_plan(plan)
+    _, _, segs = segments.segments_for_plan(g, plan)
+    batched = [s for s in segs if s.batched]
+    assert len(batched) == 1
+    (seg,) = batched
+    assert seg.kind == "DepthwiseConv2d" and seg.length == 3 and seg.n_branches == 2
+
+
+def test_depthwise_batched_scan_matches_oracles_float_and_int8():
+    g = _dw_towers()
+    plan = schedule.plan_dag(g, fused=False)
+    params = nn.init_params(g, jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 8, 8))
+    y_ref = nn.forward_dag(g, params, x)
+    y_scan, stats = pingpong.run_dag_with_arena_scan(g, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_scan),
+                               rtol=1e-5, atol=1e-5)
+    assert stats["batched_branches"] == 2 and stats["stacked_layers"] == 6
+
+    calib = jax.random.normal(jax.random.PRNGKey(5), (4, 4, 8, 8))
+    qm = quantize.quantize_dag(g, params, calib)
+    plan_q = schedule.plan_dag(g, fused=False, io_dtype_bytes=1)
+    x_q = quantize.quantize_input(qm, x)
+    y_sim = np.asarray(quantize.simulate_int8_dag_forward(qm, x_q))
+    y_qscan, _ = qexec.run_int8_dag_with_arena_scan(qm, plan_q, x_q)
+    np.testing.assert_array_equal(np.asarray(y_qscan), y_sim)
+
+
+# ---------------------------------------------------------------------------
+# DS-CNN workload
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ds_setup():
+    g = ds_cnn()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    plan = schedule.plan_dag(g)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 49, 10))
+    return g, fused, params, plan, x
+
+
+@pytest.fixture(scope="module")
+def ds_int8(ds_setup):
+    g, fused, params, plan, x = ds_setup
+    calib = jax.random.normal(jax.random.PRNGKey(2), (8, 1, 49, 10))
+    qm = quantize.quantize_dag(fused, params, calib)
+    plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+    x_q = quantize.quantize_input(qm, x)
+    return qm, plan_q, x_q
+
+
+def test_ds_cnn_shapes_and_fusion(ds_setup):
+    g, fused, *_ = ds_setup
+    shapes = g.shapes()
+    assert shapes["conv1"] == (64, 25, 5)
+    assert shapes["dw1"] == shapes["pw1"] == (64, 25, 5)
+    assert shapes["pool"] == (64, 5, 1) and shapes["fc"] == (12,)
+    # the last pointwise conv + relu + pool fuses (stride >= kernel)
+    fused_kinds = [n.layer.kind for n in fused.nodes]
+    assert "FusedConvPool" in fused_kinds
+    assert g.is_chain()
+
+
+def test_ds_cnn_planner_table_beats_cmsis(ds_setup):
+    g = ds_setup[0]
+    naive = planner.plan_naive(g.to_sequential(), io_dtype_bytes=1)
+    pp = planner.plan_pingpong(g, io_dtype_bytes=1)
+    rd = schedule.plan_dag(g, io_dtype_bytes=1)
+    cm = planner.plan_cmsis_baseline(g)
+    # (the CMSIS baseline is a byte-accounting model, not an executable
+    # offset layout — it is not verify_plan-able, matching the paper's use)
+    for p in (naive, pp, rd):
+        planner.verify_plan(p)
+    assert naive.activation_bytes() == 72822
+    assert pp.activation_bytes() == 16000
+    assert rd.activation_bytes() == 16000
+    assert cm.activation_bytes() == 18304  # 2×8000 + 2304 B dw im2col scratch
+    assert rd.activation_bytes() < cm.activation_bytes()
+    # the reordered DAG plan subsumes ping-pong on this chain
+    assert rd.activation_bytes() <= pp.activation_bytes()
+
+
+def test_ds_cnn_float_walker_and_scan_match_oracle(ds_setup):
+    g, fused, params, plan, x = ds_setup
+    y_ref = nn.forward_dag(g, params, x)
+    y_walk, _ = pingpong.run_dag_with_arena(fused, plan, params, x)
+    y_scan, _ = pingpong.run_dag_with_arena_scan(fused, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_walk), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ds_cnn_int8_walker_and_scan_bit_exact(ds_int8):
+    qm, plan_q, x_q = ds_int8
+    y_sim = np.asarray(quantize.simulate_int8_dag_forward(qm, x_q))
+    y_walk, _ = qexec.run_int8_dag_with_arena(qm, plan_q, x_q)
+    y_scan, _ = qexec.run_int8_dag_with_arena_scan(qm, plan_q, x_q)
+    np.testing.assert_array_equal(np.asarray(y_walk), y_sim)
+    np.testing.assert_array_equal(np.asarray(y_scan), y_sim)
+
+
+@needs_gcc
+def test_ds_cnn_c_float_roundtrip(ds_setup):
+    g, fused, params, plan, x = ds_setup
+    src = export_c.generate_c_dag(fused, plan, params, with_main=True)
+    y_c = _gcc_run(src, np.asarray(x, np.float32), np.float32)
+    y_ref = np.asarray(nn.forward_dag(g, params, x))
+    np.testing.assert_allclose(y_c, y_ref, rtol=1e-4, atol=1e-5)
+
+
+@needs_gcc
+def test_ds_cnn_c_int8_roundtrip(ds_int8):
+    qm, plan_q, x_q = ds_int8
+    src = export_c.generate_c_int8_dag(qm, plan_q, with_main=True)
+    assert "M_dw1[64]" in src  # per-channel requant table emitted
+    y_c = _gcc_run(src, np.asarray(x_q, np.int8), np.int8)
+    y_sim = np.asarray(quantize.simulate_int8_dag_forward(qm, x_q))
+    np.testing.assert_array_equal(y_c, y_sim)
+
+
+def test_depthwise_line_buffer_fusion_plans_and_runs():
+    """stride < kernel pooling after a depthwise conv fuses with a line
+    buffer, and the planner prices its scratch from the conv's *shape*
+    (DepthwiseConv2d has no out_channels attribute)."""
+    g = SequentialGraph([
+        Input(shape=(4, 13, 13), name="input"),
+        DepthwiseConv2d(4, kernel_size=3, padding=1, name="dw"),
+        ReLU(name="relu"),
+        MaxPool2d(kernel_size=3, stride=2, name="pool"),  # stride < kernel
+        Flatten(name="flatten"),
+        Linear(4 * 6 * 6, 3, name="fc"),
+    ])
+    fused = fusion.fuse(g)
+    assert fused.layers[1].kind == "FusedConvPool"
+    assert fused.layers[1].line_buffer_rows == 1
+    plan = planner.plan_pingpong(g)
+    assert plan.scratch_elems == 1 * 13 * 4  # line_buffer_rows · ow_conv · C
+    planner.verify_plan(plan)
+    dag_plan = schedule.plan_dag(g)  # priced fusion walks the same scratch
+    planner.verify_plan(dag_plan)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(8)))
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 13, 13))
+    y_ref = nn.forward(g, params, x)
+    y_arena, _ = pingpong.run_with_arena(fused, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_arena), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@needs_gcc
+def test_depthwise_fused_conv_pool_c_roundtrip():
+    """A DW+ReLU+pool window fuses (depthwise FusedConvPool) and the fused
+    Algorithm-1 loops emit correctly."""
+    g = SequentialGraph([
+        Input(shape=(4, 12, 12), name="input"),
+        DepthwiseConv2d(4, kernel_size=3, padding=1, name="dw"),
+        ReLU(name="relu"),
+        MaxPool2d(kernel_size=2, stride=2, name="pool"),
+        Flatten(name="flatten"),
+        Linear(4 * 6 * 6, 3, name="fc"),
+    ])
+    fused = fusion.fuse(g)
+    assert fused.layers[1].kind == "FusedConvPool"
+    assert fused.layers[1].conv.kind == "DepthwiseConv2d"
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(6)))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(7), (4, 12, 12)), np.float32)
+    src = export_c.generate_c(fused, planner.plan_pingpong(g), params, with_main=True)
+    y_c = _gcc_run(src, x, np.float32)
+    y_ref = np.asarray(nn.forward(fused, params, jnp.asarray(x)))
+    np.testing.assert_allclose(y_c, y_ref, rtol=1e-4, atol=1e-5)

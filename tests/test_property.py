@@ -12,7 +12,8 @@ Scheduler invariants on random DAGs (ISSUE 3):
   * the packed plan verifies and its arena is ≥ the liveness lower bound,
   * on chain DAGs the plan never exceeds the ping-pong arena.
 
-Segment-compiler invariants on random branching conv DAGs (ISSUE 4):
+Segment-compiler invariants on random branching conv DAGs (ISSUE 4;
+ISSUE 5 adds `DepthwiseConv2d` branches with per-channel int8 requant):
   * segments cover the schedule exactly once,
   * isomorphic-branch detection never merges branches with differing specs,
   * the batched-branch scan matches `nn.forward_dag` (float, fp tolerance)
@@ -31,9 +32,11 @@ import numpy as np
 
 from repro.core import fusion, nn, pingpong, planner, schedule
 from repro.core.graph import (
+    Add,
     Concat,
     Conv2d,
     DAGGraph,
+    DepthwiseConv2d,
     Flatten,
     Input,
     Linear,
@@ -251,14 +254,19 @@ def test_plan_dag_subsumes_pingpong_on_chains(sizes):
 def random_branchy_convnet(draw):
     """Random branching conv DAGs with sometimes-isomorphic branches.
 
-    A stem feeds B branches; each branch is a chain of convs whose specs are
-    drawn from a small pool, so some branch pairs are spec-identical (and
-    must batch) while others differ (and must never merge).  All convs are
-    channel- and shape-preserving, so any branch combination joins cleanly.
+    A stem feeds B branches; each branch is a chain of convs — dense or
+    *depthwise* (ISSUE 5: `DepthwiseConv2d` must ride the same schedule,
+    segment and executor machinery, incl. per-channel int8 requant) — whose
+    specs are drawn from a small pool, so some branch pairs are
+    spec-identical (and must batch) while others differ (and must never
+    merge).  All convs are channel- and shape-preserving, so any branch
+    combination joins cleanly.
     """
     c = draw(st.sampled_from([2, 4]))
     h = draw(st.sampled_from([6, 8]))
-    specs = [(3, True), (3, False), (5, True)]  # (kernel, trailing relu)
+    # (kernel, trailing relu, depthwise)
+    specs = [(3, True, False), (3, False, False), (5, True, False),
+             (3, True, True), (3, False, True)]
     n_branches = draw(st.integers(2, 3))
     length = draw(st.integers(1, 2))
     nodes = [Node(Input(shape=(c, h, h), name="input"))]
@@ -266,12 +274,12 @@ def random_branchy_convnet(draw):
     for b in range(n_branches):
         prev = "input"
         for j in range(length):
-            k, relu = specs[draw(st.integers(0, len(specs) - 1))]
+            k, relu, dw = specs[draw(st.integers(0, len(specs) - 1))]
             name = f"b{b}c{j}"
-            nodes.append(
-                Node(Conv2d(c, c, kernel_size=k, padding=k // 2, name=name),
-                     (prev,))
-            )
+            layer = (DepthwiseConv2d(c, kernel_size=k, padding=k // 2, name=name)
+                     if dw else
+                     Conv2d(c, c, kernel_size=k, padding=k // 2, name=name))
+            nodes.append(Node(layer, (prev,)))
             prev = name
             if relu:
                 nodes.append(Node(ReLU(name=f"{name}_relu"), (prev,)))
