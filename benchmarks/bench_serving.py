@@ -1,0 +1,259 @@
+"""Serving load-generator: the continuous-batching CNN engine under traffic.
+
+Where ``bench_hotpaths`` times executors in isolation, this bench drives the
+:class:`repro.serve.cnn_engine.CNNEngine` the way a deployed endpoint is
+driven — single-image requests against the pre-warmed AOT bucket ladder —
+and records what serving actually buys:
+
+* ``sequential`` — the no-batching baseline: the *same* engine machinery
+  pinned to bucket 1 / ``max_batch=1``, so the comparison isolates dynamic
+  batching (both sides pay identical queue/thread/H2D overheads),
+* ``batched``    — burst arrivals in groups of 8 against the bucket ladder;
+  sustained QPS here over sequential QPS is the continuous-batching win the
+  CI gate asserts (≥ 1.5× on LeNet, float and int8),
+* ``poisson``    — open-loop Poisson arrivals at ~60% of batched capacity,
+  the p50/p95/p99 latency-under-load row,
+* ``cold_start`` — first-request latency with ``prewarm=False`` (pays
+  ``.lower().compile()`` inline) vs the pre-warmed engine (LeNet float +
+  int8); the ladder's point is the warm/cold ratio ≪ 0.1.
+
+Six configs: {lenet, residual_cifar, ds_cnn} × {f32, int8}.  Results merge
+into the ``--out`` JSON (``BENCH_hotpaths.json`` by default) as a
+``serving`` section, and the coalescing-policy knobs + percentile summary
+are stamped into the shared ``meta`` block:
+
+    PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out PATH]
+
+``--smoke`` shrinks request counts and the bucket ladder to fit the CI job
+budget while still exercising every config and both CI-gated ratios.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from bench_hotpaths import run_metadata
+
+IN_SHAPES = {
+    "lenet": (1, 32, 32),
+    "residual_cifar": (3, 32, 32),
+    "ds_cnn": (1, 49, 10),
+}
+
+
+def _build_float(name):
+    """(fused graph, plan, params) for one workload's float arena executor."""
+    from repro.core import fusion, nn, planner, schedule
+    from repro.core.graph import DAGGraph, ds_cnn, lenet5, residual_cifar
+
+    g = {"lenet": lenet5, "residual_cifar": residual_cifar, "ds_cnn": ds_cnn}[name]()
+    if isinstance(g, DAGGraph):
+        fused = fusion.fuse_dag(g)
+        plan = schedule.plan_dag(g)
+    else:
+        fused = fusion.fuse(g)
+        plan = planner.plan_pingpong(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    return fused, plan, params
+
+
+def _build_int8(name, rng):
+    """(quantized model, int8 plan) for one workload."""
+    from repro.core import fusion, nn, planner, quantize, schedule
+    from repro.core.graph import DAGGraph, ds_cnn, lenet5, residual_cifar
+
+    g = {"lenet": lenet5, "residual_cifar": residual_cifar, "ds_cnn": ds_cnn}[name]()
+    calib = jnp.asarray(
+        rng.standard_normal((16, *IN_SHAPES[name])), jnp.float32
+    )
+    if isinstance(g, DAGGraph):
+        fused = fusion.fuse_dag(g)
+        plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+        params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+        qm = quantize.quantize_dag(fused, params, calib)
+    else:
+        fused = fusion.fuse(g)
+        plan_q = planner.plan_pingpong(g, io_dtype_bytes=1)
+        params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+        qm = quantize.quantize(fused, params, calib)
+    return qm, plan_q
+
+
+def _images(name, dtype, n, rng, qm=None):
+    """A request trace: float images, quantized to int8 wire format when the
+    engine is an int8 engine (requests arrive already q7-encoded)."""
+    from repro.core import quantize
+
+    xs = rng.standard_normal((n, *IN_SHAPES[name])).astype(np.float32)
+    if dtype == "int8":
+        return np.asarray(quantize.quantize_input(qm, jnp.asarray(xs)))
+    return xs
+
+
+def _engine(name, dtype, buckets, policy, *, prewarm=True, rng=None):
+    from repro.serve.cnn_engine import CNNEngine
+
+    if dtype == "int8":
+        qm, plan_q = _build_int8(name, rng)
+        eng = CNNEngine.from_quantized(
+            qm, plan_q, buckets=buckets, policy=policy, prewarm=prewarm
+        )
+        return eng, qm
+    fused, plan, params = _build_float(name)
+    eng = CNNEngine.from_graph(
+        fused, plan, params, buckets=buckets, policy=policy, prewarm=prewarm
+    )
+    return eng, None
+
+
+def _row(name, dtype, mode, run):
+    return {
+        "workload": name, "dtype": dtype, "mode": mode,
+        "requests": run.requests,
+        "qps": round(run.qps, 1),
+        "p50_ms": round(run.latency_ms(50), 3),
+        "p95_ms": round(run.latency_ms(95), 3),
+        "p99_ms": round(run.latency_ms(99), 3),
+        "avg_batch": round(run.avg_batch, 2),
+        "padding_frac": round(run.padding_frac, 4),
+        "prewarm_s": round(run.prewarm_s, 3),
+    }
+
+
+def bench_config(name, dtype, *, smoke: bool, buckets, rng):
+    """Sequential baseline + batch-8 burst + Poisson open-loop for one
+    (workload, dtype) pair.  Returns (rows, speedup)."""
+    from repro.serve.cnn_engine import CoalescePolicy
+
+    n_seq = 8 if smoke else 32
+    n_burst = 32 if smoke else 128
+    n_poisson = 24 if smoke else 96
+    trials = 2  # best-of: a transient runner stall must not tank one side
+    rows = []
+
+    # Sequential baseline: same engine, batching disabled — isolates the
+    # continuous-batching win from queue/thread/H2D overheads.
+    eng, qm = _engine(name, dtype, (1,), CoalescePolicy(max_batch=1), rng=rng)
+    with eng:
+        eng.serve(_images(name, dtype, 2, rng, qm))  # warm dispatch path
+        run_seq = max(
+            (eng.serve(_images(name, dtype, n_seq, rng, qm))[1]
+             for _ in range(trials)), key=lambda r: r.qps)
+    rows.append(_row(name, dtype, "sequential", run_seq))
+
+    # Batched engine: burst arrivals in groups of 8 (the CI-gated shape),
+    # then Poisson open-loop on the same pre-warmed ladder.
+    eng, qm = _engine(
+        name, dtype, buckets, CoalescePolicy(max_batch=8, max_wait_s=0.002),
+        rng=rng,
+    )
+    with eng:
+        eng.serve(_images(name, dtype, 8, rng, qm))  # warm dispatch path
+        gap = 0.001
+        arrivals = [(i // 8) * gap for i in range(n_burst)]
+        run_b = max(
+            (eng.serve(_images(name, dtype, n_burst, rng, qm), arrivals)[1]
+             for _ in range(trials)), key=lambda r: r.qps)
+        rows.append(_row(name, dtype, "batched", run_b))
+
+        lam = max(run_b.qps * 0.6, 1.0)  # ~60% of capacity: loaded, stable
+        gaps = rng.exponential(1.0 / lam, n_poisson)
+        arrivals = np.cumsum(gaps) - gaps[0]
+        _, run_p = eng.serve(_images(name, dtype, n_poisson, rng, qm), arrivals)
+        rows.append(_row(name, dtype, "poisson", run_p))
+
+    speedup = round(run_b.qps / run_seq.qps, 2) if run_seq.qps else 0.0
+    return rows, speedup
+
+
+def bench_cold_start(name, dtype, rng):
+    """First-request latency: cold (bucket compiled inline on first dispatch)
+    vs pre-warmed (AOT at construction).  The ladder's raison d'être."""
+    from repro.serve.cnn_engine import CoalescePolicy
+
+    policy = CoalescePolicy(max_batch=1)
+    cold, qm = _engine(name, dtype, (1,), policy, prewarm=False, rng=rng)
+    img = _images(name, dtype, 1, rng, qm)[0]
+    with cold:
+        req = cold.submit(img)
+        req.result(timeout=300.0)
+        cold_s = req.latency_s
+
+    warm, qm = _engine(name, dtype, (1,), policy, prewarm=True, rng=rng)
+    with warm:
+        warm.serve(_images(name, dtype, 2, rng, qm))  # settle the threads
+        req = warm.submit(img)
+        req.result(timeout=300.0)
+        warm_s = req.latency_s
+    return {
+        "cold_first_s": round(cold_s, 4),
+        "warm_first_s": round(warm_s, 4),
+        "warm_prewarm_s": round(warm.stats.prewarm_s, 4),
+        "ratio": round(warm_s / cold_s, 4) if cold_s else 0.0,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small traces + short ladder (CI artifact check)")
+    ap.add_argument("--out", default="BENCH_hotpaths.json")
+    args = ap.parse_args(argv)
+
+    buckets = (1, 4, 8) if args.smoke else (1, 2, 4, 8, 16)
+    policy_meta = {
+        "buckets": list(buckets), "max_batch": 8, "max_wait_ms": 2.0,
+        "arrival_shape": "burst-8", "poisson_load_frac": 0.6,
+    }
+
+    rows, speedup, percentiles = [], {}, {}
+    for name in ("lenet", "residual_cifar", "ds_cnn"):
+        for dtype in ("f32", "int8"):
+            rng = np.random.default_rng(11)
+            r, s = bench_config(name, dtype, smoke=args.smoke,
+                                buckets=buckets, rng=rng)
+            rows += r
+            key = f"{name}.{dtype}"
+            speedup[key] = s
+            pois = next(x for x in r if x["mode"] == "poisson")
+            percentiles[key] = {k: pois[k] for k in ("p50_ms", "p95_ms", "p99_ms")}
+            print(f"{key}: seq {r[0]['qps']} qps, batched {r[1]['qps']} qps "
+                  f"({s}x), poisson p99 {pois['p99_ms']} ms")
+
+    cold_start = {}
+    for dtype in ("f32", "int8"):
+        rng = np.random.default_rng(12)
+        cs = bench_cold_start("lenet", dtype, rng)
+        cold_start[f"lenet.{dtype}"] = cs
+        print(f"cold-start lenet.{dtype}: cold {cs['cold_first_s']}s, "
+              f"warm {cs['warm_first_s']}s (ratio {cs['ratio']})")
+
+    serving = {
+        "rows": rows, "speedup": speedup, "cold_start": cold_start,
+        "policy": policy_meta,
+    }
+
+    out = Path(args.out)
+    data = json.loads(out.read_text()) if out.exists() else {}
+    data.setdefault("meta", run_metadata())
+    # satellite (f): stamp policy + percentile summary into run_metadata
+    data["meta"]["serving_policy"] = policy_meta
+    data["meta"]["serving_percentiles"] = percentiles
+    data["serving"] = serving
+    out.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {out} (serving: {len(rows)} rows, "
+          f"{len(speedup)} configs)")
+
+
+if __name__ == "__main__":
+    main()

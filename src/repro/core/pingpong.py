@@ -220,10 +220,10 @@ def make_scan_executor(
                 (cur, _), _ = jax.lax.scan(body, (cur, cur), stacked,
                                            length=seg.length)
             # buffers[0] is the input, so step i writes plan buffer i+1.
-            if _prod(cur.shape[nbatch:]) != sizes[seg.start + seg.length]:
+            if _prod(cur.shape[nbatch:]) != sizes[seg.start + seg.steps_per_branch]:
                 raise ValueError(
                     f"segment {names}: produced {cur.shape} but plan "
-                    f"expects {sizes[seg.start + seg.length]} elements"
+                    f"expects {sizes[seg.start + seg.steps_per_branch]} elements"
                 )
         return cur
 
@@ -380,6 +380,10 @@ def make_dag_executor(
     identical up to weights) execute as a *single* scan with a batched
     two-bank carry — branch inputs stacked on a leading axis, per-position
     weights stacked ``(L, B, ...)``, outputs split back apart at the join.
+    **Spec-periodic** chain runs (period p ≥ 2, e.g. the alternating dw/pw
+    DS-CNN backbone) scan ``steps/p`` iterations whose body applies the p
+    phase layers in order, with per-phase weights stacked along the scan
+    axis — the same two-bank carry, one scan for the whole backbone.
     Join nodes and heterogeneous steps are unrolled.  Accepts one input
     (``in_shape``) or a batch (``(N, *in_shape)``).
 
@@ -418,34 +422,50 @@ def make_dag_executor(
         vals: Dict[str, jax.Array] = {order[0]: val}
         for seg in segments:
             first = steps[seg.branches[0][0]]
+            # The scan body applies the segment's `period` phase layers in
+            # order (period 1: the homogeneous run).  Phase j's weights for
+            # iteration k come from branch position k·period + j, so the
+            # per-phase stack along the scan axis is names[j::period].
+            phases = [steps[n] for n in seg.branches[0][: seg.period]]
             if seg.batched:
                 # Batched isomorphic branches: stack the B branch inputs on a
                 # new leading axis and run the whole group as one dispatch
                 # (L = 1) or one lax.scan with a batched two-bank carry
                 # (L > 1; the chain-run invariants guarantee a constant
-                # carry shape).  Weights stack to (L, B, ...).
+                # carry shape).  Weights stack to (L, B, ...) per phase.
                 xs = jnp.stack(
                     [vals[steps[br[0]].inputs[0]] for br in seg.branches]
                 )
-                per_pos = [
-                    _stack_params(params, [br[j] for br in seg.branches])
-                    for j in range(seg.length)
-                ]
                 if seg.length == 1:
+                    per_branch = _stack_params(
+                        params, [br[0] for br in seg.branches]
+                    )
                     ys = jax.vmap(
                         lambda p, xx, _step=first: _apply(_step, p, [xx])
-                    )(per_pos[0], xs)
+                    )(per_branch, xs)
                 else:
-                    stacked = jax.tree.map(
-                        lambda *leaves: jnp.stack(leaves), *per_pos
+                    stacked = tuple(
+                        jax.tree.map(
+                            lambda *leaves: jnp.stack(leaves),
+                            *[
+                                _stack_params(
+                                    params,
+                                    [br[k * seg.period + j] for br in seg.branches],
+                                )
+                                for k in range(seg.length)
+                            ],
+                        )
+                        for j in range(seg.period)
                     )
 
-                    def body(carry, p, _step=first):
+                    def body(carry, ps, _phases=phases):
                         bank_cur, bank_prev = carry
                         del bank_prev  # freed: this step's output lands there
-                        out = jax.vmap(
-                            lambda pp, xx: _apply(_step, pp, [xx])
-                        )(p, bank_cur)
+                        out = bank_cur
+                        for step, p in zip(_phases, ps):
+                            out = jax.vmap(
+                                lambda pp, xx, _step=step: _apply(_step, pp, [xx])
+                            )(p, out)
                         return (out, bank_cur), None
 
                     (ys, _), _ = jax.lax.scan(body, (xs, xs), stacked,
@@ -465,16 +485,21 @@ def make_dag_executor(
                 cur = _apply(first, params.get(first.name, {}), xs)
             else:
                 cur = vals[first.inputs[0]]
-                stacked = _stack_params(params, names)
+                stacked = tuple(
+                    _stack_params(params, names[j :: seg.period])
+                    for j in range(seg.period)
+                )
 
-                def body(carry, p, _step=first):
+                def body(carry, ps, _phases=phases):
                     bank_cur, bank_prev = carry
                     del bank_prev  # freed: this step's output lands there
-                    out = _apply(_step, p, [bank_cur])
+                    out = bank_cur
+                    for step, p in zip(_phases, ps):
+                        out = _apply(step, p, [out])
                     return (out, bank_cur), None
 
                 (cur, _), _ = jax.lax.scan(body, (cur, cur), stacked,
-                                           length=len(names))
+                                           length=seg.length)
             if _prod(cur.shape[nbatch:]) != sizes[names[-1]]:
                 raise ValueError(
                     f"segment {names}: produced {cur.shape} but plan expects "
@@ -537,3 +562,27 @@ def run_batch_dag_with_arena(
     stats = dict(stats)
     stats["batch"] = int(xs.shape[0])
     return out, stats
+
+
+# ---------------------------------------------------------------------------
+# Ahead-of-time lowering (serving entry point)
+# ---------------------------------------------------------------------------
+
+
+def aot_compile(fn: Callable, params: Params, x_shape, dtype):
+    """AOT ``.lower().compile()`` of a jitted executor at a fixed input shape.
+
+    ``fn`` is any ``(params, x) -> y`` executor built by
+    :func:`make_scan_executor` or :func:`make_dag_executor` (float or int8 —
+    the numerics travel in ``apply_*_fn`` and ``params``).  Lowering against
+    ``jax.ShapeDtypeStruct`` specs compiles the XLA program *now*, so a
+    serving replica pays first-call jit cost at deploy time instead of on
+    the first request — the cold-start half of the ROADMAP's AOT item.  The
+    returned ``jax.stages.Compiled`` accepts exactly ``(params, x)`` with
+    ``x.shape == x_shape``; the serving engine keeps one per batch bucket.
+    """
+    p_spec = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)), params
+    )
+    x_spec = jax.ShapeDtypeStruct(tuple(x_shape), dtype)
+    return fn.lower(p_spec, x_spec).compile()

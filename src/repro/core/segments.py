@@ -22,6 +22,16 @@ Three segment shapes exist, all expressed by one :class:`Segment` record:
   the carry ``(B, ...)``, and the B outputs split back apart at the join
   (DESIGN.md §8).
 
+Stacked runs are additionally **spec-periodic** (DAG schedules only): a
+sole-consumer chain whose specs repeat with period *p* ≥ 2 — the
+alternating depthwise/pointwise DS-CNN backbone is the canonical case —
+compiles into a *single* ``lax.scan`` of length ``steps/p`` whose body
+applies the *p* phase layers in order, with per-phase weights stacked
+along the scan axis.  The two-bank carry is unchanged: cross-period
+isomorphism guarantees the phase-0 input shape equals the phase-(p-1)
+output shape, so the carry stays constant across iterations.  Period 1
+is the former homogeneous-run special case.
+
 Segments are pure schedule metadata (names + positions); the executors
 supply the numerics, so one partition serves the float and int8 runtimes
 alike.
@@ -45,17 +55,29 @@ class Segment:
     schedule position of the first covered step (an index into the plan's
     buffer order for DAG schedules, into the materialized-step list for
     sequential graphs).  Branch *b*, position *j* is the step executed at
-    schedule position ``start + b·length + j``.
+    schedule position ``start + b·steps_per_branch + j``.
+
+    ``period`` is the spec period of a stacked run: branch position *j* is
+    isomorphic to position ``j mod period``, so the run scans
+    ``steps_per_branch / period`` iterations whose body applies the
+    ``period`` phase layers in order.  ``period == 1`` is the homogeneous
+    run (every step isomorphic to the first).
     """
 
     start: int
     kind: str
     branches: Tuple[Tuple[str, ...], ...]
+    period: int = 1
+
+    @property
+    def steps_per_branch(self) -> int:
+        """Schedule steps covered per branch (= length · period)."""
+        return len(self.branches[0])
 
     @property
     def length(self) -> int:
-        """Steps per branch (the scan length when stacked)."""
-        return len(self.branches[0])
+        """Scan length: iterations of the (period-long) body per branch."""
+        return len(self.branches[0]) // self.period
 
     @property
     def n_branches(self) -> int:
@@ -75,6 +97,11 @@ class Segment:
     def batched(self) -> bool:
         """True iff the segment batches isomorphic branches (B>1)."""
         return self.n_branches > 1
+
+    @property
+    def periodic(self) -> bool:
+        """True iff the scan body covers more than one phase layer."""
+        return self.period > 1
 
 
 def cache_fifo(cache: Dict, key, max_entries: int, build: Callable):
@@ -132,22 +159,21 @@ def _steps_isomorphic(a: _StepView, b: _StepView) -> bool:
     )
 
 
-def _chain_runs(
+def _sole_consumer_chains(
     steps: Dict[str, _StepView],
     consumers: Dict[str, Tuple[str, ...]],
     order: Sequence[str],
     first: int,
-) -> List[Tuple[int, Tuple[str, ...]]]:
-    """Maximal stackable runs over ``order[first:]``.
+) -> List[Tuple[int, List[str]]]:
+    """Maximal sole-consumer chains over ``order[first:]``.
 
-    A run extends from step *i* to *i+1* iff they form a sole-consumer chain
-    (step *i+1*'s only input is step *i*, which is read by nothing else, and
-    both steps are single-input) with identical layer specs, view kinds and
-    in/out shapes — the exact condition under which the two-bank scan carry
-    stays valid.  Returns ``(start, names)`` pairs; ``start`` indexes
-    ``order``.
+    A chain extends from step *i* to *i+1* iff step *i+1*'s only input is
+    step *i*, which is read by nothing else, and both steps are
+    single-input — the structural condition under which a two-bank scan
+    carry is valid regardless of specs.  Returns ``(start, names)`` pairs;
+    ``start`` indexes ``order``; chains tile the schedule contiguously.
     """
-    runs: List[Tuple[int, Tuple[str, ...]]] = []
+    chains: List[Tuple[int, List[str]]] = []
     i = first
     while i < len(order):
         names = [order[i]]
@@ -157,13 +183,73 @@ def _chain_runs(
             if j >= len(order):
                 break
             prev, cur = steps[order[j - 1]], steps[order[j]]
-            if cur.inputs != (prev.name,) or consumers[prev.name] != (cur.name,):
+            if len(cur.inputs) != 1 or cur.inputs != (prev.name,):
                 break
-            if not _steps_isomorphic(prev, cur):
+            if consumers[prev.name] != (cur.name,):
                 break
             names.append(cur.name)
-        runs.append((i, tuple(names)))
+        chains.append((i, names))
         i += len(names)
+    return chains
+
+
+def _periodic_factor(
+    steps: Dict[str, _StepView], chain: Sequence[str], *, max_period: int
+) -> List[Tuple[int, Tuple[str, ...], int]]:
+    """Factor one sole-consumer chain into spec-periodic runs.
+
+    Greedy from the left: at each position pick the period *p* (1 ≤ p ≤
+    ``max_period``) whose repetition covers the most steps, requiring at
+    least two full periods; ties prefer the smallest period, so homogeneous
+    runs keep their former period-1 form.  Cross-period isomorphism
+    (`_steps_isomorphic`, position-wise) implies the phase-0 input shape
+    equals the phase-(p-1) output shape — the constant scan carry.  Steps
+    that repeat under no period become single-step runs.  Returns
+    ``(offset_in_chain, names, period)`` triples tiling the chain.
+    """
+    runs: List[Tuple[int, Tuple[str, ...], int]] = []
+    n = len(chain)
+    i = 0
+    while i < n:
+        best_p, best_cover = 1, 1
+        for p in range(1, min(max_period, (n - i) // 2) + 1):
+            reps = 1
+            while i + (reps + 1) * p <= n and all(
+                _steps_isomorphic(
+                    steps[chain[i + j]], steps[chain[i + reps * p + j]]
+                )
+                for j in range(p)
+            ):
+                reps += 1
+            if reps >= 2 and reps * p > best_cover:
+                best_p, best_cover = p, reps * p
+        runs.append((i, tuple(chain[i : i + best_cover]), best_p))
+        i += best_cover
+    return runs
+
+
+def _chain_runs(
+    steps: Dict[str, _StepView],
+    consumers: Dict[str, Tuple[str, ...]],
+    order: Sequence[str],
+    first: int,
+    *,
+    max_period: int = 1,
+) -> List[Tuple[int, Tuple[str, ...], int]]:
+    """Maximal stackable runs over ``order[first:]``.
+
+    Sole-consumer chains (`_sole_consumer_chains`) factored into
+    spec-periodic runs (`_periodic_factor`).  With ``max_period=1`` this is
+    exactly the former homogeneous-run partition; DAG schedules pass a
+    larger bound so alternating backbones (DS-CNN's dw/pw) stack too.
+    Returns ``(start, names, period)`` triples; ``start`` indexes ``order``.
+    """
+    runs: List[Tuple[int, Tuple[str, ...], int]] = []
+    for start, chain in _sole_consumer_chains(steps, consumers, order, first):
+        for off, names, period in _periodic_factor(
+            steps, chain, max_period=max_period
+        ):
+            runs.append((start + off, names, period))
     return runs
 
 
@@ -183,27 +269,30 @@ def _batchable(steps: Dict[str, _StepView], names: Tuple[str, ...]) -> bool:
 
 def _group_segments(
     steps: Dict[str, _StepView],
-    runs: List[Tuple[int, Tuple[str, ...]]],
+    runs: List[Tuple[int, Tuple[str, ...], int]],
     *,
     batch_branches: bool,
 ) -> Tuple[Segment, ...]:
     """Fold adjacent isomorphic, mutually independent runs into one Segment.
 
     Runs tile the schedule contiguously, so adjacency in the run list is
-    adjacency in the schedule; a candidate branch joins the group iff its
-    (single) input step lies outside the group — i.e. it was produced before
-    the group's start — which makes the branches executable simultaneously.
+    adjacency in the schedule; a candidate branch joins the group iff it has
+    the same period, matches position-wise, and its (single) input step lies
+    outside the group — i.e. it was produced before the group's start —
+    which makes the branches executable simultaneously.
     """
     segs: List[Segment] = []
     i = 0
     while i < len(runs):
-        start, names = runs[i]
+        start, names, period = runs[i]
         group = [names]
         j = i + 1
         if batch_branches and _batchable(steps, names):
             covered = set(names)
             while j < len(runs):
-                _, cand = runs[j]
+                _, cand, cand_period = runs[j]
+                if cand_period != period:
+                    break
                 if not _batchable(steps, cand):
                     break
                 if not _run_isomorphic(steps, names, cand):
@@ -218,6 +307,7 @@ def _group_segments(
                 start=start,
                 kind=steps[names[0]].layer.kind,
                 branches=tuple(group),
+                period=period,
             )
         )
         i = j if len(group) > 1 else i + 1
@@ -229,16 +319,26 @@ def _group_segments(
 # ---------------------------------------------------------------------------
 
 
+# Largest spec period the run factorization searches for.  2 covers the
+# depthwise/pointwise alternation (DS-CNN, MobileNet-style backbones); a
+# few more cost nothing on these graph sizes and catch e.g. dw/pw/pool
+# triples, so the bound is small but not minimal.
+_MAX_PERIOD = 4
+
+
 def compile_segments(mat, order: Sequence[str], *, batch_branches: bool = True):
     """Compile a scheduled DAG into segments.
 
     ``mat`` is a `repro.core.schedule.MaterializedDAG`; ``order`` the plan's
     schedule (``order[0]`` is the input step, which owns no segment).  With
     ``batch_branches=False`` only chain stacking applies — the per-branch
-    dispatch baseline the benchmarks compare against.
+    dispatch baseline the benchmarks compare against.  Chain runs are
+    spec-periodic up to period ``_MAX_PERIOD``.
     """
     steps = _dag_step_views(mat)
-    runs = _chain_runs(steps, mat.consumers(), tuple(order), 1)
+    runs = _chain_runs(
+        steps, mat.consumers(), tuple(order), 1, max_period=_MAX_PERIOD
+    )
     return _group_segments(steps, runs, batch_branches=batch_branches)
 
 
@@ -273,7 +373,9 @@ def sequential_segments(graph) -> Tuple[Segment, ...]:
         name: (order[i + 1],) if i + 1 < len(order) else ()
         for i, name in enumerate(order)
     }
-    runs = _chain_runs(views, consumers, order, 0)
+    # max_period stays 1 here: `planner.scan_segments` (StackedRun) promises
+    # homogeneous runs, and the sequential nets have no alternating backbone.
+    runs = _chain_runs(views, consumers, order, 0, max_period=1)
     segs = _group_segments(views, runs, batch_branches=False)
     # Strip the positional prefix: report plain layer names, like the plans.
     return tuple(
@@ -283,6 +385,7 @@ def sequential_segments(graph) -> Tuple[Segment, ...]:
             branches=tuple(
                 tuple(n.split(":", 1)[1] for n in br) for br in s.branches
             ),
+            period=s.period,
         )
         for s in segs
     )
@@ -323,7 +426,13 @@ def segment_stats(segments: Sequence[Segment]) -> Dict[str, int]:
     return {
         "segments": len(segments),
         "stacked_layers": sum(
-            s.length * s.n_branches for s in segments if s.stacked or s.batched
+            s.steps_per_branch * s.n_branches
+            for s in segments
+            if s.stacked or s.batched
         ),
         "batched_branches": sum(s.n_branches for s in segments if s.batched),
+        "periodic_segments": sum(1 for s in segments if s.periodic),
+        "periodic_steps": sum(
+            s.steps_per_branch * s.n_branches for s in segments if s.periodic
+        ),
     }

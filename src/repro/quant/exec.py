@@ -147,6 +147,34 @@ def apply_int8_node(layer, p, xs) -> jax.Array:
     return apply_int8_layer(layer, p, xs[0])
 
 
+def make_int8_executor(
+    qm: QuantizedModel,
+    plan: MemoryPlan,
+    *,
+    batch_branches: bool = True,
+) -> Tuple[Callable, Dict[str, jax.Array]]:
+    """``(jitted fn, params)`` — the AOT-lowerable form of the int8 executors.
+
+    The serving entry point: unlike :func:`make_int8_scan_executor` (which
+    closes over the device params), this returns the raw jitted
+    ``(params, x_q) -> y_q`` callable plus the params pytree, exactly what
+    ``pingpong.aot_compile`` needs to pre-compile one executable per batch
+    bucket.  Dispatches on the graph kind: DAG-quantized models run the
+    segment-compiled DAG executor, sequential models the stacked-weight scan
+    executor — both with the §5 int8 step.
+    """
+    if isinstance(qm.graph, DAGGraph):
+        fn = pingpong.make_dag_executor(
+            qm.graph, plan, apply_node_fn=apply_int8_node,
+            batch_branches=batch_branches,
+        )
+    else:
+        fn = pingpong.make_scan_executor(
+            qm.graph, plan, apply_layer_fn=apply_int8_layer
+        )
+    return fn, int8_params(qm)
+
+
 def run_int8_with_arena(
     qm: QuantizedModel,
     plan: MemoryPlan,

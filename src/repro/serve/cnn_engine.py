@@ -1,0 +1,381 @@
+"""Continuous-batching CNN serving engine over the compiled arena executors.
+
+What a deployed KWS/vision endpoint faces is not the per-inference setting
+CMSIS-NN benchmarks but variable-arrival single-image traffic; throughput
+there comes from dynamic batching and from keeping the compiled executors
+and their donated arenas resident across steps.  This engine is the
+serving-side realization of the paper's static-arena plan:
+
+* **Bucketed executor ladder** — one arena executor per batch size on a
+  small ladder (1/2/4/8/16 by default), each ``.lower().compile()``'d
+  ahead of time at engine construction (``pingpong.aot_compile``), held in
+  the :class:`repro.serve.step.BucketedExecutorCache` shared with the LLM
+  engine.  No request ever pays first-call jit cost; batches pad up to the
+  nearest bucket with zero images whose outputs are dropped.
+
+* **Ping-pong staging banks** — each bucket owns a pair of host staging
+  arrays allocated once and alternated between consecutive dispatches, the
+  paper's two-bank discipline at serving granularity: while the device
+  still reads the H2D copy of batch *k*, the host stacks batch *k+1* into
+  the other bank.  (Inside each compiled executor the scan carry is donated
+  by XLA exactly as in per-call use.)
+
+* **Async host pipeline** — a dispatcher thread drains the request queue,
+  stacks and dispatches (JAX dispatch is asynchronous), and hands the
+  in-flight device value to a completer thread that blocks, scatters
+  outputs and stamps completion times.  The handoff queue holds at most one
+  in-flight batch (double buffering), so coalescing + H2D of batch *k+1*
+  overlaps device compute of batch *k* and memory stays bounded.
+
+* **Coalescing policy** — the dispatcher takes the first queued request,
+  then keeps draining until ``max_batch`` requests are in hand or
+  ``max_wait_s`` has elapsed since the first one: the knob that trades p50
+  latency (shorter wait) against throughput (fuller buckets).
+
+Numerics are whatever the wrapped executor computes: engine outputs are
+bit-exact against the same executor called directly at the same bucket —
+padding rows never contaminate real rows — and therefore inherit the
+executors' guarantees (int8: bit-exact vs ``simulate_int8_dag_forward``;
+float: bit-exact vs the jitted batched oracle, see ``tests/test_serving``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pingpong
+from repro.core.graph import DAGGraph
+from repro.serve.step import BucketedExecutorCache
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16)
+
+
+def _input_shape(graph) -> Tuple[int, ...]:
+    """Per-image input shape of either graph kind (the Input pseudo-layer)."""
+    if isinstance(graph, DAGGraph):
+        return tuple(graph.nodes[0].layer.shape)
+    return tuple(graph.layers[0].shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoalescePolicy:
+    """When the dispatcher closes a batch.
+
+    ``max_batch`` caps the drain (at most the largest bucket);
+    ``max_wait_s`` is the deadline measured from the first request taken for
+    the batch — raising it fills buckets better under sparse arrivals at the
+    cost of p50 latency.
+    """
+
+    max_batch: int = 16
+    max_wait_s: float = 0.002
+
+
+@dataclasses.dataclass
+class CNNRequest:
+    """One single-image inference request."""
+
+    rid: int
+    x: np.ndarray
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    y: Optional[np.ndarray] = None
+    _done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False
+    )
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not completed")
+        return self.y
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Engine-side accounting for one serving run."""
+
+    requests: int = 0
+    batches: int = 0
+    padded_lanes: int = 0
+    bucket_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    wall_s: float = 0.0
+    prewarm_s: float = 0.0
+    compiles: int = 0
+
+    @property
+    def qps(self) -> float:
+        return self.requests / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def avg_batch(self) -> float:
+        return self.requests / self.batches if self.batches else 0.0
+
+    @property
+    def padding_frac(self) -> float:
+        lanes = self.requests + self.padded_lanes
+        return self.padded_lanes / lanes if lanes else 0.0
+
+    def latency_ms(self, pct: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_s), pct) * 1e3)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "avg_batch": round(self.avg_batch, 2),
+            "padding_frac": round(self.padding_frac, 4),
+            "qps": round(self.qps, 1),
+            "p50_ms": round(self.latency_ms(50), 3),
+            "p95_ms": round(self.latency_ms(95), 3),
+            "p99_ms": round(self.latency_ms(99), 3),
+        }
+
+
+class CNNEngine:
+    """Continuous-batching engine over one compiled arena executor.
+
+    ``executor_fn`` is a jitted ``(params, x) -> y`` executor from
+    ``pingpong.make_scan_executor`` / ``make_dag_executor`` (float or int8 —
+    the numerics travel in the executor and ``params``).  The engine AOT
+    compiles it once per bucket at construction (``prewarm=True``; pass
+    ``False`` to measure the cold-start cost the ladder removes), then
+    serves ``submit``'d requests from two pipelined worker threads.
+
+    Use as a context manager, or call :meth:`start` / :meth:`stop`.
+    """
+
+    def __init__(
+        self,
+        executor_fn: Callable,
+        params,
+        in_shape: Sequence[int],
+        dtype,
+        *,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        policy: Optional[CoalescePolicy] = None,
+        prewarm: bool = True,
+    ):
+        self.in_shape = tuple(int(d) for d in in_shape)
+        self.dtype = jnp.dtype(dtype)
+        self.params = params
+        self.policy = policy or CoalescePolicy()
+        buckets = tuple(sorted({int(b) for b in buckets}))
+        if self.policy.max_batch > buckets[-1]:
+            # the drain can never exceed the largest compiled bucket
+            self.policy = dataclasses.replace(
+                self.policy, max_batch=buckets[-1]
+            )
+        t0 = time.perf_counter()
+        self._cache = BucketedExecutorCache(
+            lambda b: pingpong.aot_compile(
+                executor_fn, params, (b, *self.in_shape), self.dtype
+            ),
+            buckets,
+            prewarm=prewarm,
+        )
+        self.stats = ServeStats(
+            prewarm_s=time.perf_counter() - t0 if prewarm else 0.0
+        )
+        # Two host staging banks per bucket, allocated once and alternated
+        # between consecutive dispatches (ping-pong at serving granularity).
+        self._banks: Dict[int, List[np.ndarray]] = {
+            b: [
+                np.zeros((b, *self.in_shape), self.dtype),
+                np.zeros((b, *self.in_shape), self.dtype),
+            ]
+            for b in buckets
+        }
+        self._bank_idx: Dict[int, int] = {b: 0 for b in buckets}
+        self._queue: "queue.Queue[CNNRequest]" = queue.Queue()
+        # Depth-1 handoff: at most one dispatched-but-uncompleted batch.
+        self._inflight: "queue.Queue[Tuple[jax.Array, List[CNNRequest]]]" = (
+            queue.Queue(maxsize=1)
+        )
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._rid = 0
+        self._lock = threading.Lock()
+
+    # -- constructors ----------------------------------------------------------
+
+    @classmethod
+    def from_graph(cls, graph, plan, params, **kw) -> "CNNEngine":
+        """Float engine for a (graph, plan) pair — DAG graphs through the
+        segment-compiled DAG executor, sequential graphs through the
+        stacked-weight scan executor."""
+        if isinstance(graph, DAGGraph):
+            fn = pingpong.make_dag_executor(graph, plan)
+        else:
+            fn = pingpong.make_scan_executor(graph, plan)
+        return cls(fn, params, _input_shape(graph), jnp.float32, **kw)
+
+    @classmethod
+    def from_quantized(cls, qm, plan, **kw) -> "CNNEngine":
+        """Int8 engine for a quantized model: a genuine int8 request path
+        (int8 wire format, int8 arena banks) at 1/4 the float bytes."""
+        from repro.quant.exec import make_int8_executor
+
+        fn, params = make_int8_executor(qm, plan)
+        return cls(fn, params, _input_shape(qm.graph), jnp.int8, **kw)
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def start(self) -> "CNNEngine":
+        if self._threads:
+            return self
+        self._stop.clear()
+        self._threads = [
+            threading.Thread(target=self._dispatch_loop, daemon=True,
+                             name="cnn-engine-dispatch"),
+            threading.Thread(target=self._complete_loop, daemon=True,
+                             name="cnn-engine-complete"),
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain outstanding work, then stop the worker threads."""
+        if not self._threads:
+            return
+        self._queue.join()
+        self._inflight.join()
+        self._stop.set()
+        for t in self._threads:
+            t.join()
+        self._threads = []
+
+    def __enter__(self) -> "CNNEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- request path ----------------------------------------------------------
+
+    def submit(self, x: np.ndarray) -> CNNRequest:
+        """Enqueue one image; returns a handle with ``.result(timeout)``."""
+        if not self._threads:
+            raise RuntimeError("engine not started (use `with engine:`)")
+        x = np.asarray(x, self.dtype)
+        if x.shape != self.in_shape:
+            raise ValueError(f"request shape {x.shape} != {self.in_shape}")
+        with self._lock:
+            rid = self._rid
+            self._rid += 1
+        req = CNNRequest(rid=rid, x=x, t_submit=time.perf_counter())
+        self._queue.put(req)
+        return req
+
+    def serve(
+        self,
+        images: np.ndarray,
+        arrivals_s: Optional[Sequence[float]] = None,
+    ) -> Tuple[List[CNNRequest], ServeStats]:
+        """Replay a trace: submit ``images[i]`` at ``arrivals_s[i]`` (seconds
+        from the start; ``None`` = all at once), wait for completion, and
+        return (requests, stats for this run)."""
+        before = len(self.stats.latencies_s)
+        t0 = time.perf_counter()
+        reqs = []
+        for i in range(len(images)):
+            if arrivals_s is not None:
+                delay = t0 + arrivals_s[i] - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+            reqs.append(self.submit(images[i]))
+        for r in reqs:
+            r.result(timeout=120.0)
+        run = dataclasses.replace(
+            self.stats,
+            requests=len(reqs),
+            latencies_s=self.stats.latencies_s[before:],
+            wall_s=time.perf_counter() - t0,
+            compiles=self._cache.misses,
+        )
+        return reqs, run
+
+    # -- worker loops ----------------------------------------------------------
+
+    def _coalesce(self) -> List[CNNRequest]:
+        """Take one batch off the queue under the coalescing policy."""
+        try:
+            first = self._queue.get(timeout=0.01)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.policy.max_wait_s
+        while len(batch) < self.policy.max_batch:
+            timeout = deadline - time.perf_counter()
+            if timeout <= 0:
+                # past the deadline: take only what is already queued
+                try:
+                    batch.append(self._queue.get_nowait())
+                except queue.Empty:
+                    break
+            else:
+                try:
+                    batch.append(self._queue.get(timeout=timeout))
+                except queue.Empty:
+                    break
+        return batch
+
+    def _dispatch_loop(self) -> None:
+        while not (self._stop.is_set() and self._queue.empty()):
+            batch = self._coalesce()
+            if not batch:
+                continue
+            n = len(batch)
+            bucket, compiled = self._cache.for_batch(n)
+            # alternate the two staging banks for this bucket
+            idx = self._bank_idx[bucket]
+            self._bank_idx[bucket] = 1 - idx
+            bank = self._banks[bucket][idx]
+            for i, r in enumerate(batch):
+                bank[i] = r.x
+            if n < bucket:
+                bank[n:] = 0
+            # Asynchronous dispatch: the device value is handed to the
+            # completer; this thread returns to coalescing batch k+1 while
+            # the device computes batch k.
+            y = compiled(self.params, jnp.asarray(bank))
+            self._inflight.put((y, batch))
+            with self._lock:
+                self.stats.batches += 1
+                self.stats.requests += n
+                self.stats.padded_lanes += bucket - n
+                self.stats.bucket_hist[bucket] = (
+                    self.stats.bucket_hist.get(bucket, 0) + 1
+                )
+            for _ in batch:
+                self._queue.task_done()
+
+    def _complete_loop(self) -> None:
+        while not (self._stop.is_set() and self._inflight.empty()):
+            try:
+                y, batch = self._inflight.get(timeout=0.01)
+            except queue.Empty:
+                continue
+            out = np.asarray(y)  # blocks until the device value is ready
+            t_done = time.perf_counter()
+            for i, r in enumerate(batch):
+                r.y = out[i]
+                r.t_done = t_done
+                r._done.set()
+            with self._lock:
+                self.stats.latencies_s.extend(r.latency_s for r in batch)
+            self._inflight.task_done()

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
+from repro.serve.step import BucketedExecutorCache
 
 
 @dataclasses.dataclass
@@ -48,6 +49,26 @@ def cache_bytes(cache) -> int:
     return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))
 
 
+def _insert_lane(cache, cache1, lane):
+    """Copy lane 0 of a fresh single-lane prefill cache into lane ``lane``
+    of the engine cache.
+
+    Top-level keys: "g{i}" = group-stacked (lane axis 1), "r{i}" = plain
+    (lane axis 0) — the ``Model.init_cache`` layout contract.  Jitted with a
+    *traced* lane index, this is one compiled executable shared by every
+    admission; the former eager form dispatched one ``.at[].set`` per cache
+    leaf per admission and rebuilt the whole cache dict on the host.
+    """
+    out = {}
+    for key, sub in cache.items():
+        if key.startswith("g"):
+            put = lambda dst, s: dst.at[:, lane].set(s[:, 0].astype(dst.dtype))
+        else:
+            put = lambda dst, s: dst.at[lane].set(s[0].astype(dst.dtype))
+        out[key] = jax.tree.map(put, sub, cache1[key])
+    return out
+
+
 class Engine:
     def __init__(self, model: Model, params, *, lanes: int, max_seq: int):
         self.model = model
@@ -59,9 +80,20 @@ class Engine:
         self.lane_pos = np.zeros(lanes, np.int32)  # next position per lane
         self.stats = EngineStats()
 
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode_step(p, c, t, pos, max_seq)
+        # The decode step lives in the shared bucketed cache (one bucket:
+        # the lane count) — the same cache implementation the CNN engine
+        # uses for its AOT batch ladder (`repro.serve.cnn_engine`).
+        self._decode_cache = BucketedExecutorCache(
+            lambda b: jax.jit(
+                lambda p, c, t, pos: model.decode_step(p, c, t, pos, max_seq)
+            ),
+            buckets=(lanes,),
         )
+        self._decode = self._decode_cache.get(lanes)
+        # Lane insertion is one compiled program (lane index traced, so all
+        # lanes share a single executable) instead of an eager per-leaf
+        # `.at[].set` chain over the whole cache per admission.
+        self._insert = jax.jit(_insert_lane)
 
     # -- admission -------------------------------------------------------------
     def _admit(self, req: Request, lane: int) -> None:
@@ -70,17 +102,7 @@ class Engine:
         cache1, logits = self.model.prefill(
             self.params, {"tokens": prompt}, self.max_seq
         )
-        # copy lane-0 of the fresh cache into this lane of the engine cache.
-        # top-level keys: "g{i}" = group-stacked (lane axis 1), "r{i}" = plain
-        # (lane axis 0) — the Model.init_cache layout contract.
-        new_cache = dict(self.cache)
-        for key, sub in self.cache.items():
-            if key.startswith("g"):
-                put = lambda dst, s: dst.at[:, lane].set(s[:, 0].astype(dst.dtype))
-            else:
-                put = lambda dst, s: dst.at[lane].set(s[0].astype(dst.dtype))
-            new_cache[key] = jax.tree.map(put, sub, cache1[key])
-        self.cache = new_cache
+        self.cache = self._insert(self.cache, cache1, jnp.int32(lane))
         first = int(jnp.argmax(logits[0]))
         req.out_tokens.append(first)
         self.lane_req[lane] = req

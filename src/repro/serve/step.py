@@ -1,4 +1,12 @@
-"""Serving steps: prefill and decode under pjit/GSPMD.
+"""Serving steps: the shared bucketed-executor cache, plus prefill and
+decode under pjit/GSPMD.
+
+:class:`BucketedExecutorCache` is the one compiled-callable cache both
+engines share: the legacy LLM engine (`repro.serve.engine`) holds its jitted
+decode step in a one-bucket ladder, and the CNN engine
+(`repro.serve.cnn_engine`) holds one AOT-compiled arena executor per batch
+bucket.  Requests pad up to the nearest bucket, so the jit cache never sees
+an unplanned shape.
 
 ``decode`` lowers one new token against a seq_len KV cache (the assignment's
 ``decode_*`` / ``long_*`` cells).  Cache shardings come from
@@ -8,13 +16,78 @@ runs in two alternating HBM arenas, exactly the paper's ping-pong buffers.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.transformer import Model
 from repro.sharding.policy import ShardingPolicy
+
+
+# ---------------------------------------------------------------------------
+# Bucketed executor cache (shared by the LLM and CNN engines)
+# ---------------------------------------------------------------------------
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket ≥ n from an ascending ladder (requests pad up)."""
+    if n < 1:
+        raise ValueError(f"batch size must be >= 1, got {n}")
+    for b in buckets:
+        if b >= n:
+            return int(b)
+    raise ValueError(f"batch {n} exceeds the largest bucket {buckets[-1]}")
+
+
+class BucketedExecutorCache:
+    """Batch-bucket ladder → compiled executable, built once per bucket.
+
+    ``lower_fn(bucket)`` produces the callable for one batch size — the CNN
+    engine passes ``pingpong.aot_compile`` (a ``jax.stages.Compiled``, paid
+    at construction), the LLM engine a plain ``jax.jit`` closure (compiled
+    lazily on first call).  Either way the *cache* is this class: one entry
+    per bucket, no rebuilds, `misses` counting how many lowerings actually
+    ran — the executor-cache contamination tests key on that.
+    """
+
+    def __init__(
+        self,
+        lower_fn: Callable[[int], Any],
+        buckets: Sequence[int],
+        *,
+        prewarm: bool = True,
+    ):
+        if not buckets:
+            raise ValueError("need at least one bucket")
+        self.buckets: Tuple[int, ...] = tuple(sorted({int(b) for b in buckets}))
+        self._lower = lower_fn
+        self._compiled: Dict[int, Any] = {}
+        if prewarm:
+            for b in self.buckets:
+                self.get(b)
+
+    def bucket_for(self, n: int) -> int:
+        return bucket_for(n, self.buckets)
+
+    def get(self, bucket: int) -> Any:
+        """The compiled executable for one exact bucket size."""
+        if bucket not in self.buckets:
+            raise KeyError(f"{bucket} is not on the ladder {self.buckets}")
+        hit = self._compiled.get(bucket)
+        if hit is None:
+            hit = self._compiled[bucket] = self._lower(bucket)
+        return hit
+
+    def for_batch(self, n: int) -> Tuple[int, Any]:
+        """(bucket, executable) serving a batch of n requests (pads up)."""
+        b = self.bucket_for(n)
+        return b, self.get(b)
+
+    @property
+    def misses(self) -> int:
+        """How many buckets have been lowered (== compiles when AOT)."""
+        return len(self._compiled)
 
 
 def make_decode_step(model: Model, max_seq: int, with_memory: bool = False):

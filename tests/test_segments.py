@@ -231,6 +231,128 @@ def test_three_way_branches_batch():
 
 
 # ---------------------------------------------------------------------------
+# Spec-periodic chain stacking (period >= 2)
+# ---------------------------------------------------------------------------
+
+
+def test_ds_cnn_backbone_compiles_into_one_periodic_scan():
+    """The alternating dw/pw DS-CNN backbone stacks as ONE period-2 scan:
+    dw1..pw3 (6 steps, 3 iterations) — pw4 is fused into the pool step, so
+    dw4 stays a single step at the boundary."""
+    from repro.core.graph import ds_cnn
+
+    g = ds_cnn()
+    fused = fusion.fuse_dag(g)
+    plan = schedule.plan_dag(g)
+    _, _, segs = segments.segments_for_plan(fused, plan)
+    periodic = [s for s in segs if s.periodic]
+    assert len(periodic) == 1
+    (seg,) = periodic
+    assert seg.period == 2 and seg.length == 3 and seg.steps_per_branch == 6
+    assert seg.branches[0] == ("dw1", "pw1", "dw2", "pw2", "dw3", "pw3")
+    stats = segments.segment_stats(segs)
+    assert stats["periodic_segments"] == 1
+    assert stats["periodic_steps"] == 6
+
+
+def test_ds_cnn_periodic_scan_matches_oracles():
+    from repro.core.graph import ds_cnn
+    from repro.quant import exec as qexec
+
+    g = ds_cnn()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(6)))
+    plan = schedule.plan_dag(g)
+    x = jax.random.normal(jax.random.PRNGKey(11), (1, 49, 10))
+    y_ref = nn.forward_dag(fused, params, x)
+    y_scan, stats = pingpong.run_dag_with_arena_scan(fused, plan, params, x)
+    assert stats["periodic_segments"] == 1
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_scan),
+                               rtol=1e-5, atol=1e-5)
+    # int8: the periodic scan is bit-exact vs the eager q7 simulator
+    calib = jax.random.normal(jax.random.PRNGKey(12), (8, 1, 49, 10))
+    qm = quantize.quantize_dag(fused, params, calib)
+    plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+    x_q = quantize.quantize_input(qm, x)
+    y_sim = np.asarray(quantize.simulate_int8_dag_forward(qm, x_q))
+    y_q, _ = qexec.run_int8_dag_with_arena_scan(qm, plan_q, x_q)
+    np.testing.assert_array_equal(np.asarray(y_q), y_sim)
+
+
+def _alternating_chain(phases, reps, ch=4, hw=8):
+    """Input -> phases repeated `reps` times, as a chain DAG."""
+    nodes = [Node(Input(shape=(ch, hw, hw), name="input"))]
+    prev = "input"
+    for r in range(reps):
+        for i, mk in enumerate(phases):
+            name = f"p{i}_{r}"
+            nodes.append(Node(mk(name), (prev,)))
+            prev = name
+    return DAGGraph(nodes)
+
+
+def test_synthetic_period2_chain_stacks():
+    g = _alternating_chain(
+        [lambda n: Conv2d(4, 4, kernel_size=3, padding=1, name=n),
+         lambda n: Conv2d(4, 4, kernel_size=1, name=n)], reps=3)
+    plan = schedule.plan_dag(g, fused=False)
+    _, _, segs = segments.segments_for_plan(g, plan)
+    periodic = [s for s in segs if s.periodic]
+    assert len(periodic) == 1
+    (seg,) = periodic
+    assert seg.period == 2 and seg.length == 3
+    params = nn.init_params(g, jax.random.PRNGKey(14))
+    x = jax.random.normal(jax.random.PRNGKey(15), (4, 8, 8))
+    y_ref = nn.forward_dag(g, params, x)
+    y_scan, _ = pingpong.run_dag_with_arena_scan(g, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_scan),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_synthetic_period3_chain_stacks():
+    g = _alternating_chain(
+        [lambda n: Conv2d(4, 4, kernel_size=3, padding=1, name=n),
+         lambda n: Conv2d(4, 4, kernel_size=1, name=n),
+         lambda n: Conv2d(4, 4, kernel_size=5, padding=2, name=n)], reps=2)
+    plan = schedule.plan_dag(g, fused=False)
+    _, _, segs = segments.segments_for_plan(g, plan)
+    (seg,) = [s for s in segs if s.periodic]
+    assert seg.period == 3 and seg.length == 2
+    params = nn.init_params(g, jax.random.PRNGKey(16))
+    x = jax.random.normal(jax.random.PRNGKey(17), (4, 8, 8))
+    np.testing.assert_allclose(
+        np.asarray(nn.forward_dag(g, params, x)),
+        np.asarray(pingpong.run_dag_with_arena_scan(g, plan, params, x)[0]),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_homogeneous_chain_prefers_period_one():
+    """A homogeneous run is also periodic at p=2 — ties on covered steps
+    must resolve to the plain period-1 stack (cheapest body)."""
+    g = _alternating_chain(
+        [lambda n: Conv2d(4, 4, kernel_size=3, padding=1, name=n)], reps=4)
+    plan = schedule.plan_dag(g, fused=False)
+    _, _, segs = segments.segments_for_plan(g, plan)
+    stacked = [s for s in segs if s.stacked]
+    assert stacked and all(s.period == 1 for s in segs)
+    assert stacked[0].length == 4
+
+
+def test_periodic_detection_requires_two_full_periods():
+    """dw-pw-dw (an incomplete second period) must not form a periodic
+    segment — the tail phase stays a single step."""
+    g = _alternating_chain(
+        [lambda n: Conv2d(4, 4, kernel_size=3, padding=1, name=n),
+         lambda n: Conv2d(4, 4, kernel_size=1, name=n)], reps=1)
+    # append one extra phase-0 step (dw-pw-dw)
+    extra = Conv2d(4, 4, kernel_size=3, padding=1, name="tail")
+    g = DAGGraph(g.nodes + [Node(extra, (g.nodes[-1].name,))])
+    plan = schedule.plan_dag(g, fused=False)
+    _, _, segs = segments.segments_for_plan(g, plan)
+    assert all(not s.periodic for s in segs)
+
+
+# ---------------------------------------------------------------------------
 # Schedule-priced fusion
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,344 @@
+"""Continuous-batching CNN serving engine (ISSUE 6).
+
+Covers the acceptance criteria:
+  * the shared bucketed executor cache: ladder selection, AOT pre-warm,
+    bounded compiles, and no cross-graph/cross-bucket contamination when two
+    caches over different models are interleaved,
+  * ``cache_fifo`` bounded-FIFO eviction (the executor-memo substrate),
+  * ``pingpong.aot_compile`` produces a ``jax.stages.Compiled`` bit-exact
+    with the jitted executor,
+  * serving outputs are exact for every bucket size *including padded
+    partial batches* — padding rows (even garbage ones) never contaminate
+    real rows — float engines bit-exact vs the jitted batched oracle and
+    within fp tolerance of the eager forward, int8 engines bit-for-bit vs
+    ``simulate_int8_dag_forward``,
+  * the threaded engine end-to-end: whatever batches the coalescer forms,
+    every request's output equals its oracle row.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusion, nn, pingpong, planner, quantize, schedule, segments
+from repro.core.graph import ds_cnn, lenet5, residual_cifar
+from repro.serve.cnn_engine import CNNEngine, CoalescePolicy
+from repro.serve.step import BucketedExecutorCache, bucket_for
+
+
+@pytest.fixture(scope="module")
+def lenet_setup():
+    g = lenet5()
+    fused = fusion.fuse(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    plan = planner.plan_pingpong(g)
+    return fused, plan, params
+
+
+@pytest.fixture(scope="module")
+def dscnn_q8_setup():
+    g = ds_cnn()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(6)))
+    calib = jax.random.normal(jax.random.PRNGKey(7), (8, 1, 49, 10))
+    qm = quantize.quantize_dag(fused, params, calib)
+    plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+    return qm, plan_q
+
+
+# ---------------------------------------------------------------------------
+# Bucket ladder + shared executor cache
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_for_ladder():
+    buckets = (1, 2, 4, 8)
+    assert [bucket_for(n, buckets) for n in (1, 2, 3, 4, 5, 8)] == [1, 2, 4, 4, 8, 8]
+    with pytest.raises(ValueError):
+        bucket_for(0, buckets)
+    with pytest.raises(ValueError):
+        bucket_for(9, buckets)
+
+
+def test_bucketed_cache_prewarm_counts_lowerings():
+    lowered = []
+    cache = BucketedExecutorCache(lambda b: lowered.append(b) or (lambda x: x * b),
+                                  (4, 1, 2), prewarm=True)
+    assert cache.buckets == (1, 2, 4)       # sorted, deduped
+    assert sorted(lowered) == [1, 2, 4]     # every bucket lowered once
+    assert cache.misses == 3
+    b, fn = cache.for_batch(3)
+    assert b == 4 and fn(1) == 4
+    assert cache.misses == 3                # hits never re-lower
+    with pytest.raises(KeyError):
+        cache.get(3)                        # off-ladder exact lookup
+
+
+def test_bucketed_cache_lazy_without_prewarm():
+    lowered = []
+    cache = BucketedExecutorCache(lambda b: lowered.append(b) or b, (1, 2),
+                                  prewarm=False)
+    assert cache.misses == 0
+    assert cache.get(2) == 2
+    assert lowered == [2] and cache.misses == 1
+
+
+def test_bucketed_caches_interleaved_graphs_no_contamination(lenet_setup):
+    """Two caches over two different (graph, plan) pairs, calls interleaved
+    across buckets: each executable keeps answering for its own graph and
+    bucket, and neither cache re-lowers."""
+    fused, plan, params = lenet_setup
+    g2 = residual_cifar()
+    fused2 = fusion.fuse_dag(g2)
+    params2 = fusion.rename_params(fused2, nn.init_params(g2, jax.random.PRNGKey(1)))
+    plan2 = schedule.plan_dag(g2)
+
+    fn1 = pingpong.make_scan_executor(fused, plan)
+    fn2 = pingpong.make_dag_executor(fused2, plan2)
+    c1 = BucketedExecutorCache(
+        lambda b: pingpong.aot_compile(fn1, params, (b, 1, 32, 32), jnp.float32),
+        (1, 2), prewarm=True)
+    c2 = BucketedExecutorCache(
+        lambda b: pingpong.aot_compile(fn2, params2, (b, 3, 32, 32), jnp.float32),
+        (1, 2), prewarm=True)
+
+    rng = np.random.default_rng(2)
+    x1 = jnp.asarray(rng.standard_normal((2, 1, 32, 32)), jnp.float32)
+    x2 = jnp.asarray(rng.standard_normal((2, 3, 32, 32)), jnp.float32)
+
+    def ref(fn, p, x):
+        # same-shape jit reference: identical program → bit-exact oracle
+        return np.asarray(jax.jit(fn)(p, x))
+
+    # interleave: g1/b2, g2/b1, g1/b1, g2/b2 — every answer stays its own
+    np.testing.assert_array_equal(
+        np.asarray(c1.get(2)(params, x1)), ref(fn1, params, x1))
+    np.testing.assert_array_equal(
+        np.asarray(c2.get(1)(params2, x2[:1])), ref(fn2, params2, x2[:1]))
+    np.testing.assert_array_equal(
+        np.asarray(c1.get(1)(params, x1[:1])), ref(fn1, params, x1[:1]))
+    np.testing.assert_array_equal(
+        np.asarray(c2.get(2)(params2, x2)), ref(fn2, params2, x2))
+    assert c1.misses == 2 and c2.misses == 2
+
+
+def test_cache_fifo_bounded_eviction():
+    store, built = {}, []
+
+    def build(k):
+        return lambda: built.append(k) or k
+
+    assert segments.cache_fifo(store, "a", 2, build("a")) == "a"
+    assert segments.cache_fifo(store, "b", 2, build("b")) == "b"
+    assert segments.cache_fifo(store, "a", 2, build("a2")) == "a"  # hit, no build
+    assert built == ["a", "b"]
+    # third key evicts the oldest entry ("a"), FIFO not LRU
+    assert segments.cache_fifo(store, "c", 2, build("c")) == "c"
+    assert set(store) == {"b", "c"} and len(store) == 2
+    # "a" was evicted → rebuilt on next request (the new build's value wins)
+    assert segments.cache_fifo(store, "a", 2, build("a3")) == "a3"
+    assert built == ["a", "b", "c", "a3"]
+
+
+def test_aot_compile_bit_exact(lenet_setup):
+    fused, plan, params = lenet_setup
+    fn = pingpong.make_scan_executor(fused, plan)
+    compiled = pingpong.aot_compile(fn, params, (4, 1, 32, 32), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 1, 32, 32))
+    np.testing.assert_array_equal(
+        np.asarray(compiled(params, x)), np.asarray(jax.jit(fn)(params, x)))
+
+
+# ---------------------------------------------------------------------------
+# Padded partial batches: bucket exactness without thread scheduling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 3, 5, 7, 8])
+def test_padded_partial_batches_row_independent(lenet_setup, n):
+    """Every partial batch padded up to its bucket is row-independent: the
+    padding lanes can hold garbage without perturbing a single bit of the
+    real rows (vs the zero-padded call — so a padding bug cannot hide
+    behind zeros), and the real rows match the batched oracle.  Bitwise
+    equality across *different* batch shapes is not a float guarantee (XLA
+    reassociates per shape); within one bucket it is."""
+    fused, plan, params = lenet_setup
+    fn = pingpong.make_scan_executor(fused, plan)
+    cache = BucketedExecutorCache(
+        lambda b: pingpong.aot_compile(fn, params, (b, 1, 32, 32), jnp.float32),
+        (1, 2, 4, 8), prewarm=False)
+    rng = np.random.default_rng(n)
+    xs = rng.standard_normal((n, 1, 32, 32)).astype(np.float32)
+    oracle = np.asarray(jax.jit(jax.vmap(lambda im: nn.forward(fused, params, im))
+                                )(jnp.asarray(xs)))
+
+    bucket, compiled = cache.for_batch(n)
+    zero = np.zeros((bucket, 1, 32, 32), np.float32)
+    zero[:n] = xs
+    garbage = np.full((bucket, 1, 32, 32), 1e6, np.float32)
+    garbage[:n] = xs
+    y_zero = np.asarray(compiled(params, jnp.asarray(zero)))[:n]
+    y_garb = np.asarray(compiled(params, jnp.asarray(garbage)))[:n]
+    np.testing.assert_array_equal(y_zero, y_garb)
+    np.testing.assert_allclose(y_zero, oracle, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# The threaded engine end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_engine_float_end_to_end(lenet_setup):
+    """Whatever batches the coalescer happens to form, every request's
+    output matches the batched oracle and the eager forward within fp
+    tolerance — and serving never compiles past the pre-warmed ladder."""
+    fused, plan, params = lenet_setup
+    rng = np.random.default_rng(5)
+    imgs = rng.standard_normal((13, 1, 32, 32)).astype(np.float32)
+    eng = CNNEngine.from_graph(
+        fused, plan, params, buckets=(1, 2, 4),
+        policy=CoalescePolicy(max_batch=4, max_wait_s=0.001))
+    assert eng._cache.misses == 3  # AOT pre-warm compiled the whole ladder
+    with eng:
+        reqs, run = eng.serve(imgs)
+    assert run.requests == 13 and all(r.y is not None for r in reqs)
+    assert eng._cache.misses == 3  # serving never compiled anything new
+    assert run.batches >= 4        # max_batch=4 forces at least ceil(13/4)
+
+    oracle = np.asarray(jax.jit(jax.vmap(
+        lambda im: nn.forward(fused, params, im)))(jnp.asarray(imgs)))
+    got = np.stack([r.y for r in reqs])
+    np.testing.assert_allclose(got, oracle, rtol=1e-5, atol=1e-6)
+    eager = np.stack([np.asarray(nn.forward(fused, params, jnp.asarray(im)))
+                      for im in imgs[:3]])
+    np.testing.assert_allclose(got[:3], eager, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_single_bucket_bit_exact(lenet_setup):
+    """With one bucket the batch shape is deterministic, so the engine's
+    output must be bit-for-bit the direct compiled call."""
+    fused, plan, params = lenet_setup
+    eng = CNNEngine.from_graph(fused, plan, params, buckets=(1,),
+                               policy=CoalescePolicy(max_batch=1))
+    rng = np.random.default_rng(8)
+    img = rng.standard_normal((1, 32, 32)).astype(np.float32)
+    with eng:
+        y = eng.submit(img).result(timeout=30.0)
+    direct = np.asarray(
+        eng._cache.get(1)(params, jnp.asarray(img[None])))[0]
+    np.testing.assert_array_equal(y, direct)
+
+
+def test_engine_dag_float_exact():
+    g = residual_cifar()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(1)))
+    plan = schedule.plan_dag(g)
+    rng = np.random.default_rng(9)
+    imgs = rng.standard_normal((5, 3, 32, 32)).astype(np.float32)
+    eng = CNNEngine.from_graph(fused, plan, params, buckets=(1, 2),
+                               policy=CoalescePolicy(max_batch=2, max_wait_s=0.001))
+    with eng:
+        reqs, _ = eng.serve(imgs)
+    # Batch composition is thread-timing dependent and the DAG executor's
+    # branch vmap reassociates across batch sizes, so the threaded check is
+    # tolerance-based; the bitwise per-bucket guarantee is covered
+    # deterministically by test_padded_partial_batches_dag_row_independent.
+    oracle = np.asarray(jax.jit(jax.vmap(
+        lambda im: nn.forward_dag(fused, params, im)))(jnp.asarray(imgs)))
+    np.testing.assert_allclose(np.stack([r.y for r in reqs]), oracle,
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1, 3])
+def test_padded_partial_batches_dag_row_independent(n):
+    """DAG-executor buckets: garbage in the padding lanes changes nothing —
+    the padded call is bit-identical to the zero-padded one, and the real
+    rows match the eager oracle."""
+    g = residual_cifar()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(1)))
+    plan = schedule.plan_dag(g)
+    fn = pingpong.make_dag_executor(fused, plan)
+    compiled = pingpong.aot_compile(fn, params, (4, 3, 32, 32), jnp.float32)
+    rng = np.random.default_rng(n)
+    xs = rng.standard_normal((n, 3, 32, 32)).astype(np.float32)
+    zero = np.zeros((4, 3, 32, 32), np.float32)
+    zero[:n] = xs
+    garbage = np.full((4, 3, 32, 32), 1e6, np.float32)
+    garbage[:n] = xs
+    y_zero = np.asarray(compiled(params, jnp.asarray(zero)))[:n]
+    y_garb = np.asarray(compiled(params, jnp.asarray(garbage)))[:n]
+    np.testing.assert_array_equal(y_zero, y_garb)
+    eager = np.stack([np.asarray(nn.forward_dag(fused, params, jnp.asarray(im)))
+                      for im in xs])
+    np.testing.assert_allclose(y_zero, eager, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_int8_bit_exact_vs_simulator(dscnn_q8_setup):
+    """The int8 engine (int8 wire format, int8 banks) is bit-for-bit the
+    eager q7 simulator for every request across mixed bucket sizes."""
+    qm, plan_q = dscnn_q8_setup
+    rng = np.random.default_rng(13)
+    xs = jnp.asarray(rng.standard_normal((5, 1, 49, 10)), jnp.float32)
+    xq = np.asarray(quantize.quantize_input(qm, xs))
+    eng = CNNEngine.from_quantized(qm, plan_q, buckets=(1, 2),
+                                   policy=CoalescePolicy(max_batch=2,
+                                                         max_wait_s=0.001))
+    assert eng.dtype == jnp.int8
+    with eng:
+        reqs, run = eng.serve(xq)
+    oracle = np.stack([
+        np.asarray(quantize.simulate_int8_dag_forward(qm, jnp.asarray(xq[i])))
+        for i in range(len(xq))])
+    np.testing.assert_array_equal(np.stack([r.y for r in reqs]), oracle)
+
+
+def test_engine_submit_validation_and_restart(lenet_setup):
+    fused, plan, params = lenet_setup
+    eng = CNNEngine.from_graph(fused, plan, params, buckets=(1,),
+                               policy=CoalescePolicy(max_batch=1))
+    with pytest.raises(RuntimeError):
+        eng.submit(np.zeros((1, 32, 32), np.float32))  # not started
+    with eng:
+        with pytest.raises(ValueError):
+            eng.submit(np.zeros((3, 32, 32), np.float32))  # wrong shape
+        r = eng.submit(np.zeros((1, 32, 32), np.float32))
+        r.result(timeout=30.0)
+    # restartable after stop
+    with eng:
+        r2 = eng.submit(np.zeros((1, 32, 32), np.float32))
+        np.testing.assert_array_equal(r2.result(timeout=30.0), r.y)
+
+
+def test_engine_concurrent_submitters(lenet_setup):
+    """Requests racing in from several host threads all complete and all
+    match the oracle — the queue/lock discipline holds under contention."""
+    fused, plan, params = lenet_setup
+    rng = np.random.default_rng(21)
+    imgs = rng.standard_normal((12, 1, 32, 32)).astype(np.float32)
+    oracle = np.asarray(jax.jit(jax.vmap(
+        lambda im: nn.forward(fused, params, im)))(jnp.asarray(imgs)))
+    eng = CNNEngine.from_graph(fused, plan, params, buckets=(1, 2, 4),
+                               policy=CoalescePolicy(max_batch=4,
+                                                     max_wait_s=0.001))
+    results = {}
+
+    def worker(lo, hi):
+        for i in range(lo, hi):
+            results[i] = eng.submit(imgs[i])
+
+    with eng:
+        ts = [threading.Thread(target=worker, args=(lo, lo + 4))
+              for lo in (0, 4, 8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        for i, r in results.items():
+            np.testing.assert_allclose(r.result(timeout=30.0), oracle[i],
+                                       rtol=1e-5, atol=1e-6)
+    rids = sorted(r.rid for r in results.values())
+    assert rids == list(range(12))  # no rid ever reused under contention
