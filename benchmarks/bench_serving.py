@@ -130,9 +130,17 @@ def _row(name, dtype, mode, run):
     }
 
 
-def bench_config(name, dtype, *, smoke: bool, buckets, rng):
+def bench_config(name, dtype, *, smoke: bool, buckets, rng, trace_dir=None):
     """Sequential baseline + batch-8 burst + Poisson open-loop for one
-    (workload, dtype) pair.  Returns (rows, speedup)."""
+    (workload, dtype) pair.  Returns (rows, speedup, cache counters).
+
+    All gated rows run with the default disabled tracer (the production
+    path).  When ``trace_dir`` is set, one extra short traced burst runs on
+    the same warm engine afterwards — the tracer is swapped in live — and
+    its schema-validated Chrome trace lands at
+    ``trace_dir/serving_<name>_<dtype>.trace.json``.
+    """
+    from repro.obs.trace import NULL_TRACER, Tracer, validate_chrome_trace
     from repro.serve.cnn_engine import CoalescePolicy
 
     n_seq = 8 if smoke else 32
@@ -172,8 +180,60 @@ def bench_config(name, dtype, *, smoke: bool, buckets, rng):
         _, run_p = eng.serve(_images(name, dtype, n_poisson, rng, qm), arrivals)
         rows.append(_row(name, dtype, "poisson", run_p))
 
+        cache_counters = {
+            k.split(".", 1)[1]: v["value"]
+            for k, v in eng.metrics.snapshot().items()
+            if k.startswith("executor_cache.") and v["kind"] == "counter"
+        }
+
+        if trace_dir is not None:
+            tracer = Tracer(process_name=f"{name}.{dtype}")
+            eng.tracer = tracer  # worker loops re-read per event
+            arrivals = [(i // 8) * gap for i in range(16)]
+            eng.serve(_images(name, dtype, 16, rng, qm), arrivals)
+            eng.tracer = NULL_TRACER
+            trace = tracer.export()
+            validate_chrome_trace(trace)
+            path = Path(trace_dir) / f"serving_{name}_{dtype}.trace.json"
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(trace) + "\n")
+
     speedup = round(run_b.qps / run_seq.qps, 2) if run_seq.qps else 0.0
-    return rows, speedup
+    return rows, speedup, cache_counters
+
+
+def bench_tracing_overhead(rng, *, smoke: bool):
+    """Traced-off vs traced-on qps on the lenet f32 burst shape.
+
+    The gated serving rows above *are* the traced-off path — the PR 6
+    protocol unchanged — so the standing ≥ 1.5× speedup gate already pins
+    the disabled-tracing engine to the PR 6 numbers.  This measurement adds
+    the in-process comparison: the same engine and trace shape with the
+    tracer enabled, so the CI guard can assert the disabled path gives up
+    none of what tracing costs (off_qps within 10% of the best of the two).
+    """
+    from repro.obs.trace import Tracer
+    from repro.serve.cnn_engine import CoalescePolicy
+
+    n = 32 if smoke else 96
+    arrivals = [(i // 8) * 0.001 for i in range(n)]
+    qps = {}
+    for mode in ("off", "on"):
+        eng, _ = _engine("lenet", "f32", (1, 4, 8),
+                         CoalescePolicy(max_batch=8, max_wait_s=0.002),
+                         rng=rng)
+        if mode == "on":
+            eng.tracer = Tracer(cap=1 << 16)
+        with eng:
+            eng.serve(_images("lenet", "f32", 8, rng))  # warm
+            run = max(
+                (eng.serve(_images("lenet", "f32", n, rng), arrivals)[1]
+                 for _ in range(2)), key=lambda r: r.qps)
+        qps[mode] = round(run.qps, 1)
+    return {
+        "off_qps": qps["off"], "on_qps": qps["on"],
+        "on_off_ratio": round(qps["on"] / qps["off"], 3) if qps["off"] else 0.0,
+    }
 
 
 def bench_cold_start(name, dtype, rng):
@@ -208,6 +268,9 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="small traces + short ladder (CI artifact check)")
     ap.add_argument("--out", default="BENCH_hotpaths.json")
+    ap.add_argument("--trace-dir", default="bench_traces",
+                    help="where per-config serving traces land "
+                         "('' disables trace export)")
     args = ap.parse_args(argv)
 
     buckets = (1, 4, 8) if args.smoke else (1, 2, 4, 8, 16)
@@ -215,20 +278,28 @@ def main(argv=None) -> None:
         "buckets": list(buckets), "max_batch": 8, "max_wait_ms": 2.0,
         "arrival_shape": "burst-8", "poisson_load_frac": 0.6,
     }
+    trace_dir = args.trace_dir or None
 
-    rows, speedup, percentiles = [], {}, {}
+    rows, speedup, percentiles, cache_meta = [], {}, {}, {}
     for name in ("lenet", "residual_cifar", "ds_cnn"):
         for dtype in ("f32", "int8"):
             rng = np.random.default_rng(11)
-            r, s = bench_config(name, dtype, smoke=args.smoke,
-                                buckets=buckets, rng=rng)
+            r, s, cache = bench_config(name, dtype, smoke=args.smoke,
+                                       buckets=buckets, rng=rng,
+                                       trace_dir=trace_dir)
             rows += r
             key = f"{name}.{dtype}"
             speedup[key] = s
+            cache_meta[key] = cache
             pois = next(x for x in r if x["mode"] == "poisson")
             percentiles[key] = {k: pois[k] for k in ("p50_ms", "p95_ms", "p99_ms")}
             print(f"{key}: seq {r[0]['qps']} qps, batched {r[1]['qps']} qps "
                   f"({s}x), poisson p99 {pois['p99_ms']} ms")
+
+    rng = np.random.default_rng(13)
+    tracing = bench_tracing_overhead(rng, smoke=args.smoke)
+    print(f"tracing overhead lenet.f32: off {tracing['off_qps']} qps, "
+          f"on {tracing['on_qps']} qps (on/off {tracing['on_off_ratio']})")
 
     cold_start = {}
     for dtype in ("f32", "int8"):
@@ -240,15 +311,17 @@ def main(argv=None) -> None:
 
     serving = {
         "rows": rows, "speedup": speedup, "cold_start": cold_start,
-        "policy": policy_meta,
+        "policy": policy_meta, "tracing": tracing,
     }
 
     out = Path(args.out)
     data = json.loads(out.read_text()) if out.exists() else {}
     data.setdefault("meta", run_metadata())
-    # satellite (f): stamp policy + percentile summary into run_metadata
+    # stamp policy + percentile summary + executor-cache counters into
+    # run_metadata (the CI bench-smoke guard asserts all three)
     data["meta"]["serving_policy"] = policy_meta
     data["meta"]["serving_percentiles"] = percentiles
+    data["meta"]["serving_cache"] = cache_meta
     data["serving"] = serving
     out.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
     print(f"wrote {out} (serving: {len(rows)} rows, "

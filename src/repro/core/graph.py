@@ -63,6 +63,17 @@ class LayerSpec:
         """Parameters excluding biases (the paper's §5 counting convention)."""
         return self.param_count()
 
+    def macs(self, in_shape: Shape) -> int:
+        """Multiply-accumulates for one inference at ``in_shape``.
+
+        The static cost model behind ``obs/report.py``: compute-bearing
+        layers (conv / depthwise / linear and their fused forms) override
+        this; data-movement layers (pool, relu, flatten, joins) cost 0 MACs
+        by the usual convention (CMSIS-NN / Zhang et al. count the same
+        way).
+        """
+        return 0
+
     @property
     def kind(self) -> str:
         return type(self).__name__
@@ -109,6 +120,10 @@ class Conv2d(LayerSpec):
     def weight_count(self) -> int:
         return self.out_channels * self.in_channels * self.kernel_size**2
 
+    def macs(self, in_shape: Shape) -> int:
+        _, oh, ow = self.out_shape(in_shape)
+        return self.out_channels * oh * ow * self.in_channels * self.kernel_size**2
+
 
 @dataclasses.dataclass(frozen=True)
 class DepthwiseConv2d(LayerSpec):
@@ -149,6 +164,10 @@ class DepthwiseConv2d(LayerSpec):
 
     def weight_count(self) -> int:
         return self.channels * self.kernel_size**2
+
+    def macs(self, in_shape: Shape) -> int:
+        _, oh, ow = self.out_shape(in_shape)
+        return self.channels * oh * ow * self.kernel_size**2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +216,9 @@ class Linear(LayerSpec):
         return n
 
     def weight_count(self) -> int:
+        return self.in_features * self.out_features
+
+    def macs(self, in_shape: Shape) -> int:
         return self.in_features * self.out_features
 
 
@@ -269,6 +291,11 @@ class FusedConvPool(LayerSpec):
     def param_count(self) -> int:
         return self.conv.param_count()
 
+    def macs(self, in_shape: Shape) -> int:
+        """Fusion changes where the conv output lives, not how many taps are
+        computed — identical to the unfused conv's MACs."""
+        return self.conv.macs(in_shape)
+
 
 @dataclasses.dataclass(frozen=True)
 class FusedLinear(LayerSpec):
@@ -282,6 +309,9 @@ class FusedLinear(LayerSpec):
 
     def param_count(self) -> int:
         return self.linear.param_count()
+
+    def macs(self, in_shape: Shape) -> int:
+        return self.linear.macs(in_shape)
 
 
 @dataclasses.dataclass(frozen=True)

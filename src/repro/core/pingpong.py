@@ -252,7 +252,8 @@ def _cached_executor(graph: SequentialGraph, plan: MemoryPlan):
         }
         return (graph, plan, make_scan_executor(graph, plan), stats)
 
-    hit = cache_fifo(_EXEC_CACHE, (id(graph), id(plan)), _EXEC_CACHE_MAX, build)
+    hit = cache_fifo(_EXEC_CACHE, (id(graph), id(plan)), _EXEC_CACHE_MAX, build,
+                     name="scan_exec")
     return hit[2], hit[3]
 
 
@@ -362,6 +363,129 @@ def run_dag_with_arena(
     return out.reshape(steps[mat.output].out_shape), stats
 
 
+def _apply_step_views(step, p, xs, apply_node_fn):
+    out = apply_node_fn(step.layer, p, xs)
+    for v in step.views:
+        out = apply_node_fn(v, {}, [out])
+    return out
+
+
+def _stack_params(params, names):
+    return jax.tree.map(
+        lambda *leaves: jnp.stack(leaves),
+        *[params.get(n, {}) for n in names],
+    )
+
+
+def apply_dag_segment(
+    steps,
+    sizes,
+    seg,
+    params: Params,
+    vals: Dict[str, jax.Array],
+    nbatch: int,
+    *,
+    apply_node_fn=apply_node,
+) -> Dict[str, jax.Array]:
+    """Execute one compiled segment and return its tail values.
+
+    The single-segment unit of :func:`make_dag_executor`'s traced loop,
+    exposed so `obs/report.py` can jit *one segment at a time* for the
+    per-segment device-timing mode without duplicating the lowering logic.
+    ``steps`` maps step name → :class:`~repro.core.schedule.Step`, ``sizes``
+    maps buffer name → planned element count, ``vals`` holds the live
+    buffer values the segment reads; the returned dict maps each branch
+    tail to its produced value.
+    """
+    first = steps[seg.branches[0][0]]
+    # The scan body applies the segment's `period` phase layers in
+    # order (period 1: the homogeneous run).  Phase j's weights for
+    # iteration k come from branch position k·period + j, so the
+    # per-phase stack along the scan axis is names[j::period].
+    phases = [steps[n] for n in seg.branches[0][: seg.period]]
+    _apply = lambda step, p, xs: _apply_step_views(step, p, xs, apply_node_fn)
+    if seg.batched:
+        # Batched isomorphic branches: stack the B branch inputs on a
+        # new leading axis and run the whole group as one dispatch
+        # (L = 1) or one lax.scan with a batched two-bank carry
+        # (L > 1; the chain-run invariants guarantee a constant
+        # carry shape).  Weights stack to (L, B, ...) per phase.
+        xs = jnp.stack(
+            [vals[steps[br[0]].inputs[0]] for br in seg.branches]
+        )
+        if seg.length == 1:
+            per_branch = _stack_params(
+                params, [br[0] for br in seg.branches]
+            )
+            ys = jax.vmap(
+                lambda p, xx, _step=first: _apply(_step, p, [xx])
+            )(per_branch, xs)
+        else:
+            stacked = tuple(
+                jax.tree.map(
+                    lambda *leaves: jnp.stack(leaves),
+                    *[
+                        _stack_params(
+                            params,
+                            [br[k * seg.period + j] for br in seg.branches],
+                        )
+                        for k in range(seg.length)
+                    ],
+                )
+                for j in range(seg.period)
+            )
+
+            def body(carry, ps, _phases=phases):
+                bank_cur, bank_prev = carry
+                del bank_prev  # freed: this step's output lands there
+                out = bank_cur
+                for step, p in zip(_phases, ps):
+                    out = jax.vmap(
+                        lambda pp, xx, _step=step: _apply(_step, pp, [xx])
+                    )(p, out)
+                return (out, bank_cur), None
+
+            (ys, _), _ = jax.lax.scan(body, (xs, xs), stacked,
+                                      length=seg.length)
+        out_vals: Dict[str, jax.Array] = {}
+        for k, br in enumerate(seg.branches):
+            tail = br[-1]
+            if _prod(ys.shape[1 + nbatch:]) != sizes[tail]:
+                raise ValueError(
+                    f"segment {seg.branches}: produced {ys.shape} but "
+                    f"plan expects {sizes[tail]} elements"
+                )
+            out_vals[tail] = ys[k]
+        return out_vals
+    names = seg.branches[0]
+    if len(names) == 1:
+        xs = [vals[src] for src in first.inputs]
+        cur = _apply(first, params.get(first.name, {}), xs)
+    else:
+        cur = vals[first.inputs[0]]
+        stacked = tuple(
+            _stack_params(params, names[j :: seg.period])
+            for j in range(seg.period)
+        )
+
+        def body(carry, ps, _phases=phases):
+            bank_cur, bank_prev = carry
+            del bank_prev  # freed: this step's output lands there
+            out = bank_cur
+            for step, p in zip(_phases, ps):
+                out = _apply(step, p, [out])
+            return (out, bank_cur), None
+
+        (cur, _), _ = jax.lax.scan(body, (cur, cur), stacked,
+                                   length=seg.length)
+    if _prod(cur.shape[nbatch:]) != sizes[names[-1]]:
+        raise ValueError(
+            f"segment {names}: produced {cur.shape} but plan expects "
+            f"{sizes[names[-1]]} elements"
+        )
+    return {names[-1]: cur}
+
+
 def make_dag_executor(
     graph: DAGGraph,
     plan: MemoryPlan,
@@ -398,18 +522,6 @@ def make_dag_executor(
     in_elems = _prod(in_shape)
     sizes = {b.name: b.size_elems for b in plan.buffers}
 
-    def _apply(step, p, xs):
-        out = apply_node_fn(step.layer, p, xs)
-        for v in step.views:
-            out = apply_node_fn(v, {}, [out])
-        return out
-
-    def _stack_params(params, names):
-        return jax.tree.map(
-            lambda *leaves: jnp.stack(leaves),
-            *[params.get(n, {}) for n in names],
-        )
-
     def _exec(params: Params, x: jax.Array) -> jax.Array:
         nbatch = x.ndim - len(in_shape)
         if nbatch not in (0, 1):
@@ -421,91 +533,10 @@ def make_dag_executor(
             val = apply_node_fn(v, {}, [val])
         vals: Dict[str, jax.Array] = {order[0]: val}
         for seg in segments:
-            first = steps[seg.branches[0][0]]
-            # The scan body applies the segment's `period` phase layers in
-            # order (period 1: the homogeneous run).  Phase j's weights for
-            # iteration k come from branch position k·period + j, so the
-            # per-phase stack along the scan axis is names[j::period].
-            phases = [steps[n] for n in seg.branches[0][: seg.period]]
-            if seg.batched:
-                # Batched isomorphic branches: stack the B branch inputs on a
-                # new leading axis and run the whole group as one dispatch
-                # (L = 1) or one lax.scan with a batched two-bank carry
-                # (L > 1; the chain-run invariants guarantee a constant
-                # carry shape).  Weights stack to (L, B, ...) per phase.
-                xs = jnp.stack(
-                    [vals[steps[br[0]].inputs[0]] for br in seg.branches]
-                )
-                if seg.length == 1:
-                    per_branch = _stack_params(
-                        params, [br[0] for br in seg.branches]
-                    )
-                    ys = jax.vmap(
-                        lambda p, xx, _step=first: _apply(_step, p, [xx])
-                    )(per_branch, xs)
-                else:
-                    stacked = tuple(
-                        jax.tree.map(
-                            lambda *leaves: jnp.stack(leaves),
-                            *[
-                                _stack_params(
-                                    params,
-                                    [br[k * seg.period + j] for br in seg.branches],
-                                )
-                                for k in range(seg.length)
-                            ],
-                        )
-                        for j in range(seg.period)
-                    )
-
-                    def body(carry, ps, _phases=phases):
-                        bank_cur, bank_prev = carry
-                        del bank_prev  # freed: this step's output lands there
-                        out = bank_cur
-                        for step, p in zip(_phases, ps):
-                            out = jax.vmap(
-                                lambda pp, xx, _step=step: _apply(_step, pp, [xx])
-                            )(p, out)
-                        return (out, bank_cur), None
-
-                    (ys, _), _ = jax.lax.scan(body, (xs, xs), stacked,
-                                              length=seg.length)
-                for k, br in enumerate(seg.branches):
-                    tail = br[-1]
-                    if _prod(ys.shape[1 + nbatch:]) != sizes[tail]:
-                        raise ValueError(
-                            f"segment {seg.branches}: produced {ys.shape} but "
-                            f"plan expects {sizes[tail]} elements"
-                        )
-                    vals[tail] = ys[k]
-                continue
-            names = seg.branches[0]
-            if len(names) == 1:
-                xs = [vals[src] for src in first.inputs]
-                cur = _apply(first, params.get(first.name, {}), xs)
-            else:
-                cur = vals[first.inputs[0]]
-                stacked = tuple(
-                    _stack_params(params, names[j :: seg.period])
-                    for j in range(seg.period)
-                )
-
-                def body(carry, ps, _phases=phases):
-                    bank_cur, bank_prev = carry
-                    del bank_prev  # freed: this step's output lands there
-                    out = bank_cur
-                    for step, p in zip(_phases, ps):
-                        out = _apply(step, p, [out])
-                    return (out, bank_cur), None
-
-                (cur, _), _ = jax.lax.scan(body, (cur, cur), stacked,
-                                           length=seg.length)
-            if _prod(cur.shape[nbatch:]) != sizes[names[-1]]:
-                raise ValueError(
-                    f"segment {names}: produced {cur.shape} but plan expects "
-                    f"{sizes[names[-1]]} elements"
-                )
-            vals[names[-1]] = cur
+            vals.update(apply_dag_segment(
+                steps, sizes, seg, params, vals, nbatch,
+                apply_node_fn=apply_node_fn,
+            ))
         return vals[mat.output]
 
     donate = donate_input and jax.default_backend() in _DONATING_BACKENDS
@@ -530,7 +561,8 @@ def _cached_dag_executor(graph: DAGGraph, plan: MemoryPlan):
         }
         return (graph, plan, make_dag_executor(graph, plan), stats)
 
-    hit = cache_fifo(_DAG_EXEC_CACHE, (id(graph), id(plan)), _EXEC_CACHE_MAX, build)
+    hit = cache_fifo(_DAG_EXEC_CACHE, (id(graph), id(plan)), _EXEC_CACHE_MAX,
+                     build, name="dag_exec")
     return hit[2], hit[3]
 
 

@@ -161,9 +161,13 @@ def is_topological(mat: MaterializedDAG, order: Sequence[str]) -> bool:
     return all(pos[src] < pos[s.name] for s in mat.steps for src in s.inputs)
 
 
-def _death_positions(mat: MaterializedDAG, order: Sequence[str]) -> Dict[str, int]:
+def death_positions(mat: MaterializedDAG, order: Sequence[str]) -> Dict[str, int]:
     """Step name -> last position at which its buffer is read (the output
-    buffer lives to the end)."""
+    buffer lives to the end).
+
+    Public: `obs/report.py` replays the same liveness rule when rendering
+    arena timelines, so report and planner can never disagree about when a
+    buffer dies."""
     pos = {name: i for i, name in enumerate(order)}
     death = {name: pos[name] for name in pos}
     for s in mat.steps:
@@ -171,6 +175,9 @@ def _death_positions(mat: MaterializedDAG, order: Sequence[str]) -> Dict[str, in
             death[src] = max(death[src], pos[s.name])
     death[mat.output] = len(order) - 1
     return death
+
+
+_death_positions = death_positions  # pre-obs internal name
 
 
 def schedule_peak(mat: MaterializedDAG, order: Sequence[str]) -> int:
@@ -181,7 +188,7 @@ def schedule_peak(mat: MaterializedDAG, order: Sequence[str]) -> int:
     own output buffer and scratch.
     """
     pos = {name: i for i, name in enumerate(order)}
-    death = _death_positions(mat, order)
+    death = death_positions(mat, order)
     steps = {s.name: s for s in mat.steps}
     peak = 0
     for t, name in enumerate(order):
@@ -504,7 +511,7 @@ def _priced_arena(
     """
     order, _ = search_order(mat, budget=search_budget)
     steps = {s.name: s for s in mat.steps}
-    death = _death_positions(mat, order)
+    death = death_positions(mat, order)
     pos = {name: i for i, name in enumerate(order)}
     sizes = [steps[name].size_elems for name in order]
     intervals = [(pos[name], death[name]) for name in order]
@@ -634,7 +641,7 @@ def plan_dag(
             )
 
     steps = {s.name: s for s in mat.steps}
-    death = _death_positions(mat, order)
+    death = death_positions(mat, order)
     pos = {name: i for i, name in enumerate(order)}
     sizes = [steps[name].size_elems for name in order]
     intervals = [(pos[name], death[name]) for name in order]

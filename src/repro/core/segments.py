@@ -104,18 +104,39 @@ class Segment:
         return self.period > 1
 
 
-def cache_fifo(cache: Dict, key, max_entries: int, build: Callable):
+def cache_fifo(cache: Dict, key, max_entries: int, build: Callable,
+               name: str = ""):
     """Bounded-FIFO memo shared by the segment and executor caches (here,
     `repro.core.pingpong` and `repro.quant.exec`).  The cached value must
     hold strong references to every object whose ``id`` appears in ``key``
     — that is what keeps the id-based keys valid for the entry's
-    lifetime."""
+    lifetime.
+
+    A non-empty ``name`` reports ``cache.<name>.hits`` / ``.builds`` /
+    ``.evictions`` counters into the process-global
+    :data:`repro.obs.metrics.REGISTRY` (one attribute check + dict update
+    per call — negligible next to any ``build``).
+    """
+    metrics = _registry() if name else None
     hit = cache.get(key)
     if hit is None:
         while len(cache) >= max_entries:
             cache.pop(next(iter(cache)))
+            if metrics is not None:
+                metrics.inc(f"cache.{name}.evictions")
         hit = cache[key] = build()
+        if metrics is not None:
+            metrics.inc(f"cache.{name}.builds")
+    elif metrics is not None:
+        metrics.inc(f"cache.{name}.hits")
     return hit
+
+
+def _registry():
+    # Deferred import: obs depends on nothing in core, but importing it at
+    # module top would still widen the core import surface unnecessarily.
+    from repro.obs.metrics import REGISTRY
+    return REGISTRY
 
 
 # ---------------------------------------------------------------------------
@@ -417,6 +438,7 @@ def segments_for_plan(graph, plan, *, batch_branches: bool = True):
         (id(graph), id(plan), batch_branches),
         _SEGMENT_CACHE_MAX,
         build,
+        name="segments",
     )
     return hit[2], hit[3], hit[4]
 

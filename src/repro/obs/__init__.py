@@ -1,0 +1,24 @@
+"""Observability: tracing, metrics and compile-time reports (DESIGN.md §11).
+
+Three modules, deliberately dependency-light so the serving and executor
+layers can import them without cycles:
+
+* :mod:`repro.obs.trace`   — thread-safe span tracer with Chrome trace-event
+  JSON export (open in Perfetto / chrome://tracing).
+* :mod:`repro.obs.metrics` — counters / gauges / histograms with JSON
+  snapshot export; one process-global default registry plus per-engine
+  registries.
+* :mod:`repro.obs.report`  — compile-time reports: segment-compiler coverage
+  (static MAC/byte cost model per step), arena memory timelines (JSON +
+  ASCII memory map) and the opt-in per-segment device-timing mode.
+"""
+from repro.obs.metrics import REGISTRY, MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer, validate_chrome_trace
+
+__all__ = [
+    "MetricsRegistry",
+    "REGISTRY",
+    "NULL_TRACER",
+    "Tracer",
+    "validate_chrome_trace",
+]

@@ -241,7 +241,8 @@ def _cached_executor(qm: QuantizedModel, plan: MemoryPlan):
         return (qm, plan, make_int8_scan_executor(qm, plan), stats)
 
     hit = pingpong.cache_fifo(
-        _EXEC_CACHE, (id(qm), id(plan)), _EXEC_CACHE_MAX, build
+        _EXEC_CACHE, (id(qm), id(plan)), _EXEC_CACHE_MAX, build,
+        name="int8_scan_exec",
     )
     return hit[2], hit[3]
 
@@ -329,7 +330,8 @@ def _cached_dag_executor(qm: QuantizedModel, plan: MemoryPlan):
         return (qm, plan, _exec, stats)
 
     hit = pingpong.cache_fifo(
-        _DAG_EXEC_CACHE, (id(qm), id(plan)), _EXEC_CACHE_MAX, build
+        _DAG_EXEC_CACHE, (id(qm), id(plan)), _EXEC_CACHE_MAX, build,
+        name="int8_dag_exec",
     )
     return hit[2], hit[3]
 

@@ -52,6 +52,8 @@ import numpy as np
 
 from repro.core import pingpong
 from repro.core.graph import DAGGraph
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serve.step import BucketedExecutorCache
 
 DEFAULT_BUCKETS = (1, 2, 4, 8, 16)
@@ -103,7 +105,15 @@ class CNNRequest:
 
 @dataclasses.dataclass
 class ServeStats:
-    """Engine-side accounting for one serving run."""
+    """Engine-side accounting for one serving run.
+
+    The engine's dispatcher and completer threads both mutate an instance
+    concurrently, so every mutation and every multi-field read goes through
+    ``_lock`` (``record_batch`` / ``record_latencies`` / ``snapshot``).
+    Instances returned by :meth:`snapshot` (and the per-run stats from
+    ``CNNEngine.serve``) are plain frozen-in-time copies — safe to read
+    field-by-field without the lock.
+    """
 
     requests: int = 0
     batches: int = 0
@@ -113,6 +123,10 @@ class ServeStats:
     wall_s: float = 0.0
     prewarm_s: float = 0.0
     compiles: int = 0
+    # init=False: dataclasses.replace / snapshot give the copy its own lock.
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, init=False, repr=False, compare=False
+    )
 
     @property
     def qps(self) -> float:
@@ -127,10 +141,50 @@ class ServeStats:
         lanes = self.requests + self.padded_lanes
         return self.padded_lanes / lanes if lanes else 0.0
 
+    def record_batch(self, bucket: int, n: int) -> int:
+        """Account one dispatched batch; returns its batch id (0-based,
+        engine-lifetime ordinal)."""
+        with self._lock:
+            bid = self.batches
+            self.batches += 1
+            self.requests += n
+            self.padded_lanes += bucket - n
+            self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
+            return bid
+
+    def record_latencies(self, latencies_s) -> None:
+        with self._lock:
+            self.latencies_s.extend(latencies_s)
+
+    def latency_count(self) -> int:
+        with self._lock:
+            return len(self.latencies_s)
+
+    def snapshot(self) -> "ServeStats":
+        """A consistent point-in-time copy (mutable fields deep-copied, so
+        the copy is immune to further engine-thread appends)."""
+        with self._lock:
+            return dataclasses.replace(
+                self,
+                bucket_hist=dict(self.bucket_hist),
+                latencies_s=list(self.latencies_s),
+            )
+
     def latency_ms(self, pct: float) -> float:
-        if not self.latencies_s:
+        """The ``pct`` latency percentile in milliseconds.
+
+        Contract for the window edge cases (unit-tested): an **empty
+        window** (no completed requests) returns ``0.0`` for every
+        percentile — a sentinel, not a measurement (callers that must
+        distinguish check ``latencies_s``); a **single-sample** window
+        returns that sample for every percentile (``np.percentile`` on one
+        value).
+        """
+        with self._lock:
+            xs = list(self.latencies_s)
+        if not xs:
             return 0.0
-        return float(np.percentile(np.asarray(self.latencies_s), pct) * 1e3)
+        return float(np.percentile(np.asarray(xs), pct) * 1e3)
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -168,11 +222,17 @@ class CNNEngine:
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         policy: Optional[CoalescePolicy] = None,
         prewarm: bool = True,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.in_shape = tuple(int(d) for d in in_shape)
         self.dtype = jnp.dtype(dtype)
         self.params = params
         self.policy = policy or CoalescePolicy()
+        # Read per event by the worker loops, so a caller may swap in an
+        # enabled Tracer on a running engine; defaults to the shared no-op.
+        self.tracer = tracer or NULL_TRACER
+        self.metrics = metrics or MetricsRegistry("cnn_engine")
         buckets = tuple(sorted({int(b) for b in buckets}))
         if self.policy.max_batch > buckets[-1]:
             # the drain can never exceed the largest compiled bucket
@@ -186,10 +246,12 @@ class CNNEngine:
             ),
             buckets,
             prewarm=prewarm,
+            metrics=self.metrics,
         )
         self.stats = ServeStats(
             prewarm_s=time.perf_counter() - t0 if prewarm else 0.0
         )
+        self.metrics.set_gauge("engine.prewarm_s", self.stats.prewarm_s)
         # Two host staging banks per bucket, allocated once and alternated
         # between consecutive dispatches (ping-pong at serving granularity).
         self._banks: Dict[int, List[np.ndarray]] = {
@@ -201,10 +263,11 @@ class CNNEngine:
         }
         self._bank_idx: Dict[int, int] = {b: 0 for b in buckets}
         self._queue: "queue.Queue[CNNRequest]" = queue.Queue()
-        # Depth-1 handoff: at most one dispatched-but-uncompleted batch.
-        self._inflight: "queue.Queue[Tuple[jax.Array, List[CNNRequest]]]" = (
-            queue.Queue(maxsize=1)
-        )
+        # Depth-1 handoff: at most one dispatched-but-uncompleted batch,
+        # as (device value, requests, batch id, bucket).
+        self._inflight: (
+            "queue.Queue[Tuple[jax.Array, List[CNNRequest], int, int]]"
+        ) = queue.Queue(maxsize=1)
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._rid = 0
@@ -278,6 +341,12 @@ class CNNEngine:
             rid = self._rid
             self._rid += 1
         req = CNNRequest(rid=rid, x=x, t_submit=time.perf_counter())
+        tr = self.tracer
+        if tr.enabled:
+            # Async span: request lifetimes overlap freely, so they live on
+            # an id-keyed async track, not the submitter's thread track.
+            tr.async_begin("request", rid)
+            tr.counter("queue_depth", depth=self._queue.qsize() + 1)
         self._queue.put(req)
         return req
 
@@ -289,7 +358,11 @@ class CNNEngine:
         """Replay a trace: submit ``images[i]`` at ``arrivals_s[i]`` (seconds
         from the start; ``None`` = all at once), wait for completion, and
         return (requests, stats for this run)."""
-        before = len(self.stats.latencies_s)
+        # Consistent under the stats lock: the completer thread appends to
+        # latencies_s concurrently, so both the `before` watermark and the
+        # final slice go through the locked accessors (the pre-obs code read
+        # len() and sliced bare — the ServeStats cross-thread race).
+        before = self.stats.latency_count()
         t0 = time.perf_counter()
         reqs = []
         for i in range(len(images)):
@@ -300,10 +373,11 @@ class CNNEngine:
             reqs.append(self.submit(images[i]))
         for r in reqs:
             r.result(timeout=120.0)
+        snap = self.stats.snapshot()
         run = dataclasses.replace(
-            self.stats,
+            snap,
             requests=len(reqs),
-            latencies_s=self.stats.latencies_s[before:],
+            latencies_s=snap.latencies_s[before:],
             wall_s=time.perf_counter() - t0,
             compiles=self._cache.misses,
         )
@@ -335,47 +409,62 @@ class CNNEngine:
         return batch
 
     def _dispatch_loop(self) -> None:
+        self.tracer.name_thread("cnn-engine-dispatch")
         while not (self._stop.is_set() and self._queue.empty()):
+            tr = self.tracer  # re-read: callers may enable tracing mid-run
+            t_coal = time.monotonic()
             batch = self._coalesce()
             if not batch:
                 continue
             n = len(batch)
             bucket, compiled = self._cache.for_batch(n)
+            bid = self.stats.record_batch(bucket, n)
+            if tr.enabled:
+                tr.complete("coalesce", t_coal, batch=bid, n=n)
+                tr.counter("queue_depth", depth=self._queue.qsize())
+                tr.counter("batch_occupancy", n=n, bucket=bucket)
             # alternate the two staging banks for this bucket
             idx = self._bank_idx[bucket]
             self._bank_idx[bucket] = 1 - idx
             bank = self._banks[bucket][idx]
-            for i, r in enumerate(batch):
-                bank[i] = r.x
-            if n < bucket:
-                bank[n:] = 0
+            with tr.span("stage", batch=bid, bucket=bucket, n=n):
+                for i, r in enumerate(batch):
+                    bank[i] = r.x
+                if n < bucket:
+                    bank[n:] = 0
             # Asynchronous dispatch: the device value is handed to the
             # completer; this thread returns to coalescing batch k+1 while
             # the device computes batch k.
-            y = compiled(self.params, jnp.asarray(bank))
-            self._inflight.put((y, batch))
-            with self._lock:
-                self.stats.batches += 1
-                self.stats.requests += n
-                self.stats.padded_lanes += bucket - n
-                self.stats.bucket_hist[bucket] = (
-                    self.stats.bucket_hist.get(bucket, 0) + 1
-                )
+            with tr.span("dispatch", batch=bid, bucket=bucket, n=n):
+                y = compiled(self.params, jnp.asarray(bank))
+            self._inflight.put((y, batch, bid, bucket))
+            self.metrics.inc("engine.batches")
+            self.metrics.inc("engine.padded_lanes", bucket - n)
+            self.metrics.observe("engine.batch_occupancy", n)
+            self.metrics.set_gauge("engine.queue_depth", self._queue.qsize())
             for _ in batch:
                 self._queue.task_done()
 
     def _complete_loop(self) -> None:
+        self.tracer.name_thread("cnn-engine-complete")
         while not (self._stop.is_set() and self._inflight.empty()):
             try:
-                y, batch = self._inflight.get(timeout=0.01)
+                y, batch, bid, bucket = self._inflight.get(timeout=0.01)
             except queue.Empty:
                 continue
-            out = np.asarray(y)  # blocks until the device value is ready
-            t_done = time.perf_counter()
-            for i, r in enumerate(batch):
-                r.y = out[i]
-                r.t_done = t_done
-                r._done.set()
-            with self._lock:
-                self.stats.latencies_s.extend(r.latency_s for r in batch)
+            tr = self.tracer
+            with tr.span("device", batch=bid, bucket=bucket, n=len(batch)):
+                out = np.asarray(y)  # blocks until the device value is ready
+            with tr.span("complete", batch=bid, bucket=bucket, n=len(batch)):
+                t_done = time.perf_counter()
+                for i, r in enumerate(batch):
+                    r.y = out[i]
+                    r.t_done = t_done
+                    r._done.set()
+                    if tr.enabled:
+                        tr.async_end("request", r.rid, batch=bid,
+                                     bucket=bucket, lane=i)
+            self.stats.record_latencies(r.latency_s for r in batch)
+            for r in batch:
+                self.metrics.observe("engine.latency_s", r.latency_s)
             self._inflight.task_done()

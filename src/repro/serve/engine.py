@@ -21,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serve.step import BucketedExecutorCache
 
 
@@ -70,7 +72,9 @@ def _insert_lane(cache, cache1, lane):
 
 
 class Engine:
-    def __init__(self, model: Model, params, *, lanes: int, max_seq: int):
+    def __init__(self, model: Model, params, *, lanes: int, max_seq: int,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.model = model
         self.params = params
         self.lanes = lanes
@@ -79,6 +83,8 @@ class Engine:
         self.lane_req: List[Optional[Request]] = [None] * lanes
         self.lane_pos = np.zeros(lanes, np.int32)  # next position per lane
         self.stats = EngineStats()
+        self.tracer = tracer or NULL_TRACER
+        self.metrics = metrics or MetricsRegistry("llm_engine")
 
         # The decode step lives in the shared bucketed cache (one bucket:
         # the lane count) — the same cache implementation the CNN engine
@@ -88,6 +94,7 @@ class Engine:
                 lambda p, c, t, pos: model.decode_step(p, c, t, pos, max_seq)
             ),
             buckets=(lanes,),
+            metrics=self.metrics,
         )
         self._decode = self._decode_cache.get(lanes)
         # Lane insertion is one compiled program (lane index traced, so all
@@ -98,17 +105,20 @@ class Engine:
     # -- admission -------------------------------------------------------------
     def _admit(self, req: Request, lane: int) -> None:
         """Prefill one request into one lane (single-lane prefill)."""
-        prompt = jnp.asarray(req.prompt[None], jnp.int32)
-        cache1, logits = self.model.prefill(
-            self.params, {"tokens": prompt}, self.max_seq
-        )
-        self.cache = self._insert(self.cache, cache1, jnp.int32(lane))
-        first = int(jnp.argmax(logits[0]))
+        with self.tracer.span("prefill", rid=req.rid, lane=lane,
+                              prompt_len=len(req.prompt)):
+            prompt = jnp.asarray(req.prompt[None], jnp.int32)
+            cache1, logits = self.model.prefill(
+                self.params, {"tokens": prompt}, self.max_seq
+            )
+            self.cache = self._insert(self.cache, cache1, jnp.int32(lane))
+            first = int(jnp.argmax(logits[0]))
         req.out_tokens.append(first)
         self.lane_req[lane] = req
         self.lane_pos[lane] = len(req.prompt)
         self.stats.prefills += 1
         self.stats.tokens_out += 1
+        self.metrics.inc("engine.prefills")
 
     # -- main loop ---------------------------------------------------------------
     def run(self, requests: List[Request], eos: Optional[int] = None) -> EngineStats:
@@ -123,15 +133,22 @@ class Engine:
             active = [i for i, r in enumerate(self.lane_req) if r is not None]
             if not active:
                 break
+            tr = self.tracer
+            if tr.enabled:
+                tr.counter("active_lanes", active=len(active))
             toks = np.zeros((self.lanes, 1), np.int32)
             for i in active:
                 toks[i, 0] = self.lane_req[i].out_tokens[-1]
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.lane_pos, jnp.int32),
-            )
-            nxt = np.asarray(jnp.argmax(logits, -1))
+            with tr.span("decode", step=self.stats.decode_steps,
+                         active=len(active)):
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(self.lane_pos, jnp.int32),
+                )
+                nxt = np.asarray(jnp.argmax(logits, -1))
             self.stats.decode_steps += 1
+            self.metrics.inc("engine.decode_steps")
+            self.metrics.set_gauge("engine.active_lanes", len(active))
             for i in active:
                 req = self.lane_req[i]
                 tok = int(nxt[i])

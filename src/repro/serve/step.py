@@ -16,6 +16,7 @@ runs in two alternating HBM arenas, exactly the paper's ping-pong buffers.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -49,6 +50,12 @@ class BucketedExecutorCache:
     lazily on first call).  Either way the *cache* is this class: one entry
     per bucket, no rebuilds, `misses` counting how many lowerings actually
     ran — the executor-cache contamination tests key on that.
+
+    Pass ``metrics`` (a :class:`repro.obs.metrics.MetricsRegistry`) to
+    record ``executor_cache.hits`` / ``.lowerings`` counters and a
+    ``executor_cache.lower_s`` histogram of per-bucket lowering times (the
+    prewarm cost breakdown).  Metrics default to off — a ``None`` registry
+    adds one ``is not None`` check per lookup.
     """
 
     def __init__(
@@ -57,12 +64,14 @@ class BucketedExecutorCache:
         buckets: Sequence[int],
         *,
         prewarm: bool = True,
+        metrics=None,
     ):
         if not buckets:
             raise ValueError("need at least one bucket")
         self.buckets: Tuple[int, ...] = tuple(sorted({int(b) for b in buckets}))
         self._lower = lower_fn
         self._compiled: Dict[int, Any] = {}
+        self._metrics = metrics
         if prewarm:
             for b in self.buckets:
                 self.get(b)
@@ -76,7 +85,14 @@ class BucketedExecutorCache:
             raise KeyError(f"{bucket} is not on the ladder {self.buckets}")
         hit = self._compiled.get(bucket)
         if hit is None:
+            t0 = time.monotonic()
             hit = self._compiled[bucket] = self._lower(bucket)
+            if self._metrics is not None:
+                self._metrics.inc("executor_cache.lowerings")
+                self._metrics.observe(
+                    "executor_cache.lower_s", time.monotonic() - t0)
+        elif self._metrics is not None:
+            self._metrics.inc("executor_cache.hits")
         return hit
 
     def for_batch(self, n: int) -> Tuple[int, Any]:
