@@ -1,0 +1,239 @@
+"""Mesh scale-out bench: the batched executors sharded over 1/2/4/8 devices.
+
+DESIGN.md §12: the batch axis of the compiled arena executors shards over a
+1-D ``('data',)`` mesh (``DataParallelPolicy``), weights replicate, and each
+device runs the full two-bank arena over its batch shard.  This bench
+measures what that buys and proves what it must not cost:
+
+* **scaling-efficiency table** — for each forced host-device count N in
+  {1, 2, 4, 8} (a fresh subprocess per N: ``XLA_FLAGS=
+  --xla_force_host_platform_device_count=N`` must be set before jax
+  initializes), time the sharded executor on a fixed global batch for
+  {lenet, ds_cnn} × {f32, int8} and report
+  ``efficiency = qps_N / (N · qps_1)``.  On an M-core host the efficiency
+  is meaningful up to N ≤ M; past that the forced devices time-slice one
+  core and the table records the (expected) collapse — ``meta.mesh`` stamps
+  ``host_cpus`` so readers can tell which regime a row is in.
+
+* **bit-exactness guard** — in every child process, for every config, the
+  sharded output must be **bit-exact** against the single-device executor
+  (rows are independent; partitioning the batch inserts no collectives).
+  The guard runs at the serving-ladder shapes — global batch 16 (the
+  bucket ladder's max) and the remainder batch 13 (does not divide any
+  multi-device mesh; pads up with row-independent lanes via
+  ``DataParallelPolicy.wrap_batched``) — which is the production claim:
+  bucket batches are what the mesh engine dispatches.  Int8 rows are
+  additionally asserted bit-exact at the (larger) timing batch: integer
+  accumulation is associative, so int8 is exact at *any* shape.  The f32
+  timed-batch equality is recorded, not gated: XLA's CPU backend switches
+  conv strategy at local batch ≥ 32, which moves f32 low bits with the
+  *shape* (single-device batch 64 vs 16 differ identically, no sharding
+  involved) — see DESIGN.md §12.  The CI mesh job fails if any gated
+  flag is false.
+
+Results merge into the ``--out`` JSON (``BENCH_hotpaths.json`` by default)
+as a ``mesh`` section, and the device counts + host CPU count are stamped
+into the shared ``meta`` block:
+
+    PYTHONPATH=src python benchmarks/bench_mesh.py [--smoke] [--out PATH]
+
+``--smoke`` drops the 8-device point and shrinks reps to fit the CI job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+_JSON_TAG = "MESH_BENCH_JSON:"
+
+WORKLOADS = ("lenet", "ds_cnn")
+DTYPES = ("f32", "int8")
+# The bit-exactness batches: the serving ladder's max bucket and a remainder
+# that divides no multi-device mesh (13 = 16 - 3).
+EXACT_BATCH = 16
+REMAINDER_BATCH = 13
+
+
+# ---------------------------------------------------------------------------
+# Child: runs under one forced device count, prints one JSON line
+# ---------------------------------------------------------------------------
+
+
+def _child(devices: int, batch: int, reps: int) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from bench_serving import _build_float, _build_int8, IN_SHAPES
+    from repro.core import pingpong, quantize
+    from repro.launch.mesh import make_data_mesh
+    from repro.quant.exec import make_int8_executor
+    from repro.sharding.policy import DataParallelPolicy
+
+    assert len(jax.devices()) == devices, (len(jax.devices()), devices)
+    policy = DataParallelPolicy(make_data_mesh())
+
+    def _time_qps(fn, args, n):
+        jax.block_until_ready(fn(*args))  # warm (compile) before timing
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return n / best, best * 1e6
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for name in WORKLOADS:
+        for dtype in DTYPES:
+            if dtype == "int8":
+                qm, plan = _build_int8(name, rng)
+                g = qm.graph
+                fn, params = make_int8_executor(qm, plan)
+                fn_sh, _ = make_int8_executor(qm, plan, data_parallel=policy)
+                xs = np.asarray(quantize.quantize_input(
+                    qm, jnp.asarray(rng.standard_normal(
+                        (batch, *IN_SHAPES[name])), jnp.float32)))
+            else:
+                g, plan, params = _build_float(name)
+                from repro.core.graph import DAGGraph
+
+                mk = (pingpong.make_dag_executor
+                      if isinstance(g, DAGGraph)
+                      else pingpong.make_scan_executor)
+                fn = mk(g, plan)
+                fn_sh = mk(g, plan, data_parallel=policy)
+                xs = rng.standard_normal(
+                    (batch, *IN_SHAPES[name])).astype(np.float32)
+
+            params_r = policy.replicate(params)
+            # Gated: bit-exact at the ladder max bucket and the padded
+            # remainder (the shapes the mesh engine actually dispatches).
+            y_ref = np.asarray(fn(params, jnp.asarray(xs[:EXACT_BATCH])))
+            y_sh = np.asarray(
+                fn_sh(params_r, policy.shard_batch(xs[:EXACT_BATCH])[0]))
+            bit_exact = bool(np.array_equal(y_ref, y_sh))
+            y_rem = np.asarray(policy.wrap_batched(fn_sh)(
+                params_r, xs[:REMAINDER_BATCH]))
+            bit_exact_rem = bool(
+                np.array_equal(y_ref[:REMAINDER_BATCH], y_rem))
+            # Timed batch: gated for int8 (integer math is shape-stable),
+            # recorded for f32 (XLA CPU's batch>=32 conv regime moves low
+            # bits with the local shape — see module docstring).
+            y_ref_t = np.asarray(fn(params, jnp.asarray(xs)))
+            xs_g, _ = policy.shard_batch(xs)
+            y_sh_t = np.asarray(fn_sh(params_r, xs_g))
+            bit_exact_timed = bool(np.array_equal(y_ref_t, y_sh_t))
+
+            qps, us = _time_qps(fn_sh, (params_r, xs_g), batch)
+            rows.append({
+                "devices": devices, "workload": name, "dtype": dtype,
+                "batch": batch, "qps": round(qps, 1),
+                "us_per_batch": round(us, 1),
+                "exact_batch": EXACT_BATCH,
+                "remainder_batch": REMAINDER_BATCH,
+                "bit_exact": bit_exact,
+                "bit_exact_remainder": bit_exact_rem,
+                "bit_exact_timed": bit_exact_timed,
+            })
+    print(_JSON_TAG + json.dumps(rows))
+
+
+# ---------------------------------------------------------------------------
+# Parent: one subprocess per device count, aggregate + merge
+# ---------------------------------------------------------------------------
+
+
+def _run_child(devices: int, batch: int, reps: int) -> list:
+    from repro.launch.mesh import forced_host_devices_env
+
+    env = forced_host_devices_env(devices)
+    env.setdefault("PYTHONPATH", str(Path(__file__).resolve().parent.parent / "src"))
+    proc = subprocess.run(
+        [sys.executable, __file__, "--child", "--devices", str(devices),
+         "--batch", str(batch), "--reps", str(reps)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    for line in proc.stdout.splitlines():
+        if line.startswith(_JSON_TAG):
+            return json.loads(line[len(_JSON_TAG):])
+    raise RuntimeError(
+        f"mesh child ({devices} devices) produced no result:\n"
+        f"{proc.stdout[-2000:]}\n{proc.stderr[-4000:]}"
+    )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="1/2/4 devices, short reps (CI artifact check)")
+    ap.add_argument("--out", default="BENCH_hotpaths.json")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--devices", type=int, default=0, help=argparse.SUPPRESS)
+    ap.add_argument("--batch", type=int, default=64,
+                    help="global batch per timed dispatch (divisible by 8)")
+    ap.add_argument("--reps", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    if args.child:
+        _child(args.devices, args.batch, args.reps)
+        return
+
+    counts = (1, 2, 4) if args.smoke else (1, 2, 4, 8)
+    reps = 5 if args.smoke else args.reps
+    if args.batch % max(counts) and not args.smoke:
+        raise SystemExit(f"--batch {args.batch} must divide {max(counts)}")
+
+    rows = []
+    for n in counts:
+        child_rows = _run_child(n, args.batch, reps)
+        rows += child_rows
+        for r in child_rows:
+            assert r["bit_exact"] and r["bit_exact_remainder"], r
+            if r["dtype"] == "int8":
+                assert r["bit_exact_timed"], r
+        print(f"{n} device(s): " + ", ".join(
+            f"{r['workload']}.{r['dtype']} {r['qps']} qps" for r in child_rows))
+
+    base = {(r["workload"], r["dtype"]): r["qps"]
+            for r in rows if r["devices"] == 1}
+    efficiency = {}
+    for r in rows:
+        key = f"{r['workload']}.{r['dtype']}"
+        b = base[(r["workload"], r["dtype"])]
+        eff = r["qps"] / (r["devices"] * b) if b else 0.0
+        efficiency.setdefault(key, {})[str(r["devices"])] = round(eff, 3)
+
+    mesh_meta = {
+        "device_counts": list(counts), "global_batch": args.batch,
+        "host_cpus": os.cpu_count(),
+        "forced_host_devices": True,  # CPU mesh via XLA_FLAGS, not hardware
+    }
+    section = {"rows": rows, "efficiency": efficiency, **mesh_meta}
+
+    out = Path(args.out)
+    data = json.loads(out.read_text()) if out.exists() else {}
+    if "meta" not in data:
+        from bench_hotpaths import run_metadata
+
+        data["meta"] = run_metadata()
+    data["meta"]["mesh"] = mesh_meta
+    data["mesh"] = section
+    out.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {out} (mesh: {len(rows)} rows over {len(counts)} device "
+          f"counts; all bit-exact vs single-device)")
+    for key, effs in sorted(efficiency.items()):
+        print(f"  {key}: " + ", ".join(
+            f"{n}dev {effs[str(n)]:.2f}" for n in counts))
+
+
+if __name__ == "__main__":
+    main()

@@ -151,12 +151,28 @@ def _apply_step(layer, views, p, x, apply_layer_fn=apply_layer):
     return out
 
 
+def _shard_jit(fn, data_parallel, donate: bool):
+    """Jit an executor under a DataParallelPolicy's batch sharding.
+
+    Weights replicate (``P()``), the input and output batch axes shard over
+    the mesh's ``'data'`` axis; GSPMD propagates the batch sharding through
+    the scan carry, so each device runs the whole two-bank arena over its
+    batch shard (DESIGN.md §12).  The input batch must divide by the mesh
+    size — callers pad remainders (``DataParallelPolicy.wrap_batched`` /
+    the serving bucket ladder's rounded buckets)."""
+    repl = data_parallel.replicated()
+    batch = data_parallel.batch_sharding()
+    return jax.jit(fn, in_shardings=(repl, batch), out_shardings=batch,
+                   donate_argnums=(1,) if donate else ())
+
+
 def make_scan_executor(
     graph: SequentialGraph,
     plan: MemoryPlan,
     *,
     donate_input: bool = False,
     apply_layer_fn=apply_layer,
+    data_parallel=None,
 ) -> Callable[[Params, jax.Array], jax.Array]:
     """Build the jitted executor for (graph, plan).
 
@@ -173,6 +189,13 @@ def make_scan_executor(
 
     ``apply_layer_fn`` supplies the per-layer numerics (default: the float
     oracle; the int8 runtime passes its requantizing step).
+
+    ``data_parallel`` (a ``repro.sharding.policy.DataParallelPolicy``)
+    shards the batch axis over the policy's device mesh: weights replicate,
+    the input must then be batched with ``N`` a multiple of the mesh size
+    (pad remainders via ``DataParallelPolicy.wrap_batched``).  Sharded
+    output is bit-exact against the unsharded executor — rows are
+    independent, so partitioning the batch inserts no collectives.
     """
     graph = as_sequential(graph, caller="pingpong.make_scan_executor")
     check_plan(graph, plan)
@@ -189,6 +212,11 @@ def make_scan_executor(
         nbatch = x.ndim - len(in_shape)
         if nbatch not in (0, 1):
             raise ValueError(f"input shape {x.shape} does not match {in_shape}")
+        if data_parallel is not None and nbatch != 1:
+            raise ValueError(
+                f"data-parallel executor requires a batched input "
+                f"(N, {in_shape}), got {x.shape}"
+            )
         if _prod(x.shape[nbatch:]) != in_elems:
             raise ValueError(f"input size {x.shape} != planned {sizes[0]}")
         cur = x
@@ -228,6 +256,8 @@ def make_scan_executor(
         return cur
 
     donate = donate_input and jax.default_backend() in _DONATING_BACKENDS
+    if data_parallel is not None:
+        return _shard_jit(_exec, data_parallel, donate)
     return jax.jit(_exec, donate_argnums=(1,) if donate else ())
 
 
@@ -493,6 +523,7 @@ def make_dag_executor(
     donate_input: bool = False,
     apply_node_fn=apply_node,
     batch_branches: bool = True,
+    data_parallel=None,
 ) -> Callable[[Params, jax.Array], jax.Array]:
     """Build the jitted DAG executor for (graph, plan).
 
@@ -513,6 +544,10 @@ def make_dag_executor(
 
     ``batch_branches=False`` disables the isomorphic-branch batching — the
     per-branch dispatch baseline the benchmarks compare against.
+
+    ``data_parallel`` shards the batch axis over a device mesh exactly as in
+    :func:`make_scan_executor`: weights replicated, input batched with ``N``
+    a multiple of the mesh size, output bit-exact vs unsharded.
     """
     mat, order, segments = segments_mod.segments_for_plan(
         graph, plan, batch_branches=batch_branches
@@ -526,6 +561,11 @@ def make_dag_executor(
         nbatch = x.ndim - len(in_shape)
         if nbatch not in (0, 1):
             raise ValueError(f"input shape {x.shape} does not match {in_shape}")
+        if data_parallel is not None and nbatch != 1:
+            raise ValueError(
+                f"data-parallel executor requires a batched input "
+                f"(N, {in_shape}), got {x.shape}"
+            )
         if _prod(x.shape[nbatch:]) != in_elems:
             raise ValueError(f"input size {x.shape} != planned {in_elems}")
         val = x
@@ -540,6 +580,8 @@ def make_dag_executor(
         return vals[mat.output]
 
     donate = donate_input and jax.default_backend() in _DONATING_BACKENDS
+    if data_parallel is not None:
+        return _shard_jit(_exec, data_parallel, donate)
     return jax.jit(_exec, donate_argnums=(1,) if donate else ())
 
 

@@ -1,16 +1,30 @@
-"""Production mesh construction (assignment-mandated shape).
+"""Mesh construction: production LLM meshes and the CNN data-parallel mesh.
 
-``make_production_mesh`` is a FUNCTION so importing this module never touches
-jax device state.  The single-pod mesh is (16, 16) = 256 chips ("data",
-"model"); the multi-pod mesh adds a leading "pod" axis: (2, 16, 16) = 512.
+Every mesh builder is a FUNCTION so importing this module never touches jax
+device state.  ``make_production_mesh`` is the assignment-mandated LLM shape:
+the single-pod mesh is (16, 16) = 256 chips ("data", "model"); the multi-pod
+mesh adds a leading "pod" axis: (2, 16, 16) = 512.  The "pod" axis composes
+with "data" for batch sharding: only the gradient all-reduce crosses pods
+(DCN-friendly).
 
-The "pod" axis composes with "data" for batch sharding: only the gradient
-all-reduce crosses pods (DCN-friendly).  ``launch/pipeline.py`` can instead
-use the pod axis as a 2-stage pipeline (see DESIGN.md §5).
+``make_data_mesh`` is the CNN executors' mesh (DESIGN.md §12): 1-D over
+``("data",)``, sized to the host's devices — pair it with
+``repro.sharding.policy.DataParallelPolicy``.  On CPU-only machines a
+multi-device mesh comes from forcing host devices *before jax initializes*:
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the maxtext-style
+trick; :func:`forced_host_devices_env` builds that environment for
+subprocesses — the route ``benchmarks/bench_mesh.py`` and the sharding
+tests take).
 """
 from __future__ import annotations
 
+import os
+from typing import Optional
+
 import jax
+import numpy as np
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -29,3 +43,34 @@ def make_host_mesh(model: int = 1):
 def data_axes(mesh) -> tuple:
     """Axes that shard the batch (pod folds into data-parallelism)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_data_mesh(n_devices: Optional[int] = None):
+    """1-D ``("data",)`` mesh over ``n_devices`` (default: all) host devices.
+
+    The batch-sharding mesh for the CNN arena executors — hand it to
+    ``DataParallelPolicy``.  On one device this degenerates to the unsharded
+    path bit-exactly (the policy still validates, pads by zero lanes, and
+    GSPMD partitions trivially)."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"need 1 <= n_devices <= {len(devs)}, got {n}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("data",))
+
+
+def forced_host_devices_env(n: int, base: Optional[dict] = None) -> dict:
+    """Environment for a subprocess that should see ``n`` CPU devices.
+
+    Splits N host devices out of one CPU via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the flag must
+    be set before jax initializes, hence a fresh process.  Any existing
+    force-count flag in the inherited ``XLA_FLAGS`` is replaced; other
+    flags are preserved."""
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    env = dict(os.environ if base is None else base)
+    kept = [f for f in env.get("XLA_FLAGS", "").split()
+            if not f.startswith(_FORCE_FLAG)]
+    env["XLA_FLAGS"] = " ".join(kept + [f"{_FORCE_FLAG}={n}"])
+    return env

@@ -152,6 +152,7 @@ def make_int8_executor(
     plan: MemoryPlan,
     *,
     batch_branches: bool = True,
+    data_parallel=None,
 ) -> Tuple[Callable, Dict[str, jax.Array]]:
     """``(jitted fn, params)`` — the AOT-lowerable form of the int8 executors.
 
@@ -162,15 +163,22 @@ def make_int8_executor(
     bucket.  Dispatches on the graph kind: DAG-quantized models run the
     segment-compiled DAG executor, sequential models the stacked-weight scan
     executor — both with the §5 int8 step.
+
+    ``data_parallel`` (``repro.sharding.policy.DataParallelPolicy``) shards
+    the batch axis over a device mesh: int8 weights/biases/multipliers
+    replicate, the int8 batch shards, and — int8 being integer arithmetic —
+    the sharded output is trivially bit-exact vs single-device (the float
+    executors earn the same guarantee from row independence).
     """
     if isinstance(qm.graph, DAGGraph):
         fn = pingpong.make_dag_executor(
             qm.graph, plan, apply_node_fn=apply_int8_node,
-            batch_branches=batch_branches,
+            batch_branches=batch_branches, data_parallel=data_parallel,
         )
     else:
         fn = pingpong.make_scan_executor(
-            qm.graph, plan, apply_layer_fn=apply_int8_layer
+            qm.graph, plan, apply_layer_fn=apply_int8_layer,
+            data_parallel=data_parallel,
         )
     return fn, int8_params(qm)
 

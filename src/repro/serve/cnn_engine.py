@@ -32,6 +32,16 @@ serving-side realization of the paper's static-arena plan:
   ``max_wait_s`` has elapsed since the first one: the knob that trades p50
   latency (shorter wait) against throughput (fuller buckets).
 
+* **Data-parallel mesh scale-out** — pass ``mesh=`` (to the constructors)
+  to shard every bucket batch over a ``('data',)`` device mesh
+  (DESIGN.md §12): weights replicate, the bucket's batch axis maps to
+  ``NamedSharding(mesh, P('data'))``, and each device runs the full
+  two-bank arena over its batch shard.  Buckets round **up** to mesh-size
+  multiples (1/2/4/8/16 on 4 devices → 4/8/16) so every compiled
+  executable shards evenly — the extra lanes are ordinary padding lanes,
+  already proven row-independent, so engine outputs stay bit-exact against
+  the single-device engine.
+
 Numerics are whatever the wrapped executor computes: engine outputs are
 bit-exact against the same executor called directly at the same bucket —
 padding rows never contaminate real rows — and therefore inherit the
@@ -224,15 +234,24 @@ class CNNEngine:
         prewarm: bool = True,
         tracer: Optional[Tracer] = None,
         metrics: Optional[MetricsRegistry] = None,
+        data_parallel=None,
     ):
         self.in_shape = tuple(int(d) for d in in_shape)
         self.dtype = jnp.dtype(dtype)
-        self.params = params
         self.policy = policy or CoalescePolicy()
         # Read per event by the worker loops, so a caller may swap in an
         # enabled Tracer on a running engine; defaults to the shared no-op.
         self.tracer = tracer or NULL_TRACER
         self.metrics = metrics or MetricsRegistry("cnn_engine")
+        # Mesh scale-out (DESIGN.md §12): ``executor_fn`` must have been
+        # built with the same policy (the constructors do); weights are
+        # placed replicated once, buckets round up to mesh-size multiples
+        # so every compiled batch shards evenly.
+        self.data_parallel = data_parallel
+        if data_parallel is not None:
+            params = data_parallel.replicate(params)
+            buckets = tuple(data_parallel.padded_batch(b) for b in buckets)
+        self.params = params
         buckets = tuple(sorted({int(b) for b in buckets}))
         if self.policy.max_batch > buckets[-1]:
             # the drain can never exceed the largest compiled bucket
@@ -275,25 +294,41 @@ class CNNEngine:
 
     # -- constructors ----------------------------------------------------------
 
+    @staticmethod
+    def _dp_policy(mesh):
+        """mesh (or None) → DataParallelPolicy (or None), validated."""
+        if mesh is None:
+            return None
+        from repro.sharding.policy import DataParallelPolicy
+
+        return DataParallelPolicy(mesh)
+
     @classmethod
-    def from_graph(cls, graph, plan, params, **kw) -> "CNNEngine":
+    def from_graph(cls, graph, plan, params, *, mesh=None, **kw) -> "CNNEngine":
         """Float engine for a (graph, plan) pair — DAG graphs through the
         segment-compiled DAG executor, sequential graphs through the
-        stacked-weight scan executor."""
+        stacked-weight scan executor.  ``mesh`` (a 1-D ``('data',)`` device
+        mesh, e.g. ``launch.mesh.make_data_mesh()``) shards every bucket
+        batch over the mesh."""
+        dp = cls._dp_policy(mesh)
         if isinstance(graph, DAGGraph):
-            fn = pingpong.make_dag_executor(graph, plan)
+            fn = pingpong.make_dag_executor(graph, plan, data_parallel=dp)
         else:
-            fn = pingpong.make_scan_executor(graph, plan)
-        return cls(fn, params, _input_shape(graph), jnp.float32, **kw)
+            fn = pingpong.make_scan_executor(graph, plan, data_parallel=dp)
+        return cls(fn, params, _input_shape(graph), jnp.float32,
+                   data_parallel=dp, **kw)
 
     @classmethod
-    def from_quantized(cls, qm, plan, **kw) -> "CNNEngine":
+    def from_quantized(cls, qm, plan, *, mesh=None, **kw) -> "CNNEngine":
         """Int8 engine for a quantized model: a genuine int8 request path
-        (int8 wire format, int8 arena banks) at 1/4 the float bytes."""
+        (int8 wire format, int8 arena banks) at 1/4 the float bytes.
+        ``mesh`` shards bucket batches as in :meth:`from_graph`."""
         from repro.quant.exec import make_int8_executor
 
-        fn, params = make_int8_executor(qm, plan)
-        return cls(fn, params, _input_shape(qm.graph), jnp.int8, **kw)
+        dp = cls._dp_policy(mesh)
+        fn, params = make_int8_executor(qm, plan, data_parallel=dp)
+        return cls(fn, params, _input_shape(qm.graph), jnp.int8,
+                   data_parallel=dp, **kw)
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -434,9 +469,16 @@ class CNNEngine:
                     bank[n:] = 0
             # Asynchronous dispatch: the device value is handed to the
             # completer; this thread returns to coalescing batch k+1 while
-            # the device computes batch k.
+            # the device computes batch k.  Under a mesh, H2D is a sharded
+            # device_put: each device receives only its batch shard.
             with tr.span("dispatch", batch=bid, bucket=bucket, n=n):
-                y = compiled(self.params, jnp.asarray(bank))
+                if self.data_parallel is not None:
+                    x = jax.device_put(
+                        bank, self.data_parallel.batch_sharding()
+                    )
+                else:
+                    x = jnp.asarray(bank)
+                y = compiled(self.params, x)
             self._inflight.put((y, batch, bid, bucket))
             self.metrics.inc("engine.batches")
             self.metrics.inc("engine.padded_lanes", bucket - n)

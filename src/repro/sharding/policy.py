@@ -1,4 +1,17 @@
-"""Sharding policy: logical parameter/activation/cache layouts → mesh axes.
+"""Sharding policies: logical parameter/activation/cache layouts → mesh axes.
+
+Two policies live here:
+
+* :class:`DataParallelPolicy` — batch-axis data parallelism for the CNN
+  arena executors (DESIGN.md §12).  Weights replicate, the batch dimension
+  of a ``(N, *in_shape)`` input maps to ``NamedSharding(mesh, P('data'))``,
+  and everything downstream — the two-bank scan carry included — inherits
+  the batch sharding from GSPMD, so each device runs the full ping-pong
+  arena over its batch shard.  Non-divisible batches pad up with
+  row-independent lanes (the serving padding proof covers them) and slice
+  back.
+
+* :class:`ShardingPolicy` — the LLM-stack rule set (DESIGN.md §5).
 
 One uniform rule set covers all 10 archs (DESIGN.md §5):
 
@@ -248,3 +261,113 @@ class ShardingPolicy:
     def shardings(self, spec_tree):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
                             is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel policy for the CNN arena executors (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DataParallelPolicy:
+    """Batch-axis data parallelism over a 1-D ``('data',)`` device mesh.
+
+    The contract for the batched arena executors (float and int8, sequential
+    and DAG, and the serving engine's bucket ladder):
+
+    * **weights replicate** — every parameter leaf gets ``P()`` (the models
+      are microcontroller-sized; replication is free next to the batch),
+    * **the batch axis shards** — a ``(N, *in_shape)`` input maps to
+      ``NamedSharding(mesh, P('data'))``; N must divide by the mesh size
+      (jit rejects uneven shardings), so callers pad non-divisible
+      remainders via :meth:`padded_batch` / :meth:`wrap_batched` with lanes
+      that are provably row-independent (the serving padding proof:
+      garbage lanes never perturb a bit of the real rows),
+    * **the arena carry stays whole per device** — GSPMD propagates the
+      batch sharding through the ``lax.scan`` two-bank carry, so each
+      device runs the complete ping-pong discipline over its batch shard;
+      no collective ever touches the arena (per-row computations are
+      independent, which is also why sharded output is *bit-exact* against
+      single-device output).
+
+    The mesh must expose a ``'data'`` axis; any other axis must have size 1
+    (pure data parallelism — a non-trivial model axis has no meaning for
+    the replicated-weight executors and raises).
+    """
+
+    mesh: Mesh
+    axis: str = "data"
+
+    def __post_init__(self):
+        shape = dict(self.mesh.shape)
+        if self.axis not in shape:
+            raise ValueError(
+                f"mesh axes {tuple(self.mesh.axis_names)} have no "
+                f"{self.axis!r} axis — build one with "
+                "repro.launch.mesh.make_data_mesh()"
+            )
+        extra = {n: s for n, s in shape.items() if n != self.axis and s != 1}
+        if extra:
+            raise ValueError(
+                f"data-parallel mesh must be 1-D over {self.axis!r}; "
+                f"non-unit extra axes {extra} have no data-parallel meaning"
+            )
+
+    @property
+    def dp_size(self) -> int:
+        return int(dict(self.mesh.shape)[self.axis])
+
+    # -- specs / shardings -----------------------------------------------------
+    def batch_spec(self) -> P:
+        """Leading-axis batch spec; trailing dims replicate (prefix spec)."""
+        return P(self.axis)
+
+    def batch_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.batch_spec())
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # -- remainder padding -----------------------------------------------------
+    def padded_batch(self, n: int) -> int:
+        """Smallest multiple of the mesh size ≥ n (the shardable batch)."""
+        if n < 1:
+            raise ValueError(f"batch size must be >= 1, got {n}")
+        d = self.dp_size
+        return ((int(n) + d - 1) // d) * d
+
+    def pad_lanes(self, n: int) -> int:
+        """How many padding lanes a batch of ``n`` needs."""
+        return self.padded_batch(n) - int(n)
+
+    def shard_batch(self, xs) -> Tuple[jax.Array, int]:
+        """Pad ``xs`` (N, ...) up to a shardable batch and place it on the
+        mesh with the batch sharding.  Returns ``(global array, N)`` — the
+        caller slices ``[:N]`` off the executor output.  Padding lanes are
+        zeros, but any value would do: the executors are row-independent."""
+        n = int(xs.shape[0])
+        pad = self.pad_lanes(n)
+        if pad:
+            xs = np.concatenate(
+                [np.asarray(xs), np.zeros((pad, *xs.shape[1:]), xs.dtype)]
+            )
+        return jax.device_put(xs, self.batch_sharding()), n
+
+    def replicate(self, tree):
+        """Place a pytree (weights) fully replicated on every device."""
+        return jax.device_put(tree, self.replicated())
+
+    def wrap_batched(self, fn):
+        """Lift a sharded ``(params, xs) -> ys`` executor over any batch.
+
+        ``fn`` must already carry this policy's in/out shardings (built via
+        ``pingpong.make_scan_executor(..., data_parallel=policy)`` or its
+        DAG/int8 counterparts).  The wrapper pads the batch up to a mesh
+        multiple, dispatches, and slices the real rows back — the same
+        pad-up-and-drop discipline the serving bucket ladder uses."""
+
+        def run(params, xs):
+            xs_g, n = self.shard_batch(xs)
+            return fn(params, xs_g)[:n]
+
+        return run

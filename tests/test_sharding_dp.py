@@ -1,0 +1,320 @@
+"""DataParallelPolicy: batch sharding for the arena executors (DESIGN.md §12).
+
+Two kinds of coverage:
+
+* **Device-count-adaptive tests** — run against a mesh over however many
+  devices the process has.  In the plain tier-1 suite that is one device
+  (the degenerate path, which must be *bit-exact* vs the unsharded
+  executors); the CI mesh job re-runs this file under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``, where the same
+  asserts become the real 4-way sharded-vs-single-device guarantees.
+
+* **A forced-4-device subprocess test** (marked slow) — XLA_FLAGS must be
+  set before jax initializes, so true multi-device coverage inside the
+  single-device suite takes a fresh interpreter: all four
+  {lenet, ds_cnn} × {f32, int8} configs bit-exact, remainder padding, and
+  the mesh engine with its rounded bucket ladder.
+
+Policy edge cases (validation errors, padding arithmetic) run against
+AbstractMesh — no devices needed, any mesh size testable anywhere.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusion, nn, planner, pingpong, quantize
+from repro.core.graph import lenet5
+from repro.launch.mesh import forced_host_devices_env, make_data_mesh
+from repro.serve.cnn_engine import CNNEngine
+from repro.sharding.policy import DataParallelPolicy
+
+
+def _abstract_mesh(shape, names):
+    """AbstractMesh across jax versions (same shim as test_sharding_policy)."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(names, shape)))
+    except TypeError:
+        return AbstractMesh(shape, names)
+
+
+@pytest.fixture(scope="module")
+def lenet_exec():
+    """(fused graph, plan, params, unsharded executor) shared per module."""
+    g = lenet5()
+    fused = fusion.fuse(g)
+    plan = planner.plan_pingpong(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    return fused, plan, params, pingpong.make_scan_executor(fused, plan)
+
+
+@pytest.fixture(scope="module")
+def lenet_int8():
+    """(quantized model, int8 plan, unsharded fn, params) shared per module."""
+    from repro.quant.exec import make_int8_executor
+
+    g = lenet5()
+    fused = fusion.fuse(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    calib = jnp.asarray(
+        np.random.default_rng(3).standard_normal((16, 1, 32, 32)), jnp.float32
+    )
+    qm = quantize.quantize(fused, params, calib)
+    plan_q = planner.plan_pingpong(g, io_dtype_bytes=1)
+    fn, qparams = make_int8_executor(qm, plan_q)
+    return qm, plan_q, fn, qparams
+
+
+def _images(n, seed=0):
+    return np.random.default_rng(seed).standard_normal(
+        (n, 1, 32, 32)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-shape validation (AbstractMesh: no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def test_policy_rejects_mesh_without_data_axis():
+    mesh = _abstract_mesh((4,), ("model",))
+    with pytest.raises(ValueError, match="no 'data' axis"):
+        DataParallelPolicy(mesh)
+
+
+def test_policy_rejects_non_unit_extra_axes():
+    mesh = _abstract_mesh((2, 2), ("data", "model"))
+    with pytest.raises(ValueError, match="non-unit extra axes"):
+        DataParallelPolicy(mesh)
+
+
+def test_policy_accepts_unit_extra_axes():
+    # a trailing size-1 axis is pure data parallelism in disguise
+    mesh = _abstract_mesh((4, 1), ("data", "model"))
+    assert DataParallelPolicy(mesh).dp_size == 4
+
+
+def test_make_data_mesh_validates_count():
+    n = len(jax.devices())
+    with pytest.raises(ValueError):
+        make_data_mesh(n + 1)
+    with pytest.raises(ValueError):
+        make_data_mesh(0)
+    assert dict(make_data_mesh(1).shape) == {"data": 1}
+
+
+# ---------------------------------------------------------------------------
+# Remainder padding arithmetic (AbstractMesh: any mesh size, no devices)
+# ---------------------------------------------------------------------------
+
+
+def test_padded_batch_rounds_up_to_mesh_multiples():
+    pol = DataParallelPolicy(_abstract_mesh((4,), ("data",)))
+    assert [pol.padded_batch(n) for n in (1, 3, 4, 5, 8, 13)] == [
+        4, 4, 4, 8, 8, 16]
+    assert [pol.pad_lanes(n) for n in (1, 4, 13)] == [3, 0, 3]
+    with pytest.raises(ValueError):
+        pol.padded_batch(0)
+
+
+def test_padded_batch_one_device_is_identity():
+    pol = DataParallelPolicy(_abstract_mesh((1,), ("data",)))
+    for n in (1, 3, 7):
+        assert pol.padded_batch(n) == n
+        assert pol.pad_lanes(n) == 0
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution over the process's real devices (1 in tier-1, 4 in the
+# CI mesh job — the asserts are the same, the mesh just gets wider)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_scan_executor_bit_exact(lenet_exec):
+    fused, plan, params, fn = lenet_exec
+    pol = DataParallelPolicy(make_data_mesh())
+    fn_sh = pingpong.make_scan_executor(fused, plan, data_parallel=pol)
+    xs = _images(8)
+    y_ref = np.asarray(fn(params, jnp.asarray(xs)))
+    y_sh = np.asarray(
+        fn_sh(pol.replicate(params), pol.shard_batch(xs)[0]))
+    assert np.array_equal(y_ref, y_sh)
+
+
+def test_sharded_executor_rejects_single_image(lenet_exec):
+    fused, plan, params, _ = lenet_exec
+    pol = DataParallelPolicy(make_data_mesh())
+    fn_sh = pingpong.make_scan_executor(fused, plan, data_parallel=pol)
+    # one device: the executor's own trace-time check; several devices:
+    # jit's in_shardings divisibility check fires first — either way the
+    # single-image path is a ValueError, never a silent mis-shard
+    with pytest.raises(ValueError, match="batched input|divisible"):
+        fn_sh(pol.replicate(params), jnp.zeros((1, 32, 32), jnp.float32))
+
+
+def test_wrap_batched_ladder_shapes_bit_exact(lenet_exec):
+    """At the serving-ladder shapes (max bucket 16 and the remainder 13 that
+    divides no multi-device mesh) the padded sharded run equals the
+    unsharded executor bit-for-bit — the same gate bench_mesh enforces."""
+    fused, plan, params, fn = lenet_exec
+    pol = DataParallelPolicy(make_data_mesh())
+    wrapped = pol.wrap_batched(
+        pingpong.make_scan_executor(fused, plan, data_parallel=pol))
+    for n in (13, 16):
+        xs = _images(n, seed=n)
+        y_ref = np.asarray(fn(params, jnp.asarray(xs)))
+        y = np.asarray(wrapped(params, xs))
+        assert y.shape == y_ref.shape, n
+        assert np.array_equal(y_ref, y), n
+
+
+def test_pad_lanes_are_row_independent(lenet_exec):
+    """Pad-lane contents never leak into real rows: zero-fill and garbage-
+    fill padding give bitwise-identical real rows at every remainder shape.
+    (Both runs share one global shape, so this holds regardless of XLA's
+    shape-dependent f32 conv strategy — see DESIGN.md §12.)"""
+    fused, plan, params, _ = lenet_exec
+    pol = DataParallelPolicy(make_data_mesh())
+    fn_sh = pingpong.make_scan_executor(fused, plan, data_parallel=pol)
+    wrapped = pol.wrap_batched(fn_sh)
+    params_r = pol.replicate(params)
+    rng = np.random.default_rng(42)
+    for n in (1, 3, 5):
+        xs = _images(n, seed=n)
+        m = pol.padded_batch(n)
+        pad_shape = (m - n, *xs.shape[1:])
+        zeros = np.concatenate([xs, np.zeros(pad_shape, np.float32)])
+        junk = np.concatenate(
+            [xs, 1e3 * rng.standard_normal(pad_shape).astype(np.float32)])
+        sharding = pol.batch_sharding()
+        ya = np.asarray(fn_sh(params_r, jax.device_put(zeros, sharding)))
+        yb = np.asarray(fn_sh(params_r, jax.device_put(junk, sharding)))
+        assert np.array_equal(ya[:n], yb[:n]), n
+        # and wrap_batched is exactly the zero-padded run, sliced
+        assert np.array_equal(np.asarray(wrapped(params, xs)), ya[:n]), n
+
+
+def test_shard_batch_pads_and_reports_n(lenet_exec):
+    pol = DataParallelPolicy(make_data_mesh())
+    xs = _images(3)
+    xs_g, n = pol.shard_batch(xs)
+    assert n == 3
+    assert xs_g.shape[0] == pol.padded_batch(3)
+    assert np.array_equal(np.asarray(xs_g)[:3], xs)
+
+
+def test_sharded_int8_executor_bit_exact(lenet_int8):
+    qm, plan_q, fn, qparams = lenet_int8
+    from repro.quant.exec import make_int8_executor
+
+    pol = DataParallelPolicy(make_data_mesh())
+    fn_sh, _ = make_int8_executor(qm, plan_q, data_parallel=pol)
+    xq = np.asarray(quantize.quantize_input(
+        qm, jnp.asarray(_images(8)))).astype(np.int8)
+    y_ref = np.asarray(fn(qparams, jnp.asarray(xq)))
+    y_sh = np.asarray(fn_sh(pol.replicate(qparams), pol.shard_batch(xq)[0]))
+    assert np.array_equal(y_ref, y_sh)
+
+
+def test_engine_with_mesh_bit_exact(lenet_exec):
+    """The serving engine under a mesh returns bit-identical results to the
+    meshless engine, and rounds its bucket ladder up to mesh multiples."""
+    fused, plan, params, _ = lenet_exec
+    mesh = make_data_mesh()
+    d = len(jax.devices())
+    xs = _images(8, seed=9)
+    with CNNEngine.from_graph(fused, plan, params, buckets=(1, 4, 8)) as e0:
+        r0, _ = e0.serve(xs)
+    with CNNEngine.from_graph(fused, plan, params, mesh=mesh,
+                              buckets=(1, 4, 8)) as e1:
+        pol = DataParallelPolicy(mesh)
+        assert e1._cache.buckets == tuple(sorted(
+            {pol.padded_batch(b) for b in (1, 4, 8)}))
+        assert all(b % d == 0 for b in e1._cache.buckets)
+        r1, _ = e1.serve(xs)
+    for a, b in zip(r0, r1):
+        assert np.array_equal(a.y, b.y)
+
+
+# ---------------------------------------------------------------------------
+# True multi-device: forced 4-device subprocess (XLA_FLAGS pre-init)
+# ---------------------------------------------------------------------------
+
+_SCRIPT = textwrap.dedent(
+    """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import fusion, nn, pingpong, planner, quantize, schedule
+    from repro.core.graph import DAGGraph, ds_cnn, lenet5
+    from repro.launch.mesh import make_data_mesh
+    from repro.quant.exec import make_int8_executor
+    from repro.serve.cnn_engine import CNNEngine
+    from repro.sharding.policy import DataParallelPolicy
+
+    assert len(jax.devices()) == 4, jax.devices()
+    pol = DataParallelPolicy(make_data_mesh())
+    assert pol.dp_size == 4
+
+    shapes = {"lenet": (1, 32, 32), "ds_cnn": (1, 49, 10)}
+    for name, builder in (("lenet", lenet5), ("ds_cnn", ds_cnn)):
+        g = builder()
+        rng = np.random.default_rng(0)
+        xs = rng.standard_normal((16, *shapes[name])).astype(np.float32)
+        if isinstance(g, DAGGraph):
+            fused, plan = fusion.fuse_dag(g), schedule.plan_dag(g)
+            mk, plan_q = pingpong.make_dag_executor, schedule.plan_dag(g, io_dtype_bytes=1)
+        else:
+            fused, plan = fusion.fuse(g), planner.plan_pingpong(g)
+            mk, plan_q = pingpong.make_scan_executor, planner.plan_pingpong(g, io_dtype_bytes=1)
+        params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+
+        # float: sharded vs single-device, full batch + non-divisible remainder
+        fn, fn_sh = mk(fused, plan), mk(fused, plan, data_parallel=pol)
+        y_ref = np.asarray(fn(params, jnp.asarray(xs)))
+        y_sh = np.asarray(fn_sh(pol.replicate(params), pol.shard_batch(xs)[0]))
+        assert np.array_equal(y_ref, y_sh), (name, "f32")
+        y_rem = np.asarray(pol.wrap_batched(fn_sh)(params, xs[:13]))
+        assert np.array_equal(y_ref[:13], y_rem), (name, "f32 remainder")
+
+        # int8: same pair of checks
+        quantize_fn = quantize.quantize_dag if isinstance(g, DAGGraph) else quantize.quantize
+        qm = quantize_fn(fused, params, jnp.asarray(xs))
+        fnq, qparams = make_int8_executor(qm, plan_q)
+        fnq_sh, _ = make_int8_executor(qm, plan_q, data_parallel=pol)
+        xq = np.asarray(quantize.quantize_input(qm, jnp.asarray(xs)))
+        yq_ref = np.asarray(fnq(qparams, jnp.asarray(xq)))
+        yq_sh = np.asarray(fnq_sh(pol.replicate(qparams), pol.shard_batch(xq)[0]))
+        assert np.array_equal(yq_ref, yq_sh), (name, "int8")
+        yq_rem = np.asarray(pol.wrap_batched(fnq_sh)(qparams, xq[:13]))
+        assert np.array_equal(yq_ref[:13], yq_rem), (name, "int8 remainder")
+        print(name, "ok")
+
+    # engine on the 4-device mesh: buckets (1,2,4,8) -> (4,8), bit-exact
+    g = lenet5(); fused = fusion.fuse(g); plan = planner.plan_pingpong(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    xs = np.random.default_rng(1).standard_normal((8, 1, 32, 32)).astype(np.float32)
+    with CNNEngine.from_graph(fused, plan, params, buckets=(1, 2, 4, 8)) as e0:
+        r0, _ = e0.serve(xs)
+    with CNNEngine.from_graph(fused, plan, params, mesh=make_data_mesh(),
+                              buckets=(1, 2, 4, 8)) as e1:
+        assert e1._cache.buckets == (4, 8), e1._cache.buckets
+        r1, _ = e1.serve(xs)
+    assert all(np.array_equal(a.y, b.y) for a, b in zip(r0, r1))
+    print("ALL_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_execution_forced_4dev():
+    env = forced_host_devices_env(4)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=1200, env=env, cwd=".",
+    )
+    assert "ALL_OK" in proc.stdout, proc.stdout[-2000:] + proc.stderr[-4000:]
