@@ -430,7 +430,7 @@ def plan_table() -> dict:
     reordered-beats-CMSIS row, so a planner regression fails the build even
     when every executor still runs.
     """
-    from repro.core import fusion, planner, schedule
+    from repro.core import fusion, planner, schedule, streaming
     from repro.core.graph import cifar_testnet, ds_cnn, residual_cifar
 
     g = cifar_testnet()
@@ -457,6 +457,11 @@ def plan_table() -> dict:
             ds, io_dtype_bytes=1).activation_bytes(),
         "ds_cnn_cmsis_int8_bytes": planner.plan_cmsis_baseline(
             ds).activation_bytes(),
+        # The streaming column (ISSUE 9): the ring-buffer arena for the
+        # per-frame executor — memory traded for ~6.5× fewer per-frame MACs
+        # (bench_streaming.py measures the latency side).
+        "ds_cnn_streaming_ring_int8_bytes": streaming.plan_streaming(
+            ds, io_dtype_bytes=1).plan.activation_bytes(),
     }
 
 

@@ -1,0 +1,186 @@
+"""Streaming KWS bench: per-frame ring-buffer executor vs full recompute.
+
+The production shape of the ``ds_cnn()`` keyword-spotting workload is one
+new MFCC frame at a time.  This bench measures what the ring-buffer
+streaming executor (``repro.core.streaming``, DESIGN.md §13) buys over the
+recompute-from-scratch deployment (one full-window arena-executor call per
+frame, AOT-compiled at batch 1 — the best the non-streaming stack offers):
+
+* ``streaming``      — amortized µs per frame pushing a long frame sequence
+  through the AOT-compiled per-frame step (emissions every other frame for
+  the stride-2 stem; non-emitting frames only shift the input ring),
+* ``full_recompute`` — µs per frame for the batch-1 full-window executor,
+
+for f32 and int8, plus the static cost model (``obs.report.streaming_report``:
+per-frame MACs = 15.3% of the 2,539,840 full-window MACs) and the ring-arena
+byte accounting next to the existing planner table.  Results merge into the
+``--out`` JSON (``BENCH_hotpaths.json``) as a ``streaming`` section; run
+after ``bench_hotpaths`` (which rewrites the file).  The CI bench-smoke
+gate asserts the int8 steady-state speedup ≥ 3× and the per-frame MAC
+fraction ≤ 25%:
+
+    PYTHONPATH=src python benchmarks/bench_streaming.py [--smoke] [--out PATH]
+
+``--smoke`` shortens the frame sequences (CI budget) — the per-frame
+amortization is unchanged, only the averaging window shrinks.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from bench_hotpaths import run_metadata
+
+
+def _build():
+    """(graph, params, qm) for the unfused ds_cnn chain.
+
+    Streaming runs the *unfused* chain (FusedConvPool windows are not
+    row-local along H), with its own calibration — the oracle and both
+    executors share this one quantized model.
+    """
+    from repro.core import graph as graph_mod, nn, quantize
+
+    g = graph_mod.ds_cnn()
+    params = nn.init_params(g.to_sequential(), jax.random.PRNGKey(0))
+    calib = jax.random.normal(jax.random.PRNGKey(1), (1, 49, 10))
+    qm = quantize.quantize_dag(g, params, calib)
+    return g, params, qm
+
+
+def _frames(n, rng):
+    return np.asarray(rng.standard_normal((n, 1, 10)), np.float32)
+
+
+def bench_streaming_path(g, params, qm, dtype: str, n_frames: int) -> dict:
+    """Amortized per-frame latency of the AOT-compiled streaming step."""
+    from repro.core import quantize, streaming
+    from repro.quant import exec as qexec
+
+    if dtype == "int8":
+        ex, p = qexec.make_int8_streaming_executor(qm)
+        frames = quantize.quantize_input(
+            qm, jnp.asarray(_frames(n_frames, np.random.default_rng(7))))
+    else:
+        ex = streaming.make_streaming_executor(g)
+        p = params
+        frames = jnp.asarray(_frames(n_frames, np.random.default_rng(7)))
+    step = ex.aot_step(p)
+    state = ex.init_state(p)
+    # warm the two cond branches
+    for t in range(2 * ex.splan.emit_stride):
+        state, out, _ = step(p, state, frames[t])
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for t in range(n_frames):
+        state, out, _ = step(p, state, frames[t])
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    return {
+        "workload": "ds_cnn", "dtype": dtype, "mode": "streaming",
+        "frames": n_frames,
+        "us_per_frame": round(dt / n_frames * 1e6, 1),
+        "emit_stride": ex.splan.emit_stride,
+        "arena_bytes": int(ex.splan.plan.arena_bytes),
+    }
+
+
+def bench_full_recompute(g, params, qm, dtype: str, reps: int) -> dict:
+    """Per-frame latency of the recompute-from-scratch baseline: one
+    AOT-compiled batch-1 full-window executor call per frame (the fused
+    standard deployment — the fastest non-streaming path)."""
+    from repro.core import fusion, nn, pingpong, quantize, schedule
+    from repro.quant import exec as qexec
+
+    fused = fusion.fuse_dag(g)
+    plan = schedule.plan_dag(g, io_dtype_bytes=1 if dtype == "int8" else 4)
+    fparams = fusion.rename_params(fused, params)
+    if dtype == "int8":
+        calib = jax.random.normal(jax.random.PRNGKey(1), (1, 49, 10))
+        qm_fused = quantize.quantize_dag(fused, fparams, calib)
+        fn, p = qexec.make_int8_executor(qm_fused, plan)
+        x = quantize.quantize_input(
+            qm_fused, jax.random.normal(jax.random.PRNGKey(3), (1, 1, 49, 10)))
+        compiled = pingpong.aot_compile(fn, p, (1, 1, 49, 10), jnp.int8)
+    else:
+        fn = pingpong.make_dag_executor(fused, plan)
+        p = fparams
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 49, 10))
+        compiled = pingpong.aot_compile(fn, p, (1, 1, 49, 10), jnp.float32)
+    jax.block_until_ready(compiled(p, x))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        y = compiled(p, x)
+    jax.block_until_ready(y)
+    dt = time.perf_counter() - t0
+    return {
+        "workload": "ds_cnn", "dtype": dtype, "mode": "full_recompute",
+        "frames": reps,
+        "us_per_frame": round(dt / reps * 1e6, 1),
+        "arena_bytes": int(plan.arena_bytes),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short frame sequences (CI artifact check)")
+    ap.add_argument("--out", default="BENCH_hotpaths.json")
+    args = ap.parse_args(argv)
+
+    from repro.core import streaming
+    from repro.obs import report
+
+    n_frames = 64 if args.smoke else 512
+    reps = 32 if args.smoke else 256
+
+    g, params, qm = _build()
+    rows, speedup = [], {}
+    for dtype in ("f32", "int8"):
+        s = bench_streaming_path(g, params, qm, dtype, n_frames)
+        f = bench_full_recompute(g, params, qm, dtype, reps)
+        rows += [s, f]
+        speedup[f"ds_cnn.{dtype}"] = round(
+            f["us_per_frame"] / s["us_per_frame"], 2)
+        print(f"ds_cnn.{dtype}: streaming {s['us_per_frame']} µs/frame vs "
+              f"full recompute {f['us_per_frame']} µs/frame "
+              f"({speedup[f'ds_cnn.{dtype}']}x)")
+
+    splan = streaming.plan_streaming(g, io_dtype_bytes=1)
+    cost = report.streaming_report(g, splan)
+    section = {
+        "rows": rows,
+        "speedup": speedup,
+        "cost_model": {k: cost[k] for k in (
+            "emit_stride", "full_window_macs", "per_emission_macs",
+            "per_frame_macs", "per_frame_frac")},
+        "ring_arena": {
+            "int8_arena_bytes": cost["ring_arena_bytes"],
+            "int8_ring_state_bytes": cost["ring_state_bytes"],
+            "rings": [{k: r[k] for k in ("step", "ring_rows", "new_rows",
+                                         "edge_rows", "ring_bytes")}
+                      for r in cost["rings"]],
+        },
+    }
+
+    out = Path(args.out)
+    data = json.loads(out.read_text()) if out.exists() else {}
+    data.setdefault("meta", run_metadata())
+    data["streaming"] = section
+    out.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {out} (streaming: {len(rows)} rows, "
+          f"per-frame MACs {cost['per_frame_frac']:.1%} of full window)")
+
+
+if __name__ == "__main__":
+    main()

@@ -46,7 +46,13 @@ class BufferAssignment:
     kind: str
     size_elems: int
     offset_elems: int
-    bank: str  # "A" | "B" | "unique" | "scratch"
+    # "A" | "B" | "unique" | "scratch" — the sequential two-bank plans;
+    # "dag" — interval-packed reordered schedules (repro.core.schedule);
+    # "ring" | "stream" — the streaming ring arena (repro.core.streaming):
+    # rings persist across the whole emission schedule, "stream" buffers
+    # are per-emission temporaries.  verify_plan / arena_timeline are
+    # bank-agnostic; bank is provenance for reports and tests.
+    bank: str
     live_from: int  # index of producing layer (in materialized-layer order)
     live_until: int  # index of consuming layer (inclusive)
 

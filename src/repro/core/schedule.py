@@ -585,6 +585,58 @@ def fuse_dag_priced(
     )
 
 
+def assemble_plan(
+    entries: Sequence[Tuple[str, str, int, str, int, int]],
+    *,
+    strategy: str,
+    param_elems: int,
+    io_dtype_bytes: int = 4,
+    scratch_elems: int = 0,
+    pack_budget: int = 200000,
+    offsets: Optional[Sequence[int]] = None,
+    arena_elems: Optional[int] = None,
+) -> MemoryPlan:
+    """Pack lifetime entries into one arena and build the :class:`MemoryPlan`.
+
+    ``entries`` is ``(name, kind, size_elems, bank, live_from, live_until)``
+    per buffer.  This is the shared tail of every interval-priced planner:
+    :func:`plan_dag` funnels its reordered schedule through here, and
+    `repro.core.streaming.plan_streaming` prices its per-layer ring buffers
+    and per-emission temporaries with the exact same machinery (rings are
+    just buffers whose live range spans the whole emission schedule).
+    Callers that already chose offsets (e.g. the two-bank ping-pong
+    fallback) pass ``offsets``/``arena_elems`` and skip the packing.
+    """
+    sizes = [e[2] for e in entries]
+    if offsets is None:
+        intervals = [(e[4], e[5]) for e in entries]
+        offsets, arena_elems = pack_intervals(sizes, intervals, budget=pack_budget)
+    elif arena_elems is None:
+        arena_elems = max(
+            (off + sz for off, sz in zip(offsets, sizes)), default=0
+        )
+    buffers = tuple(
+        BufferAssignment(
+            name=name,
+            kind=kind,
+            size_elems=size,
+            offset_elems=offsets[i],
+            bank=bank,
+            live_from=live_from,
+            live_until=live_until,
+        )
+        for i, (name, kind, size, bank, live_from, live_until) in enumerate(entries)
+    )
+    return MemoryPlan(
+        strategy=strategy,
+        buffers=buffers,
+        arena_elems=arena_elems,
+        scratch_elems=scratch_elems,
+        param_elems=param_elems,
+        io_dtype_bytes=io_dtype_bytes,
+    )
+
+
 def plan_dag(
     graph,
     order: Optional[Sequence[str]] = None,
@@ -654,23 +706,15 @@ def plan_dag(
             offsets, arena = pp_offsets, pp_arena
             strategy = "dag-pingpong"
 
-    buffers = tuple(
-        BufferAssignment(
-            name=name,
-            kind=steps[name].layer.kind,
-            size_elems=sizes[i],
-            offset_elems=offsets[i],
-            bank="dag",
-            live_from=i,
-            live_until=death[name],
-        )
-        for i, name in enumerate(order)
-    )
-    return MemoryPlan(
+    return assemble_plan(
+        [
+            (name, steps[name].layer.kind, sizes[i], "dag", i, death[name])
+            for i, name in enumerate(order)
+        ],
         strategy=strategy,
-        buffers=buffers,
-        arena_elems=arena,
-        scratch_elems=max((s.scratch_elems for s in mat.steps), default=0),
         param_elems=g.param_count(),
         io_dtype_bytes=io_dtype_bytes,
+        scratch_elems=max((s.scratch_elems for s in mat.steps), default=0),
+        offsets=offsets,
+        arena_elems=arena,
     )

@@ -1,0 +1,541 @@
+"""Streaming executor: ring-buffer arena + incremental per-frame step.
+
+The production form of the ``ds_cnn()`` keyword-spotting workload is
+continuous audio: one new MFCC frame arrives at a time and the (49, 10)
+window slides by one row.  Recomputing the full window per frame throws
+away almost everything — consecutive windows share 48 of 49 input rows, and
+every conv/pool layer's activations overlap accordingly.  This module keeps
+a per-layer **ring buffer along the time (H) axis** holding exactly the
+*steady* rows — the rows whose receptive field never touches the sliding
+window's zero-padding, hence are shift-invariant as the window advances —
+and a per-frame step that computes only the new rows plus the thin
+window-edge patches, falling back to full recompute only for the head
+(pool + FC on the assembled final map).
+
+Ring extents (DESIGN.md §13).  For backbone layer ℓ with kernel ``k``,
+stride ``s``, padding ``p`` along H, the rows *affected* by the sliding
+top edge grow as ``a_ℓ = ceil((a_{ℓ-1} + p) / s)`` and by the bottom edge
+as ``b_ℓ = H_ℓ - 1 - floor((H_{ℓ-1} - b_{ℓ-1} + p - k) / s)`` (``a_0 =
+b_0 = 0`` at the input).  The ring holds the remaining ``n_ℓ = H_ℓ - a_ℓ -
+b_ℓ`` steady rows.  Strides thin the emission cadence: with ``S_ℓ`` the
+cumulative stride through layer ℓ and ``E`` the product over the whole
+backbone, an output emission happens every ``E`` input frames, and layer ℓ
+gains exactly ``r_ℓ = E / S_ℓ`` new steady rows per emission (an integer by
+construction).  For ``ds_cnn()`` the stride-2 stem gives ``E = 2`` — the
+head emits on every other frame — with rings of 23/21/21/19/19/17/17/15/15
+rows for conv1/dw1/pw1/…/dw4/pw4.
+
+Per emission, layer ℓ computes ``r_ℓ`` new steady rows (reading only the
+previous layer's steady span — guaranteed by ``n ≥ r``), plus the ``a_ℓ``
+top and ``b_ℓ`` bottom edge patches recomputed outright from the previous
+layer's patches and ring edges with explicit padding.  All row computations
+reuse the stock per-layer numerics unchanged (``nn.apply_layer`` float,
+``quant.exec.apply_int8_layer`` int8) via one trick: pre-pad the assembled
+input block explicitly (zeros for convs, dtype-min for max-pool — the same
+identities the full-window semantics use) and apply the layer with
+``padding=0``.  Int8 arithmetic is integer-exact, so streaming int8 outputs
+are **bit-exact** vs the sliding full-window oracle
+(``quantize.simulate_int8_dag_forward``); f32 matches to numerical
+tolerance (XLA picks shape-dependent conv algorithms).
+
+The ring arena is priced by the same interval machinery as
+``schedule.plan_dag`` (:func:`schedule.assemble_plan`): rings are buffers
+live across the whole emission schedule (bank ``"ring"``), per-emission
+temporaries (new rows, edge patches, assembled head input, head buffers)
+are transient (bank ``"stream"``), and ``planner.verify_plan`` /
+``obs.report.arena_timeline`` apply unchanged.  Streaming trades arena
+bytes for per-frame compute: ~3.9× the two-bank int8 arena for ~6.5× fewer
+MACs per frame on ``ds_cnn()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nn, pingpong, schedule
+from repro.core.graph import (
+    Conv2d,
+    DepthwiseConv2d,
+    Input,
+    MaxPool2d,
+    ReLU,
+    SequentialGraph,
+    as_sequential,
+)
+from repro.core.planner import MemoryPlan, materialized_steps
+
+# Layer kinds that can live in the streamed backbone: local along H with a
+# static (kernel, stride, padding) geometry.  Everything else — Linear,
+# Flatten, fused forms, joins — starts the full-recompute head.
+_STREAMABLE = (Conv2d, DepthwiseConv2d, MaxPool2d)
+
+
+def _geometry(layer) -> Tuple[int, int, int]:
+    """(kernel, stride, padding) along H for a streamable layer."""
+    return (layer.kernel_size, layer.stride, layer.padding)
+
+
+@dataclasses.dataclass(frozen=True)
+class RingSpec:
+    """Ring geometry for one backbone layer (all row counts along H)."""
+
+    name: str
+    kind: str
+    kernel: int
+    stride: int
+    padding: int
+    channels: int  # C of the layer's output map
+    width: int  # W of the layer's output map
+    height: int  # full-window output height H_ℓ
+    top: int  # a_ℓ: top rows affected by the sliding window edge
+    bottom: int  # b_ℓ: bottom rows affected by the sliding window edge
+    rows: int  # n_ℓ = H_ℓ - a_ℓ - b_ℓ: steady rows held in the ring
+    new_rows: int  # r_ℓ = E / S_ℓ: rows entering the ring per emission
+    cum_stride: int  # S_ℓ: cumulative stride through this layer
+
+    @property
+    def ring_elems(self) -> int:
+        return self.channels * self.rows * self.width
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """The streaming counterpart of a :class:`MemoryPlan`.
+
+    ``rings`` covers the streamed backbone in execution order; ``head``
+    names the materialized steps recomputed full-window per emission.
+    ``plan`` is a standard :class:`MemoryPlan` (strategy
+    ``"streaming-ring"``) pricing rings + per-emission temporaries, so the
+    existing ``verify_plan`` / ``arena_timeline`` tooling applies.
+    """
+
+    in_shape: Tuple[int, int, int]
+    emit_stride: int  # E: input frames per output emission
+    rings: Tuple[RingSpec, ...]
+    head: Tuple[str, ...]
+    plan: MemoryPlan
+
+    @property
+    def ring_elems(self) -> int:
+        """Persistent ring state (input ring + per-layer rings), in elems."""
+        c, h, w = self.in_shape
+        return c * h * w + sum(r.ring_elems for r in self.rings)
+
+
+def _ceil_div(x: int, y: int) -> int:
+    return -(-x // y)
+
+
+def plan_streaming(
+    graph,
+    *,
+    io_dtype_bytes: int = 4,
+    pack_budget: int = 200000,
+) -> StreamPlan:
+    """Plan the ring-buffer arena for streaming a chain along H.
+
+    The backbone is the maximal prefix of materialized steps that are
+    streamable: conv/depthwise/pool layers with only ReLU view layers
+    attached (a Flatten view collapses H and forces the head — for
+    ``ds_cnn()`` that is exactly the final pool+FC), ``padding <
+    kernel_size``, and ring extents that stay positive and large enough to
+    supply the next emission (``n_ℓ ≥ r_ℓ``).  Everything after the
+    backbone is the head, recomputed full-window per emission.
+    """
+    seq = as_sequential(graph, caller="plan_streaming")
+    pre_views, steps = materialized_steps(seq)
+    in_shape = tuple(seq.layers[0].shape)
+    if len(in_shape) != 3:
+        raise ValueError(f"plan_streaming: expected a (C, H, W) input, got {in_shape}")
+
+    # -- backbone selection (two-pass: extents first, then trim until the
+    #    whole-backbone emit stride E fits every ring) ----------------------
+    candidates: List[RingSpec] = []
+    if not pre_views:  # view layers on the raw input force full recompute
+        a_prev, b_prev, h_prev = 0, 0, in_shape[1]
+        cum = 1
+        for layer, views, in_sh, out_sh in steps:
+            if not isinstance(layer, _STREAMABLE):
+                break
+            if any(not isinstance(v, ReLU) for v in views):
+                break
+            k, s, p = _geometry(layer)
+            if p >= k:
+                break
+            h_out = out_sh[1]
+            a = min(_ceil_div(a_prev + p, s), h_out)
+            j0 = (h_prev - b_prev + p - k) // s + 1
+            b = min(max(h_out - j0, 0), h_out)
+            rows = h_out - a - b
+            if rows < 1:
+                break
+            cum *= s
+            candidates.append(
+                RingSpec(
+                    name=layer.name or layer.kind,
+                    kind=layer.kind,
+                    kernel=k,
+                    stride=s,
+                    padding=p,
+                    channels=out_sh[0],
+                    width=out_sh[2],
+                    height=h_out,
+                    top=a,
+                    bottom=b,
+                    rows=rows,
+                    new_rows=0,  # filled once E is known
+                    cum_stride=cum,
+                )
+            )
+            a_prev, b_prev, h_prev = a, b, h_out
+
+    # Deeper strided layers raise E, which raises every earlier layer's
+    # per-emission row count r = E / S — trim from the end until all fit.
+    while candidates:
+        emit = candidates[-1].cum_stride
+        if all(emit // r.cum_stride <= r.rows for r in candidates):
+            break
+        candidates.pop()
+    emit = candidates[-1].cum_stride if candidates else 1
+    rings = tuple(
+        dataclasses.replace(r, new_rows=emit // r.cum_stride) for r in candidates
+    )
+    head = tuple(
+        (layer.name or layer.kind) for layer, _, _, _ in steps[len(rings):]
+    )
+
+    # -- price the arena with the shared interval machinery ----------------
+    # Emission timeline positions: t = i processes backbone layer i
+    # (new rows + edge patches), t = B assembles the head input, t = B+1+h
+    # runs head step h.  Rings persist across the whole schedule.
+    n_b = len(rings)
+    t_end = n_b + 1 + len(head)
+    c_in, h_in, w_in = in_shape
+    entries: List[Tuple[str, str, int, str, int, int]] = [
+        ("input_ring", "Input", c_in * h_in * w_in, "ring", 0, t_end)
+    ]
+    for r in rings:
+        entries.append((f"ring:{r.name}", r.kind, r.ring_elems, "ring", 0, t_end))
+    for i, r in enumerate(rings):
+        row = r.channels * r.width
+        entries.append((f"new:{r.name}", r.kind, r.new_rows * row, "stream", i, i + 1))
+        if r.top:
+            entries.append((f"top:{r.name}", r.kind, r.top * row, "stream", i, i + 1))
+        if r.bottom:
+            entries.append((f"bot:{r.name}", r.kind, r.bottom * row, "stream", i, i + 1))
+    if rings:
+        last = rings[-1]
+        entries.append(
+            ("assembled", last.kind,
+             last.channels * last.height * last.width, "stream", n_b, n_b + 1)
+        )
+    for h, (layer, views, in_sh, out_sh) in enumerate(steps[len(rings):]):
+        size = 1
+        for d in out_sh:
+            size *= int(d)
+        entries.append(
+            (f"head:{layer.name or layer.kind}", layer.kind, size, "stream",
+             n_b + 1 + h, min(n_b + 2 + h, t_end))
+        )
+    plan = schedule.assemble_plan(
+        entries,
+        strategy="streaming-ring",
+        param_elems=seq.param_count(),
+        io_dtype_bytes=io_dtype_bytes,
+        pack_budget=pack_budget,
+    )
+    return StreamPlan(
+        in_shape=in_shape,
+        emit_stride=emit,
+        rings=rings,
+        head=head,
+        plan=plan,
+    )
+
+
+def _slice_rows(
+    parts: Tuple[Optional[jax.Array], jax.Array, Optional[jax.Array]],
+    geom: Tuple[int, int, int],
+    lo: int,
+    hi: int,
+) -> Tuple[jax.Array, int, int]:
+    """Rows [lo, hi] of the previous layer's *current-window* output.
+
+    ``parts = (top, ring, bot)`` are the previous layer's freshly-computed
+    top patch (rows [0, a)), updated ring (rows [a, a+n)) and bottom patch
+    (rows [a+n, H)); ``geom = (a, n, b)``.  Row indices outside [0, H) are
+    returned as explicit pad counts for the caller to fill with the layer's
+    own padding identity.  All indices are Python ints — slicing is static.
+    """
+    a, n, b = geom
+    h_prev = a + n + b
+    pad_top = max(0, -lo)
+    pad_bot = max(0, hi - (h_prev - 1))
+    lo_c, hi_c = max(lo, 0), min(hi, h_prev - 1)
+    pieces = []
+    for part, start, height in ((parts[0], 0, a), (parts[1], a, n), (parts[2], a + n, b)):
+        if part is None or height == 0:
+            continue
+        s0 = max(lo_c - start, 0)
+        s1 = min(hi_c - start, height - 1)
+        if s0 <= s1:
+            pieces.append(part[:, s0 : s1 + 1, :])
+    block = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=1)
+    return block, pad_top, pad_bot
+
+
+class StreamingExecutor:
+    """The per-frame incremental executor for a streamable chain.
+
+    Numerics-parametric like the pingpong executors: ``apply_layer_fn`` is
+    ``nn.apply_layer`` (float) or ``quant.exec.apply_int8_layer`` (int8) —
+    the streaming machinery only rearranges *which rows* each layer sees.
+
+    * :meth:`init_state` — zero-history warm start: the state a stream would
+      have after infinitely many all-zero frames (full-window pass over a
+      zero window, steady rows sliced into the rings).
+    * :attr:`step` — one jitted ``(params, state, frame) -> (state, out,
+      emitted)`` program; the ring-state carry is donated on backends that
+      support buffer donation.  Non-emitting frames (``E > 1``) only shift
+      the input ring under a ``lax.cond``.
+    * :meth:`run` — ``lax.scan`` of the step over a frame sequence.
+    * :meth:`aot_step` — the step ``.lower().compile()``'d against the
+      state/frame specs (the serving prewarm, as ``pingpong.aot_compile``).
+    """
+
+    def __init__(
+        self,
+        graph,
+        splan: StreamPlan,
+        *,
+        apply_layer_fn: Callable = nn.apply_layer,
+        dtype=jnp.float32,
+    ):
+        seq = as_sequential(graph, caller="StreamingExecutor")
+        pre_views, steps = materialized_steps(seq)
+        self.splan = splan
+        self.dtype = jnp.dtype(dtype)
+        self._apply = apply_layer_fn
+        self._pre_views = pre_views
+        self._backbone = list(zip(splan.rings, steps[: len(splan.rings)]))
+        self._head = steps[len(splan.rings):]
+        self._E = splan.emit_stride
+        donate = jax.default_backend() in pingpong._DONATING_BACKENDS
+        self.step = jax.jit(self._step_impl, donate_argnums=(1,) if donate else ())
+        self.init_state = jax.jit(self._init_state)
+        self._run = jax.jit(self._run_impl)
+
+    # -- row-level layer application ---------------------------------------
+    def _pad_fill(self, layer):
+        if isinstance(layer, MaxPool2d):
+            if jnp.issubdtype(self.dtype, jnp.floating):
+                return -jnp.inf
+            return int(jnp.iinfo(self.dtype).min)
+        return 0
+
+    def _rows(self, layer, views, p, block, pad_top: int, pad_bot: int):
+        """Apply ``layer`` (+ its ReLU views) to an explicitly-padded block.
+
+        The block is pre-padded on H by the window-edge pad counts and on W
+        by the layer's own padding, with the layer's padding identity
+        (zeros for convs, dtype-min for max-pool) — then the layer runs
+        with ``padding=0``, which reuses the stock numerics unchanged.
+        """
+        _, _, pad = _geometry(layer)
+        if pad_top or pad_bot or pad:
+            block = jnp.pad(
+                block,
+                ((0, 0), (pad_top, pad_bot), (pad, pad)),
+                constant_values=self._pad_fill(layer),
+            )
+        y = self._apply(dataclasses.replace(layer, padding=0), p, block)
+        for v in views:
+            y = self._apply(v, {}, y)
+        return y
+
+    # -- the emission (the expensive cond branch) --------------------------
+    def _emit(self, params, frames, rings):
+        """New rings + head output for the window held in ``frames``."""
+        parts = (None, frames, None)
+        geom = (0, self.splan.in_shape[1], 0)
+        new_rings = {}
+        for spec, (layer, views, _in_sh, _out_sh) in self._backbone:
+            p = params.get(spec.name, {})
+            k, s, pad = spec.kernel, spec.stride, spec.padding
+            # 1. new steady rows: output rows [H-b-r, H-b) — their RF lies
+            #    inside the previous layer's steady span (n ≥ r), no pads.
+            j0 = spec.height - spec.bottom - spec.new_rows
+            j1 = spec.height - spec.bottom - 1
+            block, pt, pb = _slice_rows(parts, geom, j0 * s - pad, j1 * s - pad + k - 1)
+            new = self._rows(layer, views, p, block, pt, pb)
+            ring = jnp.concatenate([rings[spec.name][:, spec.new_rows :, :], new], axis=1)
+            # 2./3. window-edge patches, recomputed outright per emission.
+            top = bot = None
+            if spec.top:
+                block, pt, pb = _slice_rows(parts, geom, -pad, (spec.top - 1) * s - pad + k - 1)
+                top = self._rows(layer, views, p, block, pt, pb)
+            if spec.bottom:
+                jb = spec.height - spec.bottom
+                block, pt, pb = _slice_rows(
+                    parts, geom, jb * s - pad, (spec.height - 1) * s - pad + k - 1
+                )
+                bot = self._rows(layer, views, p, block, pt, pb)
+            new_rings[spec.name] = ring
+            parts = (top, ring, bot)
+            geom = (spec.top, spec.rows, spec.bottom)
+        # assemble the final backbone map and run the head full-window
+        pieces = [x for x in parts if x is not None and x.shape[1]]
+        x = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=1)
+        if not self._backbone:
+            for v in self._pre_views:
+                x = self._apply(v, {}, x)
+        for layer, views, _in_sh, _out_sh in self._head:
+            name = layer.name or layer.kind
+            x = self._apply(layer, params.get(name, {}), x)
+            for v in views:
+                x = self._apply(v, {}, x)
+        return new_rings, x
+
+    # -- state / step / run -------------------------------------------------
+    def _init_state(self, params):
+        """Zero-history state: full-window pass over an all-zero window."""
+        x = jnp.zeros(self.splan.in_shape, self.dtype)
+        frames = x
+        for v in self._pre_views:
+            x = self._apply(v, {}, x)
+        rings = {}
+        for spec, (layer, views, _in_sh, _out_sh) in self._backbone:
+            x = self._apply(layer, params.get(spec.name, {}), x)
+            for v in views:
+                x = self._apply(v, {}, x)
+            rings[spec.name] = x[:, spec.top : spec.top + spec.rows, :]
+        for layer, views, _in_sh, _out_sh in self._head:
+            name = layer.name or layer.kind
+            x = self._apply(layer, params.get(name, {}), x)
+            for v in views:
+                x = self._apply(v, {}, x)
+        return {
+            "frames": frames,
+            "rings": rings,
+            "phase": jnp.zeros((), jnp.int32),
+            "out": x,
+        }
+
+    def _step_impl(self, params, state, frame):
+        frames = jnp.concatenate(
+            [state["frames"][:, 1:, :], frame.astype(self.dtype)[:, None, :]], axis=1
+        )
+        if self._E == 1:
+            rings, out = self._emit(params, frames, state["rings"])
+            phase = state["phase"]
+            emitted = jnp.ones((), bool)
+        else:
+            phase = jnp.mod(state["phase"] + 1, self._E)
+            emitted = phase == 0
+
+            def do(ops):
+                p, fr, rg, _o = ops
+                return self._emit(p, fr, rg)
+
+            def skip(ops):
+                return ops[2], ops[3]
+
+            rings, out = jax.lax.cond(
+                emitted, do, skip, (params, frames, state["rings"], state["out"])
+            )
+        new_state = {"frames": frames, "rings": rings, "phase": phase, "out": out}
+        return new_state, out, emitted
+
+    def _run_impl(self, params, state, frames_seq):
+        def body(st, fr):
+            st, out, emitted = self._step_impl(params, st, fr)
+            return st, (out, emitted)
+
+        state, (outs, emitted) = jax.lax.scan(body, state, frames_seq)
+        return state, outs, emitted
+
+    def run(self, params, state, frames_seq):
+        """Scan the step over ``frames_seq`` of shape (T, C, W).
+
+        Returns ``(state, outs, emitted)`` — ``outs[t]`` is the held output
+        after frame t (the last emission's result on non-emitting frames),
+        ``emitted[t]`` whether frame t triggered an emission.
+        """
+        return self._run(params, state, frames_seq)
+
+    def aot_step(self, params):
+        """AOT-compile the per-frame step (the serving prewarm)."""
+        p_spec = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)), params
+        )
+        state_spec = jax.eval_shape(self._init_state, p_spec)
+        c, _, w = self.splan.in_shape
+        frame_spec = jax.ShapeDtypeStruct((c, w), self.dtype)
+        return self.step.lower(p_spec, state_spec, frame_spec).compile()
+
+
+def make_streaming_executor(
+    graph,
+    splan: Optional[StreamPlan] = None,
+    *,
+    apply_layer_fn: Callable = nn.apply_layer,
+    dtype=jnp.float32,
+    io_dtype_bytes: Optional[int] = None,
+) -> StreamingExecutor:
+    """Build the streaming executor for a chain graph.
+
+    ``splan`` defaults to :func:`plan_streaming` with byte accounting
+    matching ``dtype`` (``io_dtype_bytes`` overrides).  The float entry
+    point; int8 goes through ``repro.quant.exec.make_int8_streaming_executor``
+    which supplies the int8 row step and params.
+    """
+    if splan is None:
+        if io_dtype_bytes is None:
+            io_dtype_bytes = jnp.dtype(dtype).itemsize
+        splan = plan_streaming(graph, io_dtype_bytes=io_dtype_bytes)
+    return StreamingExecutor(
+        graph, splan, apply_layer_fn=apply_layer_fn, dtype=dtype
+    )
+
+
+def sliding_window_reference(
+    graph,
+    params,
+    frames: np.ndarray,  # (T, C, W)
+    *,
+    forward_fn: Callable = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """The sliding full-window oracle the streaming executor is tested on.
+
+    For each frame t (0-based), the window is the last H rows of
+    ``zeros ++ frames[: t + 1]`` (zero prehistory — exactly the
+    :meth:`StreamingExecutor.init_state` semantics) and an output is
+    emitted when ``(t + 1) % E == 0``.  Returns ``(outs, emitted)`` shaped
+    like :meth:`StreamingExecutor.run`'s, with non-emitting entries holding
+    the previous emission (the zero-window output before the first).
+    ``forward_fn(params, window)`` defaults to ``nn.forward`` on the chain;
+    pass ``lambda _, w: quantize.simulate_int8_dag_forward(qm, w)`` for the
+    int8 oracle.
+    """
+    seq = as_sequential(graph, caller="sliding_window_reference")
+    if forward_fn is None:
+        forward_fn = lambda p, w: nn.forward(seq, p, w)  # noqa: E731
+    c, h, w = tuple(seq.layers[0].shape)
+    splan_e = plan_streaming(graph).emit_stride
+    frames = np.asarray(frames)
+    history = np.zeros((c, h, w), frames.dtype)
+    held = np.asarray(forward_fn(params, jnp.asarray(history)))
+    outs, emitted = [], []
+    for t in range(frames.shape[0]):
+        history = np.concatenate([history[:, 1:, :], frames[t][:, None, :]], axis=1)
+        if (t + 1) % splan_e == 0:
+            held = np.asarray(forward_fn(params, jnp.asarray(history)))
+            emitted.append(True)
+        else:
+            emitted.append(False)
+        outs.append(held)
+    return np.stack(outs), np.asarray(emitted)

@@ -179,6 +179,80 @@ def segment_report(graph, plan, *, batch_branches: bool = True) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Streaming cost model (per-frame MACs of the ring-buffer executor)
+# ---------------------------------------------------------------------------
+
+
+def streaming_report(graph, splan=None) -> dict:
+    """Static per-frame cost model for the streaming executor (DESIGN.md §13).
+
+    Per emission, backbone layer ℓ computes ``new_rows + top + bottom``
+    output rows (the ring advance plus both window-edge patches); MACs per
+    row come from the same layer spec cost model as :func:`segment_report`
+    (``layer.macs`` is proportional to output rows, so the division is
+    exact).  Head layers recompute full-window.  Emissions happen every
+    ``emit_stride`` frames, so the steady-state **per-frame** cost is the
+    per-emission cost divided by the stride — for ``ds_cnn()``:
+    775,360 MACs per emission, 387,680 per frame = 15.3% of the 2,539,840
+    full-window MACs (the ≤ 25% CI gate).
+    """
+    from repro.core import streaming as streaming_mod
+    from repro.core.graph import as_sequential
+    from repro.core.planner import materialized_steps
+
+    if splan is None:
+        splan = streaming_mod.plan_streaming(graph)
+    seq = as_sequential(graph, caller="streaming_report")
+    _, steps = materialized_steps(seq)
+    db = splan.plan.io_dtype_bytes
+
+    rows: List[dict] = []
+    per_emission = 0
+    for spec, (layer, _views, in_sh, _out_sh) in zip(splan.rings, steps):
+        macs_per_row = layer.macs(in_sh) // spec.height
+        n_rows = spec.new_rows + spec.top + spec.bottom
+        macs = macs_per_row * n_rows
+        per_emission += macs
+        rows.append({
+            "step": spec.name,
+            "layer": spec.kind,
+            "ring_rows": spec.rows,
+            "new_rows": spec.new_rows,
+            "edge_rows": spec.top + spec.bottom,
+            "ring_bytes": spec.ring_elems * db,
+            "macs_per_row": int(macs_per_row),
+            "macs_per_emission": int(macs),
+        })
+    head_rows: List[dict] = []
+    for layer, _views, in_sh, out_sh in steps[len(splan.rings):]:
+        macs = layer.macs(in_sh)
+        per_emission += macs
+        head_rows.append({
+            "step": layer.name or layer.kind,
+            "layer": layer.kind,
+            "out_shape": list(out_sh),
+            "macs_per_emission": int(macs),
+        })
+
+    full = sum(layer.macs(in_sh) for layer, _v, in_sh, _o in steps)
+    e = splan.emit_stride
+    per_frame = per_emission / e
+    return {
+        "strategy": splan.plan.strategy,
+        "io_dtype_bytes": db,
+        "emit_stride": e,
+        "full_window_macs": int(full),
+        "per_emission_macs": int(per_emission),
+        "per_frame_macs": int(per_frame),
+        "per_frame_frac": round(per_frame / full, 4) if full else 0.0,
+        "ring_arena_bytes": int(splan.plan.arena_bytes),
+        "ring_state_bytes": int(splan.ring_elems * db),
+        "rings": rows,
+        "head": head_rows,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Arena memory timeline
 # ---------------------------------------------------------------------------
 

@@ -183,6 +183,32 @@ def make_int8_executor(
     return fn, int8_params(qm)
 
 
+def make_int8_streaming_executor(
+    qm: QuantizedModel,
+    splan=None,
+) -> Tuple["object", Dict[str, jax.Array]]:
+    """``(StreamingExecutor, params)`` — the int8 per-frame streaming step.
+
+    The third execution regime (DESIGN.md §13): ``repro.core.streaming``
+    supplies the ring-buffer machinery, this wires in the §5 int8 row step
+    (:func:`apply_int8_layer`) and the int8 param pytree.  Int8 arithmetic
+    is integer-exact (int32 accumulation, elementwise requant), so the
+    streamed rows are **bit-exact** vs the sliding full-window oracle
+    ``quantize.simulate_int8_dag_forward`` — the tests gate exactly that,
+    warm-up transient included.  ``splan`` defaults to
+    ``streaming.plan_streaming(qm.graph, io_dtype_bytes=1)`` (byte-accurate
+    int8 ring-arena accounting).
+    """
+    from repro.core import streaming
+
+    if splan is None:
+        splan = streaming.plan_streaming(qm.graph, io_dtype_bytes=1)
+    ex = streaming.StreamingExecutor(
+        qm.graph, splan, apply_layer_fn=apply_int8_layer, dtype=jnp.int8
+    )
+    return ex, int8_params(qm)
+
+
 def run_int8_with_arena(
     qm: QuantizedModel,
     plan: MemoryPlan,

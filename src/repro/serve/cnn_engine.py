@@ -235,7 +235,14 @@ class CNNEngine:
         tracer: Optional[Tracer] = None,
         metrics: Optional[MetricsRegistry] = None,
         data_parallel=None,
+        persistent_cache_dir: Optional[str] = None,
     ):
+        # Enable the disk compilation cache *before* the ladder lowers, so
+        # a fresh replica's prewarm deserializes instead of recompiling.
+        if persistent_cache_dir is not None:
+            from repro.serve.step import enable_persistent_cache
+
+            enable_persistent_cache(persistent_cache_dir)
         self.in_shape = tuple(int(d) for d in in_shape)
         self.dtype = jnp.dtype(dtype)
         self.policy = policy or CoalescePolicy()
@@ -309,7 +316,9 @@ class CNNEngine:
         segment-compiled DAG executor, sequential graphs through the
         stacked-weight scan executor.  ``mesh`` (a 1-D ``('data',)`` device
         mesh, e.g. ``launch.mesh.make_data_mesh()``) shards every bucket
-        batch over the mesh."""
+        batch over the mesh.  ``persistent_cache_dir=`` points JAX's disk
+        compilation cache at a directory so a fresh replica's ladder
+        prewarm hits the cache instead of re-lowering."""
         dp = cls._dp_policy(mesh)
         if isinstance(graph, DAGGraph):
             fn = pingpong.make_dag_executor(graph, plan, data_parallel=dp)
@@ -322,7 +331,8 @@ class CNNEngine:
     def from_quantized(cls, qm, plan, *, mesh=None, **kw) -> "CNNEngine":
         """Int8 engine for a quantized model: a genuine int8 request path
         (int8 wire format, int8 arena banks) at 1/4 the float bytes.
-        ``mesh`` shards bucket batches as in :meth:`from_graph`."""
+        ``mesh`` shards bucket batches and ``persistent_cache_dir`` enables
+        the disk compilation cache, as in :meth:`from_graph`."""
         from repro.quant.exec import make_int8_executor
 
         dp = cls._dp_policy(mesh)
@@ -510,3 +520,119 @@ class CNNEngine:
             for r in batch:
                 self.metrics.observe("engine.latency_s", r.latency_s)
             self._inflight.task_done()
+
+
+# ---------------------------------------------------------------------------
+# Streaming session mode (per-frame KWS serving)
+# ---------------------------------------------------------------------------
+
+
+class StreamServer:
+    """Session-mode serving for the streaming executor (DESIGN.md §13).
+
+    A KWS deployment holds one open audio stream per client and consumes
+    one MFCC frame at a time; the unit of serving state is therefore a
+    *session*, not a request.  This server keeps one ring-state pytree per
+    stream id — all streams share the single AOT-prewarmed per-frame step
+    (``StreamingExecutor.aot_step``), compiled once at construction, so
+    opening a stream costs one ``init_state`` call and pushing a frame one
+    pre-compiled dispatch.  ``push`` returns the new classification on
+    emitting frames (every ``emit_stride``-th — 2 for ``ds_cnn()``) and
+    ``None`` in between; ``peek`` reads the stream's held output.
+
+    Numerics follow the wrapped executor: :meth:`from_quantized` serves the
+    int8 step (int8 frames on the wire, quantize with
+    ``quantize.quantize_input``), :meth:`from_graph` the float step.
+    ``persistent_cache_dir=`` enables the disk compilation cache exactly as
+    on :class:`CNNEngine`.
+    """
+
+    def __init__(
+        self,
+        executor,
+        params,
+        *,
+        prewarm: bool = True,
+        metrics: Optional[MetricsRegistry] = None,
+        persistent_cache_dir: Optional[str] = None,
+    ):
+        if persistent_cache_dir is not None:
+            from repro.serve.step import enable_persistent_cache
+
+            enable_persistent_cache(persistent_cache_dir)
+        self.executor = executor
+        self.params = params
+        self.metrics = metrics or MetricsRegistry("stream_server")
+        t0 = time.perf_counter()
+        self._step = executor.aot_step(params) if prewarm else executor.step
+        self.prewarm_s = time.perf_counter() - t0 if prewarm else 0.0
+        self.metrics.set_gauge("stream.prewarm_s", self.prewarm_s)
+        self._states: Dict[str, dict] = {}
+        self._lock = threading.Lock()
+
+    # -- constructors ----------------------------------------------------------
+
+    @classmethod
+    def from_graph(cls, graph, params, *, splan=None, **kw) -> "StreamServer":
+        """Float streaming server for a chain graph (plans the ring arena
+        via ``streaming.plan_streaming`` unless ``splan`` is given)."""
+        from repro.core import streaming
+
+        ex = streaming.make_streaming_executor(graph, splan)
+        return cls(ex, params, **kw)
+
+    @classmethod
+    def from_quantized(cls, qm, *, splan=None, **kw) -> "StreamServer":
+        """Int8 streaming server: int8 frames in, int8 logits out,
+        bit-exact vs the sliding full-window oracle."""
+        from repro.quant.exec import make_int8_streaming_executor
+
+        ex, params = make_int8_streaming_executor(qm, splan)
+        return cls(ex, params, **kw)
+
+    # -- session API -----------------------------------------------------------
+
+    @property
+    def streams(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(self._states)
+
+    def open(self, stream_id: str) -> None:
+        """Open a stream with zero-history warm-start state."""
+        with self._lock:
+            if stream_id in self._states:
+                raise ValueError(f"stream {stream_id!r} already open")
+            self._states[stream_id] = self.executor.init_state(self.params)
+        self.metrics.inc("stream.opened")
+
+    def push(self, stream_id: str, frame: np.ndarray) -> Optional[np.ndarray]:
+        """Feed one (C, W) frame; returns the new output on emitting frames,
+        ``None`` otherwise.  Unknown stream ids are opened implicitly."""
+        with self._lock:
+            state = self._states.get(stream_id)
+        if state is None:
+            self.open(stream_id)
+            with self._lock:
+                state = self._states[stream_id]
+        frame = jnp.asarray(np.asarray(frame, self.executor.dtype))
+        state, out, emitted = self._step(self.params, state, frame)
+        with self._lock:
+            self._states[stream_id] = state
+        self.metrics.inc("stream.frames")
+        if bool(emitted):
+            self.metrics.inc("stream.emissions")
+            return np.asarray(out)
+        return None
+
+    def peek(self, stream_id: str) -> np.ndarray:
+        """The stream's held output (last emission; zero-window head output
+        before the first)."""
+        with self._lock:
+            return np.asarray(self._states[stream_id]["out"])
+
+    def close(self, stream_id: str) -> np.ndarray:
+        """Close a stream, returning its final held output."""
+        with self._lock:
+            state = self._states.pop(stream_id)
+        self.metrics.inc("stream.closed")
+        return np.asarray(state["out"])

@@ -21,6 +21,11 @@ ISSUE 5 adds `DepthwiseConv2d` branches with per-channel int8 requant):
 
 Quantization: int8 roundtrip error bounded by scale/2 per tensor.
 Streaming CE: chunked forms equal the naive logsumexp for any shape/chunk.
+
+Streaming executor (ISSUE 9): on random streamable conv/pool chains and
+random frame sequences, the per-frame ring-buffer step equals the sliding
+full-window oracle at every frame — f32 to fp tolerance, int8 bit-exact
+against `simulate_int8_dag_forward`, warm-up transient included.
 """
 import pytest
 
@@ -355,6 +360,95 @@ def test_quantize_roundtrip_bound(seed):
         w = np.asarray(fp[name]["w"], np.float32)
         deq = q.w_q.astype(np.float32) * q.w_scale
         assert np.max(np.abs(deq - w)) <= q.w_scale / 2 + 1e-7, name
+
+
+@st.composite
+def random_streaming_chain(draw):
+    """Random streamable chains + frame sequences for the ring executor.
+
+    Conv/depthwise/pool prefixes (any kernel/stride/padding the planner
+    accepts, padding < kernel), optional ReLU views, Flatten + Linear head —
+    the family `streaming.plan_streaming` carves into ring backbone + head.
+    Chains where no layer is ring-eligible are kept: the executor must then
+    degrade to full-window recompute and still match the oracle.
+    """
+    c = draw(st.integers(1, 3))
+    h = draw(st.integers(10, 18))
+    w = draw(st.sampled_from([4, 6, 8]))
+    layers = [Input(shape=(c, h, w), name="input")]
+    cur = (c, h, w)
+    for i in range(draw(st.integers(1, 3))):
+        kind = draw(st.sampled_from(["conv", "dw", "pool"]))
+        if kind == "conv":
+            k = draw(st.sampled_from([1, 3]))
+            layer = Conv2d(cur[0], draw(st.sampled_from([2, 4])),
+                           kernel_size=k, stride=draw(st.sampled_from([1, 2])),
+                           padding=draw(st.integers(0, k - 1)), name=f"conv{i}")
+        elif kind == "dw":
+            layer = DepthwiseConv2d(cur[0], kernel_size=3, stride=1,
+                                    padding=draw(st.integers(0, 1)),
+                                    name=f"dw{i}")
+        else:
+            k = draw(st.sampled_from([2, 3]))
+            layer = MaxPool2d(kernel_size=k, stride=draw(st.sampled_from([1, 2])),
+                              name=f"pool{i}")
+        nxt = layer.out_shape(cur)
+        if nxt[1] < 2 or nxt[2] < 1:
+            break
+        layers.append(layer)
+        cur = nxt
+        if kind != "pool" and draw(st.booleans()):
+            layers.append(ReLU(name=f"relu{i}"))
+    layers.append(Flatten(name="flatten"))
+    layers.append(Linear(int(np.prod(cur)), 4, name="fc"))
+    g = SequentialGraph(layers)
+    g.validate()
+    n = draw(st.integers(3, 9))
+    seed = draw(st.integers(0, 2**31 - 1))
+    frames = np.asarray(
+        np.random.default_rng(seed).standard_normal((n, c, w)), np.float32)
+    return g, frames
+
+
+@hp.given(random_streaming_chain(), st.integers(0, 2**31 - 1))
+@hp.settings(max_examples=8, deadline=None)
+def test_streaming_step_matches_sliding_oracle_f32(gf, seed):
+    from repro.core import streaming
+
+    g, frames = gf
+    params = nn.init_params(g, jax.random.PRNGKey(seed % 2**31))
+    ex = streaming.make_streaming_executor(g)
+    state = ex.init_state(params)
+    ref_outs, ref_em = streaming.sliding_window_reference(g, params, frames)
+    for t in range(frames.shape[0]):
+        state, out, em = ex.step(params, state, jnp.asarray(frames[t]))
+        assert bool(em) == bool(ref_em[t])
+        np.testing.assert_allclose(np.asarray(out), ref_outs[t],
+                                   rtol=1e-4, atol=1e-4)
+
+
+@hp.given(random_streaming_chain(), st.integers(0, 2**31 - 1))
+@hp.settings(max_examples=5, deadline=None)
+def test_streaming_step_bit_exact_int8(gf, seed):
+    from repro.core import quantize, streaming
+    from repro.quant import exec as qexec
+
+    g, frames = gf
+    dag = DAGGraph.from_sequential(g)
+    params = nn.init_params(g, jax.random.PRNGKey(seed % 2**31))
+    calib = jax.random.normal(jax.random.PRNGKey((seed + 1) % 2**31),
+                              tuple(g.layers[0].shape))
+    qm = quantize.quantize_dag(dag, params, calib)
+    ex, qp = qexec.make_int8_streaming_executor(qm)
+    frames_q = np.asarray(quantize.quantize_input(qm, jnp.asarray(frames)))
+    ref_outs, ref_em = streaming.sliding_window_reference(
+        dag, qp, frames_q,
+        forward_fn=lambda _, win: quantize.simulate_int8_dag_forward(qm, win))
+    state = ex.init_state(qp)
+    for t in range(frames_q.shape[0]):
+        state, out, em = ex.step(qp, state, jnp.asarray(frames_q[t]))
+        assert bool(em) == bool(ref_em[t])
+        np.testing.assert_array_equal(np.asarray(out), ref_outs[t])
 
 
 @hp.given(
