@@ -431,7 +431,14 @@ def plan_table() -> dict:
     when every executor still runs.
     """
     from repro.core import fusion, planner, schedule, streaming
-    from repro.core.graph import cifar_testnet, ds_cnn, residual_cifar
+    from repro.core.graph import (
+        cifar_testnet,
+        ds_cnn,
+        ds_cnn_kws,
+        lenet5,
+        mobilenet_v1,
+        residual_cifar,
+    )
 
     g = cifar_testnet()
     res = residual_cifar()
@@ -440,7 +447,12 @@ def plan_table() -> dict:
                               io_dtype_bytes=1)
     reordered = schedule.plan_dag(res, io_dtype_bytes=1)
     ds = ds_cnn()
+    kws = ds_cnn_kws()
+    mbn = mobilenet_v1(width=0.25)
     return {
+        # the paper's headline number: LeNet-5 float ping-pong arena
+        "lenet_pingpong_f32_bytes": planner.plan_pingpong(
+            lenet5()).activation_bytes(),
         "pingpong_cifar_int8_bytes": planner.plan_pingpong(
             g, io_dtype_bytes=1).activation_bytes(),
         "cmsis_cifar_int8_bytes": planner.plan_cmsis_baseline(
@@ -462,6 +474,24 @@ def plan_table() -> dict:
         # (bench_streaming.py measures the latency side).
         "ds_cnn_streaming_ring_int8_bytes": streaming.plan_streaming(
             ds, io_dtype_bytes=1).plan.activation_bytes(),
+        # ISSUE 10: the true Zhang-et-al DS-CNN — rectangular (10,4) stem,
+        # AvgPool head — and MobileNet-V1 0.25x (stride-2 depthwise ladder).
+        "ds_cnn_kws_naive_int8_bytes": planner.plan_naive(
+            kws.to_sequential(), io_dtype_bytes=1).activation_bytes(),
+        "ds_cnn_kws_pingpong_int8_bytes": planner.plan_pingpong(
+            kws, io_dtype_bytes=1).activation_bytes(),
+        "ds_cnn_kws_reordered_int8_bytes": schedule.plan_dag(
+            kws, io_dtype_bytes=1).activation_bytes(),
+        "ds_cnn_kws_cmsis_int8_bytes": planner.plan_cmsis_baseline(
+            kws).activation_bytes(),
+        "mobilenet_v1_025_naive_int8_bytes": planner.plan_naive(
+            mbn.to_sequential(), io_dtype_bytes=1).activation_bytes(),
+        "mobilenet_v1_025_pingpong_int8_bytes": planner.plan_pingpong(
+            mbn, io_dtype_bytes=1).activation_bytes(),
+        "mobilenet_v1_025_reordered_int8_bytes": schedule.plan_dag(
+            mbn, io_dtype_bytes=1).activation_bytes(),
+        "mobilenet_v1_025_cmsis_int8_bytes": planner.plan_cmsis_baseline(
+            mbn).activation_bytes(),
     }
 
 

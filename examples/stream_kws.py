@@ -9,7 +9,9 @@ deployment from DESIGN.md §13:
 * stands up a :class:`repro.serve.cnn_engine.StreamServer` over the
   AOT-compiled int8 per-frame step,
 * pushes a synthetic utterance frame by frame through two concurrent
-  streams and prints the emitted posteriors,
+  streams, smoothing each stream's decision with a
+  :class:`repro.core.streaming.PosteriorSmoother` (Zhang et al.'s
+  posterior smoothing: a single noisy emission cannot flip the label),
 * verifies the final emission bit-for-bit against the full-window int8
   simulator on the same sliding window,
 * ends with the static cost model: per-frame MACs vs full recompute.
@@ -63,17 +65,22 @@ def main():
                 for sid, u in utts.items()}
     last = {}
     emissions = {sid: 0 for sid in utts}
+    smoothers = {sid: streaming.PosteriorSmoother(window=3, mode="mean")
+                 for sid in utts}
+    label = {}
     for t in range(n_frames):
         for sid in utts:  # interleaved: one frame per stream per tick
             out = srv.push(sid, frames_q[sid][t])
             if out is not None:
                 emissions[sid] += 1
                 last[sid] = out
+                label[sid] = smoothers[sid].update(out)
     for sid in utts:
         final = srv.close(sid)
         print(f"  {sid}: {n_frames} frames -> {emissions[sid]} emissions, "
-              f"final argmax {int(np.argmax(final))} "
-              f"(q8 logits {final.min()}..{final.max()})")
+              f"smoothed label {label[sid]} "
+              f"(raw final argmax {int(np.argmax(final))}, "
+              f"q8 logits {final.min()}..{final.max()})")
 
     # bit-exactness: final emission == full-window simulator on the same
     # sliding window (zeros prehistory ++ frames, last 49 rows)

@@ -13,6 +13,11 @@ Engines:
   * residual_q8.c         — ISSUE 3 int8 DAG path, reordered arena plan
   * ds_cnn_f32.c          — ISSUE 5 DS-CNN (depthwise separable KWS net)
   * ds_cnn_q8.c           — ISSUE 5 int8 DS-CNN, per-channel dw requant
+  * ds_cnn_kws_f32.c      — ISSUE 10 true Zhang-et-al DS-CNN: rectangular
+                            (10,4) stem, fused AvgPool head
+  * ds_cnn_kws_q8.c       — ISSUE 10 int8, fused-avg single requantize
+  * mobilenet_v1_025_f32.c — ISSUE 10 MobileNet-V1 0.25x (stride-2 dw ladder)
+  * mobilenet_v1_025_q8.c  — ISSUE 10 int8 MobileNet-V1 0.25x
 """
 from __future__ import annotations
 
@@ -46,7 +51,14 @@ def main(argv=None) -> None:
     out.mkdir(parents=True, exist_ok=True)
 
     from repro.core import export_c, fusion, nn, planner, quantize, schedule
-    from repro.core.graph import cifar_testnet, ds_cnn, lenet5, residual_cifar
+    from repro.core.graph import (
+        cifar_testnet,
+        ds_cnn,
+        ds_cnn_kws,
+        lenet5,
+        mobilenet_v1,
+        residual_cifar,
+    )
 
     # paper §3/§4: LeNet-5 float, fused + ping-pong plan
     g = lenet5()
@@ -92,6 +104,26 @@ def main(argv=None) -> None:
     plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
     src = export_c.generate_c_int8_dag(qm, plan_q, with_main=True)
     (out / "ds_cnn_q8.c").write_text(src)
+
+    # ISSUE 10: rectangular kernels + AvgPool2d — the true Zhang-et-al
+    # DS-CNN and MobileNet-V1 0.25x, float + int8 each.
+    for stem, build, in_shape, key in (
+        ("ds_cnn_kws", ds_cnn_kws, (1, 49, 10), 7),
+        ("mobilenet_v1_025", lambda: mobilenet_v1(width=0.25), (3, 64, 64), 9),
+    ):
+        g = build()
+        fused = fusion.fuse_dag(g)
+        params = fusion.rename_params(
+            fused, nn.init_params(g, jax.random.PRNGKey(key)))
+        src = export_c.generate_c_dag(fused, schedule.plan_dag(g), params,
+                                      with_main=True)
+        (out / f"{stem}_f32.c").write_text(src)
+
+        calib = jax.random.normal(jax.random.PRNGKey(key + 1), (8,) + in_shape)
+        qm = quantize.quantize_dag(fused, params, calib)
+        plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+        src = export_c.generate_c_int8_dag(qm, plan_q, with_main=True)
+        (out / f"{stem}_q8.c").write_text(src)
 
     for c in sorted(out.glob("*.c")):
         _compile(c)

@@ -29,6 +29,7 @@ import numpy as np
 from repro.core import schedule as schedule_mod
 from repro.core.graph import (
     Add,
+    AvgPool2d,
     Concat,
     Conv2d,
     DAGGraph,
@@ -80,17 +81,25 @@ class _Emitter:
         self.body.append(s)
 
 
-def _decl_requant(e: _Emitter, tag: str, q) -> str:
+def _decl_requant(e: _Emitter, tag: str, q, div: int = 1) -> str:
     """Declare a layer's requant multiplier(s); return the requant template.
 
     Per-tensor layers get one scalar ``M_tag``; per-channel (depthwise)
     layers get a ``float M_tag[C]`` table indexed by the conv loops'
     output-channel variable ``c``.
+
+    ``div`` > 1 (fused average pooling) pre-divides the constant by the
+    pool-window size in f32 — the int32 window *sum* then takes one
+    ``rq(sum, m/div)``, applying conv rescale and the pool divisor in a
+    single rounding, bit-identical to ``quantize._simulate_int8_node`` and
+    ``quant.exec`` (f32/f32 division is correctly rounded everywhere).
     """
-    m = q.multiplier
-    if np.ndim(m):
-        vals = ",".join(_fmt_float(v) for v in np.asarray(m, np.float32).reshape(-1))
-        e.decl(f"static const float M_{tag}[{np.size(m)}] = {{{vals}}};")
+    m = np.asarray(q.multiplier, np.float32)
+    if div != 1:
+        m = m / np.float32(div)
+    if m.ndim:
+        vals = ",".join(_fmt_float(v) for v in m.reshape(-1))
+        e.decl(f"static const float M_{tag}[{m.size}] = {{{vals}}};")
         return "rq({acc}, M_{tag}[c])"
     e.decl(f"static const float M_{tag} = {_fmt_float(m)};")
     return "rq({acc}, M_{tag})"
@@ -106,80 +115,104 @@ def _conv_pool_loops(
     ih: int,
     iw: int,
     oc: int,
-    k: int,
-    cs: int,
-    pad: int,
+    k,
+    cs,
+    pad,
     ph: int,
     pw: int,
-    pk: int,
-    ps: int,
+    pk,
+    ps,
     in_off: int,
     out_off: int,
     has_bias: bool,
     activation: str,
     requant: Optional[str],
+    pool: str = "max",
     depthwise: bool = False,
 ) -> None:
-    """Emit the paper's Algorithm 1: fused conv + activation + max-pool.
+    """Emit the paper's Algorithm 1: fused conv + activation + pool.
+
+    Geometry arguments ``k``/``cs``/``pad``/``pk``/``ps`` are per-axis
+    ``(h, w)`` pairs.  ``pool="max"`` keeps the paper's running max;
+    ``pool="avg"`` accumulates the window *sum* in the accumulator domain
+    and applies the divisor once at writeback — float divides by the window
+    size, int8 folds it into the (pre-divided) requant multiplier, matching
+    the simulator's canonical fused-avg order.
 
     ``depthwise=True`` drops the input-channel contraction: output channel
-    ``c`` reads only input channel ``c`` with its own k×k filter (weights
-    flat ``(C, k, k)`` — the grouped OIHW layout with the singleton squeezed
-    by flattening).
+    ``c`` reads only input channel ``c`` with its own kh×kw filter (weights
+    flat ``(C, kh, kw)`` — the grouped OIHW layout with the singleton
+    squeezed by flattening).
     """
+    (kh, kw), (csh, csw), (padh, padw) = k, cs, pad
+    (pkh, pkw), (psh, psw) = pk, ps
     zero = "0" if acc_type.startswith("int") else "0.0f"
     neg_inf = "-3.4e38f" if ctype == "float" else "-128"
-    init = zero if activation == "relu" else neg_inf  # Alg.1 inits max to 0 (ReLU)
+    if pool == "avg":
+        init = zero  # window sum accumulator
+    else:
+        init = zero if activation == "relu" else neg_inf  # Alg.1 inits max to 0 (ReLU)
     kind = "dwconv" if depthwise else "conv"
-    e.emit(f"  /* {tag}: fused {kind}{k}x{k}/s{cs}/p{pad} + {activation} + maxpool{pk}/s{ps} (Alg. 1) */")
+    e.emit(
+        f"  /* {tag}: fused {kind}{kh}x{kw}/s{csh}x{csw}/p{padh}x{padw}"
+        f" + {activation} + {pool}pool{pkh}x{pkw}/s{psh}x{psw} (Alg. 1) */"
+    )
     e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
     e.emit(f"    for (int c = 0; c < {oc}; ++c)")
     e.emit(f"      for (int y = 0; y < {ph}; ++y)")
     e.emit(f"        for (int x = 0; x < {pw}; ++x) {{")
     e.emit(f"          {acc_type} mx = {init};")
-    e.emit(f"          for (int i = 0; i < {pk}; ++i)")
-    e.emit(f"            for (int j = 0; j < {pk}; ++j) {{")
-    e.emit(f"              const int oy = y*{ps} + i, ox = x*{ps} + j;")
+    e.emit(f"          for (int i = 0; i < {pkh}; ++i)")
+    e.emit(f"            for (int j = 0; j < {pkw}; ++j) {{")
+    e.emit(f"              const int oy = y*{psh} + i, ox = x*{psw} + j;")
     bias = f"B_{tag}[c]" if has_bias else zero
     e.emit(f"              {acc_type} sum = {bias};")
     if depthwise:
-        e.emit(f"              for (int t = 0; t < {k}; ++t)")
-        e.emit(f"                for (int u = 0; u < {k}; ++u) {{")
-        e.emit(f"                  const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
+        e.emit(f"              for (int t = 0; t < {kh}; ++t)")
+        e.emit(f"                for (int u = 0; u < {kw}; ++u) {{")
+        e.emit(f"                  const int iy = oy*{csh} - {padh} + t, ix = ox*{csw} - {padw} + u;")
         e.emit(f"                  if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
         e.emit(
             f"                    sum += ({acc_type})in[(c*{ih} + iy)*{iw} + ix] * "
-            f"({acc_type})W_{tag}[(c*{k} + t)*{k} + u];"
+            f"({acc_type})W_{tag}[(c*{kh} + t)*{kw} + u];"
         )
         e.emit(f"                }}")
     else:
         e.emit(f"              for (int z = 0; z < {ic}; ++z)")
-        e.emit(f"                for (int t = 0; t < {k}; ++t)")
-        e.emit(f"                  for (int u = 0; u < {k}; ++u) {{")
-        e.emit(f"                    const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
+        e.emit(f"                for (int t = 0; t < {kh}; ++t)")
+        e.emit(f"                  for (int u = 0; u < {kw}; ++u) {{")
+        e.emit(f"                    const int iy = oy*{csh} - {padh} + t, ix = ox*{csw} - {padw} + u;")
         e.emit(f"                    if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
         e.emit(
             f"                      sum += ({acc_type})in[(z*{ih} + iy)*{iw} + ix] * "
-            f"({acc_type})W_{tag}[((c*{ic} + z)*{k} + t)*{k} + u];"
+            f"({acc_type})W_{tag}[((c*{ic} + z)*{kh} + t)*{kw} + u];"
         )
         e.emit(f"                  }}")
     if activation == "relu":
         e.emit(f"              if (sum < {zero}) sum = {zero};")
-    e.emit(f"              if (sum > mx) mx = sum;")
-    e.emit(f"            }}")
-    if requant is None:
-        e.emit(f"          out[(c*{ph} + y)*{pw} + x] = mx;")
+    if pool == "avg":
+        e.emit(f"              mx += sum;")
     else:
-        e.emit(f"          out[(c*{ph} + y)*{pw} + x] = {requant.format(acc='mx', tag=tag)};")
+        e.emit(f"              if (sum > mx) mx = sum;")
+    e.emit(f"            }}")
+    if requant is not None:
+        # int8 avg: the requant multiplier was declared pre-divided (div=pk·pk)
+        out = requant.format(acc="mx", tag=tag)
+    elif pool == "avg":
+        out = f"mx / {_fmt_float(pkh * pkw)}"
+    else:
+        out = "mx"
+    e.emit(f"          out[(c*{ph} + y)*{pw} + x] = {out};")
     e.emit(f"        }}")
     e.emit(f"  }}")
 
 
 def _conv_loops(e, tag, *, ctype, acc_type, ic, ih, iw, oc, oh, ow, k, cs, pad,
                 in_off, out_off, has_bias, requant, depthwise=False):
+    (kh, kw), (csh, csw), (padh, padw) = k, cs, pad
     zero = "0" if acc_type.startswith("int") else "0.0f"
     kind = "dwconv" if depthwise else "conv"
-    e.emit(f"  /* {tag}: {kind}{k}x{k}/s{cs}/p{pad} */")
+    e.emit(f"  /* {tag}: {kind}{kh}x{kw}/s{csh}x{csw}/p{padh}x{padw} */")
     e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
     e.emit(f"    for (int c = 0; c < {oc}; ++c)")
     e.emit(f"      for (int oy = 0; oy < {oh}; ++oy)")
@@ -187,24 +220,24 @@ def _conv_loops(e, tag, *, ctype, acc_type, ic, ih, iw, oc, oh, ow, k, cs, pad,
     bias = f"B_{tag}[c]" if has_bias else zero
     e.emit(f"          {acc_type} sum = {bias};")
     if depthwise:
-        e.emit(f"          for (int t = 0; t < {k}; ++t)")
-        e.emit(f"            for (int u = 0; u < {k}; ++u) {{")
-        e.emit(f"              const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
+        e.emit(f"          for (int t = 0; t < {kh}; ++t)")
+        e.emit(f"            for (int u = 0; u < {kw}; ++u) {{")
+        e.emit(f"              const int iy = oy*{csh} - {padh} + t, ix = ox*{csw} - {padw} + u;")
         e.emit(f"              if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
         e.emit(
             f"                sum += ({acc_type})in[(c*{ih} + iy)*{iw} + ix] * "
-            f"({acc_type})W_{tag}[(c*{k} + t)*{k} + u];"
+            f"({acc_type})W_{tag}[(c*{kh} + t)*{kw} + u];"
         )
         e.emit(f"            }}")
     else:
         e.emit(f"          for (int z = 0; z < {ic}; ++z)")
-        e.emit(f"            for (int t = 0; t < {k}; ++t)")
-        e.emit(f"              for (int u = 0; u < {k}; ++u) {{")
-        e.emit(f"                const int iy = oy*{cs} - {pad} + t, ix = ox*{cs} - {pad} + u;")
+        e.emit(f"            for (int t = 0; t < {kh}; ++t)")
+        e.emit(f"              for (int u = 0; u < {kw}; ++u) {{")
+        e.emit(f"                const int iy = oy*{csh} - {padh} + t, ix = ox*{csw} - {padw} + u;")
         e.emit(f"                if (iy >= 0 && iy < {ih} && ix >= 0 && ix < {iw})")
         e.emit(
             f"                  sum += ({acc_type})in[(z*{ih} + iy)*{iw} + ix] * "
-            f"({acc_type})W_{tag}[((c*{ic} + z)*{k} + t)*{k} + u];"
+            f"({acc_type})W_{tag}[((c*{ic} + z)*{kh} + t)*{kw} + u];"
         )
         e.emit(f"              }}")
     out = "sum" if requant is None else requant.format(acc="sum", tag=tag)
@@ -231,29 +264,71 @@ def _linear_loops(e, tag, *, ctype, acc_type, n_in, n_out, in_off, out_off,
 
 
 def _maxpool_loops(e, tag, *, ctype, c, ih, iw, oh, ow, pk, ps, pad, in_off, out_off):
-    """Max-pool step.  ``pad`` taps outside the input are skipped against a
-    dtype-minimum running max — identical to the oracle's dtype-min padding
-    (``nn.maxpool2d``); every window intersects the input when ``pad < pk``,
-    which :meth:`MaxPool2d.out_shape` guarantees."""
+    """Max-pool step (per-axis ``pk``/``ps``/``pad`` pairs).  Padded taps
+    outside the input are skipped against a dtype-minimum running max —
+    identical to the oracle's dtype-min padding (``nn.maxpool2d``); every
+    window intersects the input when ``pad < pk``, which
+    :meth:`MaxPool2d.out_shape` guarantees."""
+    (pkh, pkw), (psh, psw), (padh, padw) = pk, ps, pad
     neg = "-3.4e38f" if ctype == "float" else "-128"
-    e.emit(f"  /* {tag}: maxpool{pk}/s{ps}/p{pad} */")
+    e.emit(f"  /* {tag}: maxpool{pkh}x{pkw}/s{psh}x{psw}/p{padh}x{padw} */")
     e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
     e.emit(f"    for (int z = 0; z < {c}; ++z)")
     e.emit(f"      for (int y = 0; y < {oh}; ++y)")
     e.emit(f"        for (int x = 0; x < {ow}; ++x) {{")
     e.emit(f"          {ctype} mx = {neg};")
-    e.emit(f"          for (int i = 0; i < {pk}; ++i)")
-    e.emit(f"            for (int j = 0; j < {pk}; ++j) {{")
-    if pad:
-        e.emit(f"              const int iy = y*{ps} - {pad} + i, ix = x*{ps} - {pad} + j;")
+    e.emit(f"          for (int i = 0; i < {pkh}; ++i)")
+    e.emit(f"            for (int j = 0; j < {pkw}; ++j) {{")
+    if padh or padw:
+        e.emit(f"              const int iy = y*{psh} - {padh} + i, ix = x*{psw} - {padw} + j;")
         e.emit(f"              if (iy < 0 || iy >= {ih} || ix < 0 || ix >= {iw}) continue;")
         e.emit(f"              const {ctype} v = in[(z*{ih} + iy)*{iw} + ix];")
     else:
         # unpadded: every tap is in bounds — keep the branch-free hot loop
-        e.emit(f"              const {ctype} v = in[(z*{ih} + y*{ps}+i)*{iw} + x*{ps}+j];")
+        e.emit(f"              const {ctype} v = in[(z*{ih} + y*{psh}+i)*{iw} + x*{psw}+j];")
     e.emit(f"              if (v > mx) mx = v;")
     e.emit(f"            }}")
     e.emit(f"          out[(z*{oh} + y)*{ow} + x] = mx;")
+    e.emit(f"        }}")
+    e.emit(f"  }}")
+
+
+def _avgpool_loops(e, tag, *, ctype, acc_type, c, ih, iw, oh, ow, pk, ps, pad,
+                   in_off, out_off):
+    """Average-pool step (per-axis pairs), count-include-pad semantics.
+
+    Zero padding means out-of-bounds taps contribute nothing to the window
+    sum while the divisor stays the *full* ``pkh·pkw`` — the PyTorch
+    ``AvgPool2d`` default the oracle (``nn.avgpool2d``) pins.  Float divides
+    the f32 sum; int8 sums in int32 and requantizes once with
+    ``M = f32(1)/f32(pkh·pkw)``, mirroring ``quantize.int8_avgpool``
+    bit-for-bit.
+    """
+    (pkh, pkw), (psh, psw), (padh, padw) = pk, ps, pad
+    div = pkh * pkw
+    int8 = ctype != "float"
+    if int8:
+        m = np.float32(1.0) / np.float32(div)
+        e.decl(f"static const float M_{tag} = {_fmt_float(m)};")
+    zero = "0" if int8 else "0.0f"
+    e.emit(f"  /* {tag}: avgpool{pkh}x{pkw}/s{psh}x{psw}/p{padh}x{padw} */")
+    e.emit(f"  {{ const {ctype}* in = arena + {in_off}; {ctype}* out = arena + {out_off};")
+    e.emit(f"    for (int z = 0; z < {c}; ++z)")
+    e.emit(f"      for (int y = 0; y < {oh}; ++y)")
+    e.emit(f"        for (int x = 0; x < {ow}; ++x) {{")
+    e.emit(f"          {acc_type} s = {zero};")
+    e.emit(f"          for (int i = 0; i < {pkh}; ++i)")
+    e.emit(f"            for (int j = 0; j < {pkw}; ++j) {{")
+    if padh or padw:
+        e.emit(f"              const int iy = y*{psh} - {padh} + i, ix = x*{psw} - {padw} + j;")
+        e.emit(f"              if (iy < 0 || iy >= {ih} || ix < 0 || ix >= {iw}) continue;")
+        e.emit(f"              s += ({acc_type})in[(z*{ih} + iy)*{iw} + ix];")
+    else:
+        # unpadded: every tap is in bounds — keep the branch-free hot loop
+        e.emit(f"              s += ({acc_type})in[(z*{ih} + y*{psh}+i)*{iw} + x*{psw}+j];")
+    e.emit(f"            }}")
+    out = f"rq(s, M_{tag})" if int8 else f"s / {_fmt_float(div)}"
+    e.emit(f"          out[(z*{oh} + y)*{ow} + x] = {out};")
     e.emit(f"        }}")
     e.emit(f"  }}")
 
@@ -358,7 +433,8 @@ def _walk_and_emit(
                 ph=ph, pw=pw, pk=layer.pool_kernel, ps=layer.pool_stride,
                 in_off=src.offset_elems, out_off=dst.offset_elems,
                 has_bias="b" in weights[name], activation=layer.activation,
-                requant=rq, depthwise=isinstance(conv, DepthwiseConv2d),
+                requant=rq, pool=layer.pool,
+                depthwise=isinstance(conv, DepthwiseConv2d),
             )
         elif isinstance(layer, (Conv2d, DepthwiseConv2d)):
             ic, ih, iw = cur_shape
@@ -377,6 +453,15 @@ def _walk_and_emit(
                 e, tag, ctype=ctype, c=c, ih=ih, iw=iw, oh=oh, ow=ow,
                 pk=layer.kernel_size, ps=layer.stride, pad=layer.padding,
                 in_off=src.offset_elems, out_off=dst.offset_elems,
+            )
+        elif isinstance(layer, AvgPool2d):
+            c, ih, iw = cur_shape
+            _, oh, ow = out_shape
+            _avgpool_loops(
+                e, tag, ctype=ctype, acc_type=acc_type, c=c, ih=ih, iw=iw,
+                oh=oh, ow=ow, pk=layer.kernel_size, ps=layer.stride,
+                pad=layer.padding, in_off=src.offset_elems,
+                out_off=dst.offset_elems,
             )
         elif isinstance(layer, (Linear, FusedLinear)):
             lin = layer.linear if isinstance(layer, FusedLinear) else layer
@@ -426,7 +511,8 @@ def _emit_step(
             pad=conv.padding, ph=ph, pw=pw, pk=layer.pool_kernel,
             ps=layer.pool_stride, in_off=in_offs[0], out_off=out_off,
             has_bias="b" in weights[name], activation=layer.activation,
-            requant=rq, depthwise=isinstance(conv, DepthwiseConv2d),
+            requant=rq, pool=layer.pool,
+            depthwise=isinstance(conv, DepthwiseConv2d),
         )
     elif isinstance(layer, (Conv2d, DepthwiseConv2d)):
         ic, ih, iw = step.in_shapes[0]
@@ -445,6 +531,14 @@ def _emit_step(
             e, tag, ctype=ctype, c=c, ih=ih, iw=iw, oh=oh, ow=ow,
             pk=layer.kernel_size, ps=layer.stride, pad=layer.padding,
             in_off=in_offs[0], out_off=out_off,
+        )
+    elif isinstance(layer, AvgPool2d):
+        c, ih, iw = step.in_shapes[0]
+        _, oh, ow = layer.out_shape(step.in_shapes[0])
+        _avgpool_loops(
+            e, tag, ctype=ctype, acc_type=acc_type, c=c, ih=ih, iw=iw,
+            oh=oh, ow=ow, pk=layer.kernel_size, ps=layer.stride,
+            pad=layer.padding, in_off=in_offs[0], out_off=out_off,
         )
     elif isinstance(layer, (Linear, FusedLinear)):
         lin = layer.linear if isinstance(layer, FusedLinear) else layer
@@ -607,7 +701,10 @@ def generate_c_int8(
             if q.b_q is not None:
                 e.decl(_fmt_array(q.b_q, "int32_t", f"B_{tag}"))
                 weights[name]["b"] = q.b_q
-            requants[name] = _decl_requant(e, tag, q)
+            div = 1
+            if isinstance(layer, FusedConvPool) and layer.pool == "avg":
+                div = layer.pool_kernel[0] * layer.pool_kernel[1]
+            requants[name] = _decl_requant(e, tag, q, div)
 
     in_elems = plan.buffers[0].size_elems
     e.decl(REQUANT_C)
@@ -702,7 +799,10 @@ def generate_c_int8_dag(
             if q.b_q is not None:
                 e.decl(_fmt_array(q.b_q, "int32_t", f"B_{tag}"))
                 weights[name]["b"] = q.b_q
-            requants[name] = _decl_requant(e, tag, q)
+            div = 1
+            if isinstance(layer, FusedConvPool) and layer.pool == "avg":
+                div = layer.pool_kernel[0] * layer.pool_kernel[1]
+            requants[name] = _decl_requant(e, tag, q, div)
         elif name in qm.joins:
             ms = qm.joins[name].multipliers
             for i, m in enumerate(ms):

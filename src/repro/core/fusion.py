@@ -1,15 +1,18 @@
 """Fusion pass: paper §3.1 (fused in-place max-pooling) + §7 extension.
 
-Detects ``Conv2d → ReLU → MaxPool2d`` windows and rewrites them into a single
-:class:`~repro.core.graph.FusedConvPool` layer.  The paper's condition for the
-zero-extra-memory fusion is ``pool.stride >= pool.kernel_size``: every pooling
-window is then mutually exclusive, so the running max can be written straight
-to the (reduced) output line buffer and the conv output is never materialized.
+Detects ``Conv2d → ReLU → {Max,Avg}Pool2d`` windows and rewrites them into a
+single :class:`~repro.core.graph.FusedConvPool` layer.  The paper's condition
+for the zero-extra-memory fusion is ``pool.stride >= pool.kernel_size`` **per
+axis**: every pooling window is then mutually exclusive, so the running
+reduction can be written straight to the (reduced) output line buffer and the
+conv output is never materialized.
 
-The paper's §7 future work — ``stride < kernel_size`` — is also implemented:
-pooling windows then overlap by ``kernel_size - stride`` rows/cols, which the
-fused loop handles by keeping a line buffer of that many *pooled* rows.  The
-planner accounts that scratch; it is strictly smaller than the conv output.
+The paper's §7 future work — H-axis ``stride < kernel_size`` — is also
+implemented for max pooling: pooling windows then overlap by ``kh - sh``
+rows, which the fused loop handles by keeping a line buffer of that many
+*pooled* rows.  The planner accounts that scratch; it is strictly smaller
+than the conv output.  See :func:`_pool_window` for the exact per-axis
+eligibility (W-only overlap and overlapping average windows are declined).
 
 ``Linear → ReLU`` windows fuse to :class:`FusedLinear` (the paper folds
 activations into the producing layer: "ReLU layer can be part of the
@@ -20,6 +23,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.core.graph import (
+    AvgPool2d,
     Conv2d,
     DAGGraph,
     DepthwiseConv2d,
@@ -38,6 +42,38 @@ from repro.core.graph import (
 _CONV_KINDS = (Conv2d, DepthwiseConv2d)
 
 _ACTIVATIONS = {"ReLU": "relu"}
+
+# Pool layers eligible as the tail of a fused window, and the FusedConvPool
+# reduction mode each maps to.
+_POOL_MODES = {"MaxPool2d": "max", "AvgPool2d": "avg"}
+
+
+def _pool_window(pool_layer, allow_line_buffer: bool):
+    """``(pool_mode, line_buffer_rows)`` if the pool window can fuse, else None.
+
+    Eligibility is **per-axis** (the scalar ``stride >= kernel_size`` check
+    conflated H and W):
+
+    * ``stride >= kernel`` on both axes — the paper's zero-scratch in-flight
+      reduction, any pool mode;
+    * H-overlap (``sh < kh``, max-pool only, ``allow_line_buffer``) — the §7
+      line buffer of ``kh - sh`` pooled rows;
+    * W-only overlap (``sh >= kh`` while ``sw < kw``) — **declined**: pooled
+      columns would need partial running maxes re-read from output the
+      single-pass loop already wrote, and no line-buffer formulation exists;
+    * average pools fuse only in the stride ≥ kernel form (the fused sum is
+      requantized once per window — overlap would require re-reading
+      accumulator values) and, like max, only unpadded.
+    """
+    mode = _POOL_MODES.get(pool_layer.kind)
+    if mode is None or pool_layer.padding != (0, 0):
+        return None
+    (kh, kw), (sh, sw) = pool_layer.kernel_size, pool_layer.stride
+    if sh >= kh and sw >= kw:
+        return (mode, 0)
+    if mode != "max" or sh >= kh or not allow_line_buffer:
+        return None
+    return (mode, kh - sh)
 
 
 def fuse(graph: SequentialGraph, allow_line_buffer: bool = True) -> SequentialGraph:
@@ -63,17 +99,14 @@ def fuse(graph: SequentialGraph, allow_line_buffer: bool = True) -> SequentialGr
             isinstance(layer, _CONV_KINDS)
             and nxt is not None
             and nxt.kind in _ACTIVATIONS
-            and isinstance(nxt2, MaxPool2d)
-            and nxt2.padding == 0
+            and isinstance(nxt2, (MaxPool2d, AvgPool2d))
         ):
-            if nxt2.stride >= nxt2.kernel_size:
-                line_rows = 0
-            elif allow_line_buffer:
-                line_rows = nxt2.kernel_size - nxt2.stride
-            else:
+            window = _pool_window(nxt2, allow_line_buffer)
+            if window is None:
                 out.append(layer)
                 i += 1
                 continue
+            mode, line_rows = window
             out.append(
                 FusedConvPool(
                     conv=layer,
@@ -82,6 +115,7 @@ def fuse(graph: SequentialGraph, allow_line_buffer: bool = True) -> SequentialGr
                     pool_stride=nxt2.stride,
                     line_buffer_rows=line_rows,
                     name=f"{layer.name or 'conv'}+{nxt2.name or 'pool'}",
+                    pool=mode,
                 )
             )
             i += 3
@@ -120,27 +154,25 @@ def _iter_dag_windows(graph: DAGGraph, allow_line_buffer: bool):
     cons = graph.consumers()
     nodes_by_name = {n.name: n for n in graph.nodes}
 
-    def _sole_consumer(name: str, kind: str):
-        """The single consumer of ``name`` if it has kind ``kind``, else None."""
+    def _sole_consumer(name: str, kinds):
+        """The single consumer of ``name`` if its kind is in ``kinds``, else None."""
         c = cons[name]
         if len(c) != 1 or name == graph.output:
             return None
         node = nodes_by_name[c[0]]
-        return node if node.layer.kind == kind else None
+        return node if node.layer.kind in kinds else None
 
     for node in graph.nodes:
         layer = node.layer
         if isinstance(layer, _CONV_KINDS):
-            relu = _sole_consumer(node.name, "ReLU")
-            pool = relu and _sole_consumer(relu.name, "MaxPool2d")
-            if pool is None or pool.layer.padding != 0:
+            relu = _sole_consumer(node.name, ("ReLU",))
+            pool = relu and _sole_consumer(relu.name, tuple(_POOL_MODES))
+            if pool is None:
                 continue
-            if pool.layer.stride >= pool.layer.kernel_size:
-                line_rows = 0
-            elif allow_line_buffer:
-                line_rows = pool.layer.kernel_size - pool.layer.stride
-            else:
+            window = _pool_window(pool.layer, allow_line_buffer)
+            if window is None:
                 continue
+            mode, line_rows = window
             fused_name = f"{layer.name or 'conv'}+{pool.layer.name or 'pool'}"
             fused_node = Node(
                 FusedConvPool(
@@ -150,12 +182,13 @@ def _iter_dag_windows(graph: DAGGraph, allow_line_buffer: bool):
                     pool_stride=pool.layer.stride,
                     line_buffer_rows=line_rows,
                     name=fused_name,
+                    pool=mode,
                 ),
                 node.inputs,
             )
             yield node, fused_node, (relu.name, pool.name), pool.name
         elif isinstance(layer, Linear):
-            relu = _sole_consumer(node.name, "ReLU")
+            relu = _sole_consumer(node.name, ("ReLU",))
             if relu is None:
                 continue
             fused_name = f"{layer.name or 'fc'}+{relu.layer.name or 'act'}"

@@ -25,6 +25,7 @@ import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 Shape = Tuple[int, ...]
+IntPair = Tuple[int, int]
 
 
 def _prod(xs: Sequence[int]) -> int:
@@ -32,6 +33,20 @@ def _prod(xs: Sequence[int]) -> int:
     for x in xs:
         out *= int(x)
     return out
+
+
+def _pair(v) -> IntPair:
+    """Normalize an int-or-``(h, w)`` geometry argument to an ``(h, w)`` pair.
+
+    The conv/pool layer family stores every ``kernel_size``/``stride``/
+    ``padding`` as a per-axis pair; plain ints are accepted everywhere and
+    normalized here, so ``Conv2d(kernel_size=5) == Conv2d(kernel_size=(5, 5))``
+    (dataclass equality and ``spec_key`` hashing see the normalized form).
+    """
+    if isinstance(v, (tuple, list)):
+        h, w = v
+        return (int(h), int(w))
+    return (int(v), int(v))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,14 +106,24 @@ class Input(LayerSpec):
 
 @dataclasses.dataclass(frozen=True)
 class Conv2d(LayerSpec):
-    """2D convolution, CHW layout (paper uses PyTorch semantics)."""
+    """2D convolution, CHW layout (paper uses PyTorch semantics).
+
+    ``kernel_size``/``stride``/``padding`` are per-axis ``(h, w)`` pairs;
+    plain ints are normalized to square pairs in ``__post_init__`` (so every
+    pre-rectangular call site is unchanged, including dataclass equality).
+    """
 
     in_channels: int = 0
     out_channels: int = 0
-    kernel_size: int = 1
-    stride: int = 1
-    padding: int = 0
+    kernel_size: "int | IntPair" = 1
+    stride: "int | IntPair" = 1
+    padding: "int | IntPair" = 0
     bias: bool = True
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "kernel_size", _pair(self.kernel_size))
+        object.__setattr__(self, "stride", _pair(self.stride))
+        object.__setattr__(self, "padding", _pair(self.padding))
 
     def out_shape(self, in_shape: Shape) -> Shape:
         c, h, w = in_shape
@@ -107,22 +132,24 @@ class Conv2d(LayerSpec):
                 f"{self.name or 'Conv2d'}: expected {self.in_channels} input "
                 f"channels, got shape {in_shape}"
             )
-        oh = (h + 2 * self.padding - self.kernel_size) // self.stride + 1
-        ow = (w + 2 * self.padding - self.kernel_size) // self.stride + 1
+        oh = (h + 2 * self.padding[0] - self.kernel_size[0]) // self.stride[0] + 1
+        ow = (w + 2 * self.padding[1] - self.kernel_size[1]) // self.stride[1] + 1
         return (self.out_channels, oh, ow)
 
     def param_count(self) -> int:
-        n = self.out_channels * self.in_channels * self.kernel_size**2
+        n = self.weight_count()
         if self.bias:
             n += self.out_channels
         return n
 
     def weight_count(self) -> int:
-        return self.out_channels * self.in_channels * self.kernel_size**2
+        kh, kw = self.kernel_size
+        return self.out_channels * self.in_channels * kh * kw
 
     def macs(self, in_shape: Shape) -> int:
         _, oh, ow = self.out_shape(in_shape)
-        return self.out_channels * oh * ow * self.in_channels * self.kernel_size**2
+        kh, kw = self.kernel_size
+        return self.out_channels * oh * ow * self.in_channels * kh * kw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,10 +167,15 @@ class DepthwiseConv2d(LayerSpec):
     """
 
     channels: int = 0
-    kernel_size: int = 1
-    stride: int = 1
-    padding: int = 0
+    kernel_size: "int | IntPair" = 1
+    stride: "int | IntPair" = 1
+    padding: "int | IntPair" = 0
     bias: bool = True
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "kernel_size", _pair(self.kernel_size))
+        object.__setattr__(self, "stride", _pair(self.stride))
+        object.__setattr__(self, "padding", _pair(self.padding))
 
     def out_shape(self, in_shape: Shape) -> Shape:
         c, h, w = in_shape
@@ -152,22 +184,24 @@ class DepthwiseConv2d(LayerSpec):
                 f"{self.name or 'DepthwiseConv2d'}: expected {self.channels} "
                 f"input channels, got shape {in_shape}"
             )
-        oh = (h + 2 * self.padding - self.kernel_size) // self.stride + 1
-        ow = (w + 2 * self.padding - self.kernel_size) // self.stride + 1
+        oh = (h + 2 * self.padding[0] - self.kernel_size[0]) // self.stride[0] + 1
+        ow = (w + 2 * self.padding[1] - self.kernel_size[1]) // self.stride[1] + 1
         return (self.channels, oh, ow)
 
     def param_count(self) -> int:
-        n = self.channels * self.kernel_size**2
+        n = self.weight_count()
         if self.bias:
             n += self.channels
         return n
 
     def weight_count(self) -> int:
-        return self.channels * self.kernel_size**2
+        kh, kw = self.kernel_size
+        return self.channels * kh * kw
 
     def macs(self, in_shape: Shape) -> int:
         _, oh, ow = self.out_shape(in_shape)
-        return self.channels * oh * ow * self.kernel_size**2
+        kh, kw = self.kernel_size
+        return self.channels * oh * ow * kh * kw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,14 +212,48 @@ class ReLU(LayerSpec):
 
 @dataclasses.dataclass(frozen=True)
 class MaxPool2d(LayerSpec):
-    kernel_size: int = 2
-    stride: int = 2
-    padding: int = 0
+    kernel_size: "int | IntPair" = 2
+    stride: "int | IntPair" = 2
+    padding: "int | IntPair" = 0
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "kernel_size", _pair(self.kernel_size))
+        object.__setattr__(self, "stride", _pair(self.stride))
+        object.__setattr__(self, "padding", _pair(self.padding))
 
     def out_shape(self, in_shape: Shape) -> Shape:
         c, h, w = in_shape
-        oh = (h + 2 * self.padding - self.kernel_size) // self.stride + 1
-        ow = (w + 2 * self.padding - self.kernel_size) // self.stride + 1
+        oh = (h + 2 * self.padding[0] - self.kernel_size[0]) // self.stride[0] + 1
+        ow = (w + 2 * self.padding[1] - self.kernel_size[1]) // self.stride[1] + 1
+        return (c, oh, ow)
+
+
+@dataclasses.dataclass(frozen=True)
+class AvgPool2d(LayerSpec):
+    """Average pooling with PyTorch's default semantics.
+
+    Padding (when present) is **counted in the divisor**
+    (``count_include_pad=True``, the PyTorch default): the window is
+    zero-padded and every window divides by the full ``kh·kw`` regardless of
+    how many taps were in bounds.  Under symmetric int8 quantization the
+    zero point is 0, so zero padding is exact in the int8 domain too; the
+    int8 backends sum the window in int32 and requantize once with the
+    ``1/(kh·kw)`` divisor folded into the multiplier (CMSIS-NN style).
+    """
+
+    kernel_size: "int | IntPair" = 2
+    stride: "int | IntPair" = 2
+    padding: "int | IntPair" = 0
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "kernel_size", _pair(self.kernel_size))
+        object.__setattr__(self, "stride", _pair(self.stride))
+        object.__setattr__(self, "padding", _pair(self.padding))
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        c, h, w = in_shape
+        oh = (h + 2 * self.padding[0] - self.kernel_size[0]) // self.stride[0] + 1
+        ow = (w + 2 * self.padding[1] - self.kernel_size[1]) // self.stride[1] + 1
         return (c, oh, ow)
 
 
@@ -243,39 +311,80 @@ class FusedConvPool(LayerSpec):
     hand-built ``FusedConvPool`` over a padded pool raises here instead of
     silently mis-shaping the arena plan (``out_shape`` would otherwise
     drop the padding the pool's ``out_shape`` honored).
+
+    All pool geometry is per-axis (ints normalize to square pairs) and the
+    eligibility conditions are per-axis too: the zero-scratch in-flight
+    reduction needs ``stride >= kernel`` on **both** axes; the §7
+    line-buffer form covers H-overlap (``sh < kh``, ``line_buffer_rows =
+    kh - sh`` pooled rows of scratch), but a W-only overlap (``sh >= kh``
+    while ``sw < kw``) has no line-buffer formulation — pooled columns
+    would need partial running maxes across a row the single-pass loop has
+    already written — so construction rejects it (the scalar check used to
+    accept this case by conflating the axes).
+
+    ``pool`` selects the reduction: ``"max"`` (Algorithm 1) or ``"avg"``
+    (:class:`AvgPool2d` semantics).  A fused average pool accumulates the
+    window **sum** in the accumulator domain and applies the divisor at
+    requantization time — sum-then-requant is not requant-then-sum, so
+    overlap would force re-reading accumulator values; fused ``"avg"``
+    therefore requires ``stride >= kernel`` on both axes and no padding.
     """
 
     conv: Conv2d = None  # type: ignore[assignment]
     activation: str = "relu"
-    pool_kernel: int = 2
-    pool_stride: int = 2
-    pool_padding: int = 0
+    pool_kernel: "int | IntPair" = 2
+    pool_stride: "int | IntPair" = 2
+    pool_padding: "int | IntPair" = 0
     line_buffer_rows: int = 0
+    pool: str = "max"
 
     def __post_init__(self) -> None:
+        object.__setattr__(self, "pool_kernel", _pair(self.pool_kernel))
+        object.__setattr__(self, "pool_stride", _pair(self.pool_stride))
+        object.__setattr__(self, "pool_padding", _pair(self.pool_padding))
         if not isinstance(self.conv, (Conv2d, DepthwiseConv2d)):
             raise TypeError(
                 f"{self.name or 'FusedConvPool'}: conv must be Conv2d or "
                 f"DepthwiseConv2d, got {self.conv!r}"
             )
-        if self.pool_padding != 0:
+        if self.pool not in ("max", "avg"):
+            raise ValueError(
+                f"{self.name or 'FusedConvPool'}: pool must be 'max' or "
+                f"'avg', got {self.pool!r}"
+            )
+        if self.pool_padding != (0, 0):
             raise ValueError(
                 f"{self.name or 'FusedConvPool'}: fused pooling does not "
                 f"support pool padding (got {self.pool_padding}) — the fusion "
-                f"pass declines padded MaxPool2d windows; keep the pool as a "
+                f"pass declines padded pool windows; keep the pool as a "
                 f"standalone layer"
             )
-        if self.pool_kernel < 1 or self.pool_stride < 1:
+        (pkh, pkw), (psh, psw) = self.pool_kernel, self.pool_stride
+        if min(pkh, pkw) < 1 or min(psh, psw) < 1:
             raise ValueError(
                 f"{self.name or 'FusedConvPool'}: pool_kernel/pool_stride "
                 f"must be >= 1"
+            )
+        if psw < pkw and psh >= pkh:
+            raise ValueError(
+                f"{self.name or 'FusedConvPool'}: W-only pool overlap "
+                f"(stride {self.pool_stride} < kernel {self.pool_kernel} on "
+                f"W but not H) has no line-buffer formulation — the fusion "
+                f"pass declines this window; keep the pool standalone"
+            )
+        if self.pool == "avg" and (psh < pkh or psw < pkw):
+            raise ValueError(
+                f"{self.name or 'FusedConvPool'}: fused average pooling "
+                f"requires stride >= kernel on both axes (sum-then-requant "
+                f"cannot line-buffer overlapping windows); got kernel "
+                f"{self.pool_kernel}, stride {self.pool_stride}"
             )
 
     def out_shape(self, in_shape: Shape) -> Shape:
         conv_out = self.conv.out_shape(in_shape)
         c, h, w = conv_out
-        oh = (h - self.pool_kernel) // self.pool_stride + 1
-        ow = (w - self.pool_kernel) // self.pool_stride + 1
+        oh = (h - self.pool_kernel[0]) // self.pool_stride[0] + 1
+        ow = (w - self.pool_kernel[1]) // self.pool_stride[1] + 1
         return (c, oh, ow)
 
     def conv_out_shape(self, in_shape: Shape) -> Shape:
@@ -675,10 +784,13 @@ def ds_cnn() -> DAGGraph:
     then four depthwise-separable blocks (3×3 :class:`DepthwiseConv2d` +
     ReLU, 1×1 pointwise :class:`Conv2d` + ReLU) at constant width, a final
     pool collapsing the 25×5 map, and the 12-way FC (10 keywords +
-    silence + unknown).  Deviations from the paper's exact net: the 10×4
-    stem kernel becomes 5×5 (this IR is square-kernel) and the average
-    pool becomes a max pool (the only pool the deployment stack emits);
-    buffer sizes — what the planner tables measure — are unchanged.
+    silence + unknown).  Deviations from the paper's exact net (kept for
+    plan-byte continuity — this builder's arena tables are pinned): the
+    10×4 stem kernel is approximated as 5×5 and the average pool as a max
+    pool; buffer sizes — what the planner tables measure — are unchanged.
+    :func:`ds_cnn_kws` is the true Zhang et al. topology (rectangular
+    ``(10, 4)`` stem, :class:`AvgPool2d` head) now that the layer family
+    is per-axis.
 
     The net is a chain, so it exercises the sequential *and* DAG stacks:
     `repro.core.schedule.plan_dag` prices the two-bank ping-pong packing,
@@ -705,6 +817,93 @@ def ds_cnn() -> DAGGraph:
         Node(MaxPool2d(kernel_size=5, stride=5, name="pool"), (prev,)),
         Node(Flatten(name="flatten"), ("pool",)),
         Node(Linear(320, 12, name="fc"), ("flatten",)),
+    ]
+    return DAGGraph(nodes)
+
+
+def ds_cnn_kws() -> DAGGraph:
+    """Zhang et al. (2017) "Hello Edge" DS-CNN in its **true** form.
+
+    The exact keyword-spotting topology from the paper (Table 2, DS-CNN):
+    a rectangular ``(10, 4)`` stride-``(2, 2)`` stem conv over the
+    ``49 × 10`` MFCC map (``"same"``-style padding ``(5, 1)`` → a
+    ``25 × 5`` map at 64 channels), four depthwise-separable blocks
+    (3×3 :class:`DepthwiseConv2d` + ReLU, 1×1 pointwise + ReLU), an
+    **average** pool collapsing the ``25 × 5`` map (:class:`AvgPool2d`,
+    the head the square-kernel era approximated with a max pool), and the
+    12-way FC.  The final pointwise conv + ReLU + avg-pool window fuses to
+    a zero-scratch ``pool="avg"`` :class:`FusedConvPool` (stride = kernel
+    on both axes).
+    """
+    nodes = [
+        Node(Input(shape=(1, 49, 10), name="input")),
+        Node(Conv2d(1, 64, kernel_size=(10, 4), stride=(2, 2),
+                    padding=(5, 1), name="conv1"), ("input",)),
+        Node(ReLU(name="conv1_relu"), ("conv1",)),
+    ]
+    prev = "conv1_relu"
+    for i in range(1, 5):
+        dw, pw = f"dw{i}", f"pw{i}"
+        nodes += [
+            Node(DepthwiseConv2d(64, kernel_size=3, padding=1, name=dw), (prev,)),
+            Node(ReLU(name=f"{dw}_relu"), (dw,)),
+            Node(Conv2d(64, 64, kernel_size=1, name=pw), (f"{dw}_relu",)),
+            Node(ReLU(name=f"{pw}_relu"), (pw,)),
+        ]
+        prev = f"{pw}_relu"
+    nodes += [
+        Node(AvgPool2d(kernel_size=(25, 5), stride=(25, 5), name="pool"), (prev,)),
+        Node(Flatten(name="flatten"), ("pool",)),
+        Node(Linear(64, 12, name="fc"), ("flatten",)),
+    ]
+    return DAGGraph(nodes)
+
+
+def mobilenet_v1(width: float = 0.25, num_classes: int = 10) -> DAGGraph:
+    """MobileNet-V1 (Howard et al. 2017) at a width multiplier, MCU-sized.
+
+    The standard MCU vision benchmark (CMSIS-NN, Lai et al. 1801.06601;
+    the deep-compression line, Deutel et al. 2205.10369): a stride-2 3×3
+    stem then the 13 depthwise-separable blocks, with the canonical
+    channel ladder ``32→64→128→…→1024`` scaled by ``width`` and the four
+    interior stride-2 **depthwise** convs — the workload that exercises
+    ``DepthwiseConv2d(stride=2)`` end-to-end.  Input is ``(3, 64, 64)``
+    (the 0.25× MCU deployments run reduced resolution), so the backbone
+    ends at a ``2 × 2`` map collapsed by a global :class:`AvgPool2d`.
+    """
+
+    def ch(c: int) -> int:
+        return max(8, int(c * width))
+
+    nodes = [
+        Node(Input(shape=(3, 64, 64), name="input")),
+        Node(Conv2d(3, ch(32), kernel_size=3, stride=2, padding=1,
+                    name="conv0"), ("input",)),
+        Node(ReLU(name="conv0_relu"), ("conv0",)),
+    ]
+    prev = "conv0_relu"
+    # (out_channels, depthwise stride) for the 13 separable blocks.
+    ladder = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+              (512, 1), (512, 1), (512, 1), (512, 1), (512, 1),
+              (1024, 2), (1024, 1)]
+    in_ch = ch(32)
+    for i, (c_out, s) in enumerate(ladder, start=1):
+        dw, pw = f"dw{i}", f"pw{i}"
+        out_ch = ch(c_out)
+        nodes += [
+            Node(DepthwiseConv2d(in_ch, kernel_size=3, stride=s, padding=1,
+                                 name=dw), (prev,)),
+            Node(ReLU(name=f"{dw}_relu"), (dw,)),
+            Node(Conv2d(in_ch, out_ch, kernel_size=1, name=pw),
+                 (f"{dw}_relu",)),
+            Node(ReLU(name=f"{pw}_relu"), (pw,)),
+        ]
+        prev = f"{pw}_relu"
+        in_ch = out_ch
+    nodes += [
+        Node(AvgPool2d(kernel_size=2, stride=2, name="pool"), (prev,)),
+        Node(Flatten(name="flatten"), ("pool",)),
+        Node(Linear(in_ch, num_classes, name="fc"), ("flatten",)),
     ]
     return DAGGraph(nodes)
 

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.graph import (
     Add,
+    AvgPool2d,
     Concat,
     Conv2d,
     DAGGraph,
@@ -27,21 +28,27 @@ from repro.core.graph import (
     MaxPool2d,
     ReLU,
     SequentialGraph,
+    _pair,
 )
 
 Params = Dict[str, Dict[str, jax.Array]]
 
 
-def conv2d(x: jax.Array, w: jax.Array, b, stride: int = 1, padding: int = 0) -> jax.Array:
-    """x: (C,H,W) or (N,C,H,W); w: (O,I,k,k); b: (O,) or None."""
+def conv2d(x: jax.Array, w: jax.Array, b, stride=1, padding=0) -> jax.Array:
+    """x: (C,H,W) or (N,C,H,W); w: (O,I,kh,kw); b: (O,) or None.
+
+    ``stride``/``padding`` are per-axis ``(h, w)`` pairs; ints broadcast.
+    """
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
     squeeze = x.ndim == 3
     if squeeze:
         x = x[None]
     out = jax.lax.conv_general_dilated(
         x,
         w,
-        window_strides=(stride, stride),
-        padding=[(padding, padding), (padding, padding)],
+        window_strides=(sh, sw),
+        padding=[(ph, ph), (pw, pw)],
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
     )
     if b is not None:
@@ -49,16 +56,18 @@ def conv2d(x: jax.Array, w: jax.Array, b, stride: int = 1, padding: int = 0) -> 
     return out[0] if squeeze else out
 
 
-def depthwise_conv2d(x: jax.Array, w: jax.Array, b, stride: int = 1, padding: int = 0) -> jax.Array:
-    """x: (C,H,W) or (N,C,H,W); w: (C,1,k,k) [grouped OIHW]; b: (C,) or None."""
+def depthwise_conv2d(x: jax.Array, w: jax.Array, b, stride=1, padding=0) -> jax.Array:
+    """x: (C,H,W) or (N,C,H,W); w: (C,1,kh,kw) [grouped OIHW]; b: (C,) or None."""
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
     squeeze = x.ndim == 3
     if squeeze:
         x = x[None]
     out = jax.lax.conv_general_dilated(
         x,
         w,
-        window_strides=(stride, stride),
-        padding=[(padding, padding), (padding, padding)],
+        window_strides=(sh, sw),
+        padding=[(ph, ph), (pw, pw)],
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
         feature_group_count=w.shape[0],
     )
@@ -67,8 +76,8 @@ def depthwise_conv2d(x: jax.Array, w: jax.Array, b, stride: int = 1, padding: in
     return out[0] if squeeze else out
 
 
-def maxpool2d(x: jax.Array, kernel: int, stride: int, padding: int = 0) -> jax.Array:
-    """x: (C,H,W) or (N,C,H,W).
+def maxpool2d(x: jax.Array, kernel, stride, padding=0) -> jax.Array:
+    """x: (C,H,W) or (N,C,H,W).  All geometry is per-axis (ints broadcast).
 
     ``padding`` pads with the dtype minimum (``-inf`` float, ``-128`` int8)
     before the window reduction — the identity of ``max`` — so padded
@@ -77,6 +86,9 @@ def maxpool2d(x: jax.Array, kernel: int, stride: int, padding: int = 0) -> jax.A
     max).  ``reduce_window`` realizes exactly that: padded positions take
     the init value.
     """
+    kh, kw = _pair(kernel)
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
     squeeze = x.ndim == 3
     if squeeze:
         x = x[None]
@@ -88,11 +100,46 @@ def maxpool2d(x: jax.Array, kernel: int, stride: int, padding: int = 0) -> jax.A
         x,
         init,
         jax.lax.max,
-        window_dimensions=(1, 1, kernel, kernel),
-        window_strides=(1, 1, stride, stride),
-        padding=((0, 0), (0, 0), (padding, padding), (padding, padding)),
+        window_dimensions=(1, 1, kh, kw),
+        window_strides=(1, 1, sh, sw),
+        padding=((0, 0), (0, 0), (ph, ph), (pw, pw)),
     )
     return out[0] if squeeze else out
+
+
+def sumpool2d(x: jax.Array, kernel, stride, padding=0) -> jax.Array:
+    """Window **sum** over zero padding — the shared reduction under both
+    the float :func:`avgpool2d` and the int8 accumulator-domain average
+    (``quantize.int8_avgpool``, which calls this on the int32-cast input).
+    """
+    kh, kw = _pair(kernel)
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    out = jax.lax.reduce_window(
+        x,
+        np.zeros((), x.dtype)[()],
+        jax.lax.add,
+        window_dimensions=(1, 1, kh, kw),
+        window_strides=(1, 1, sh, sw),
+        padding=((0, 0), (0, 0), (ph, ph), (pw, pw)),
+    )
+    return out[0] if squeeze else out
+
+
+def avgpool2d(x: jax.Array, kernel, stride, padding=0) -> jax.Array:
+    """Average pooling, PyTorch ``count_include_pad=True`` semantics.
+
+    The window is zero-padded and **every** window divides by the full
+    ``kh·kw`` — padded positions count toward the divisor (PyTorch's
+    default; pinned against it in the tests).  Float only: the int8
+    backends go through ``quantize.int8_avgpool`` (int32 window sum, one
+    requantization with the divisor folded into the multiplier).
+    """
+    kh, kw = _pair(kernel)
+    return sumpool2d(x, kernel, stride, padding) / (kh * kw)
 
 
 def _conv_like(conv, p, x: jax.Array) -> jax.Array:
@@ -125,11 +172,12 @@ def init_params(graph: SequentialGraph, rng: jax.Array, dtype=jnp.float32) -> Pa
             inner = layer.linear
         if isinstance(inner, Conv2d):
             rng, k1, k2 = jax.random.split(rng, 3)
-            fan_in = inner.in_channels * inner.kernel_size**2
+            kh, kw = inner.kernel_size
+            fan_in = inner.in_channels * kh * kw
             bound = 1.0 / np.sqrt(fan_in)
             w = jax.random.uniform(
                 k1,
-                (inner.out_channels, inner.in_channels, inner.kernel_size, inner.kernel_size),
+                (inner.out_channels, inner.in_channels, kh, kw),
                 dtype,
                 -bound,
                 bound,
@@ -138,11 +186,12 @@ def init_params(graph: SequentialGraph, rng: jax.Array, dtype=jnp.float32) -> Pa
             params[name] = {"w": w} | ({"b": b} if b is not None else {})
         elif isinstance(inner, DepthwiseConv2d):
             rng, k1, k2 = jax.random.split(rng, 3)
-            # PyTorch grouped-conv fan_in: in_channels/groups * k² = k².
-            bound = 1.0 / np.sqrt(inner.kernel_size**2)
+            kh, kw = inner.kernel_size
+            # PyTorch grouped-conv fan_in: in_channels/groups * kh·kw = kh·kw.
+            bound = 1.0 / np.sqrt(kh * kw)
             w = jax.random.uniform(
                 k1,
-                (inner.channels, 1, inner.kernel_size, inner.kernel_size),
+                (inner.channels, 1, kh, kw),
                 dtype,
                 -bound,
                 bound,
@@ -170,6 +219,8 @@ def apply_layer(layer, p, x: jax.Array) -> jax.Array:
         return jax.nn.relu(x)
     if isinstance(layer, MaxPool2d):
         return maxpool2d(x, layer.kernel_size, layer.stride, layer.padding)
+    if isinstance(layer, AvgPool2d):
+        return avgpool2d(x, layer.kernel_size, layer.stride, layer.padding)
     if isinstance(layer, Flatten):
         return x.reshape(x.shape[:-3] + (-1,)) if x.ndim > 3 else x.reshape(-1)
     if isinstance(layer, Linear):
@@ -177,6 +228,8 @@ def apply_layer(layer, p, x: jax.Array) -> jax.Array:
     if isinstance(layer, FusedConvPool):
         y = _conv_like(layer.conv, p, x)
         y = _ACT[layer.activation](y)
+        if layer.pool == "avg":
+            return avgpool2d(y, layer.pool_kernel, layer.pool_stride)
         return maxpool2d(y, layer.pool_kernel, layer.pool_stride)
     if isinstance(layer, FusedLinear):
         return _ACT[layer.activation](linear(x, p["w"], p.get("b")))

@@ -290,10 +290,11 @@ def plan_cmsis_baseline(graph: SequentialGraph, io_dtype_bytes: int = 1) -> Memo
     im2col_int16 = 0
     for layer in graph.layers:
         # arm_convolve / arm_depthwise_separable_conv alike need bufferA of
-        # 2·ch·k² int16 elements (ch = input channels; = channels depthwise).
+        # 2·ch·kh·kw int16 elements (ch = input channels; = channels depthwise).
         if isinstance(layer, (Conv2d, DepthwiseConv2d)):
             ch = layer.in_channels if isinstance(layer, Conv2d) else layer.channels
-            im2col_int16 = max(im2col_int16, 2 * ch * layer.kernel_size**2)
+            kh, kw = layer.kernel_size
+            im2col_int16 = max(im2col_int16, 2 * ch * kh * kw)
     scratch_elems = im2col_int16 * 2 // io_dtype_bytes  # int16 → io dtype units
     buffers, _ = _buffers_unique(rows)
     return MemoryPlan(

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.graph import (
     Add,
+    AvgPool2d,
     Concat,
     Conv2d,
     DAGGraph,
@@ -32,6 +33,7 @@ from repro.core.graph import (
     MaxPool2d,
     ReLU,
     SequentialGraph,
+    _pair,
 )
 from repro.core import nn
 
@@ -241,6 +243,21 @@ def _requant_conv(acc_i32: jax.Array, q: QuantizedLayer) -> jax.Array:
     return requantize(acc_i32, q.multiplier)
 
 
+def int8_avgpool(x_i8: jax.Array, kernel, stride, padding=0) -> jax.Array:
+    """Int8 average pooling, CMSIS-style: int32 window **sum**, then one
+    requantization whose multiplier folds in the ``1/(kh·kw)`` divisor.
+
+    Zero padding is exact under symmetric quantization (zero point 0), and
+    dividing by the full window size matches the float oracle's
+    count-include-pad semantics.  The divisor multiplier is formed by f32
+    division (``f32(1)/f32(kh·kw)``) — the same single-rounding every other
+    int8 backend (exec, Pallas q8, C) uses, so the backends agree bit-for-bit.
+    """
+    kh, kw = _pair(kernel)
+    s = nn.sumpool2d(x_i8.astype(jnp.int32), kernel, stride, padding)
+    return requantize(s, np.float32(1.0) / np.float32(kh * kw))
+
+
 def requantize_join(xs_i8, multipliers) -> jax.Array:
     """Int8 Add semantics shared by every backend: requantize each input onto
     the output scale, sum in int32, saturate to [-128, 127].
@@ -343,6 +360,8 @@ def _simulate_int8_node(qm: QuantizedModel, layer, name: str, xs) -> jax.Array:
         # padding pads with -128 (the int8 minimum) — the identity of max —
         # matching the float oracle's -inf padding and the C engine.
         return nn.maxpool2d(x, layer.kernel_size, layer.stride, layer.padding)
+    if isinstance(layer, AvgPool2d):
+        return int8_avgpool(x, layer.kernel_size, layer.stride, layer.padding)
     if isinstance(layer, (Add, Concat)):
         j = qm.joins[name]
         if isinstance(layer, Add):
@@ -354,8 +373,8 @@ def _simulate_int8_node(qm: QuantizedModel, layer, name: str, xs) -> jax.Array:
         acc = jax.lax.conv_general_dilated(
             x.astype(jnp.int32)[None] if x.ndim == 3 else x.astype(jnp.int32),
             jnp.asarray(q.w_q, jnp.int32),
-            window_strides=(conv.stride, conv.stride),
-            padding=[(conv.padding, conv.padding)] * 2,
+            window_strides=conv.stride,
+            padding=[(p, p) for p in conv.padding],
             dimension_numbers=("NCHW", "OIHW", "NCHW"),
             feature_group_count=(
                 conv.channels if isinstance(conv, DepthwiseConv2d) else 1
@@ -369,6 +388,16 @@ def _simulate_int8_node(qm: QuantizedModel, layer, name: str, xs) -> jax.Array:
         if isinstance(layer, FusedConvPool):
             if layer.activation == "relu":
                 acc = jnp.maximum(acc, 0)
+            if layer.pool == "avg":
+                # Fused average: window SUM in the int32 accumulator domain,
+                # then one requantization with 1/(pkh·pkw) folded into the
+                # multiplier (f32 division — the shared canonical order).
+                pkh, pkw = layer.pool_kernel
+                s = nn.sumpool2d(acc, layer.pool_kernel, layer.pool_stride)
+                m = np.asarray(q.multiplier, np.float32) / np.float32(pkh * pkw)
+                if q.per_channel:
+                    return requantize_per_channel(s, m)
+                return requantize(s, m)
             y = _requant_conv(acc, q)
             return nn.maxpool2d(y, layer.pool_kernel, layer.pool_stride)
         return _requant_conv(acc, q)

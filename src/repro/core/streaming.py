@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.core import nn, pingpong, schedule
 from repro.core.graph import (
+    AvgPool2d,
     Conv2d,
     DepthwiseConv2d,
     Input,
@@ -70,13 +71,20 @@ from repro.core.planner import MemoryPlan, materialized_steps
 
 # Layer kinds that can live in the streamed backbone: local along H with a
 # static (kernel, stride, padding) geometry.  Everything else — Linear,
-# Flatten, fused forms, joins — starts the full-recompute head.
-_STREAMABLE = (Conv2d, DepthwiseConv2d, MaxPool2d)
+# Flatten, fused forms, joins — starts the full-recompute head.  AvgPool2d
+# streams like the others: its padding identity is 0 (count-include-pad
+# zeros) and the divisor is a trace constant.
+_STREAMABLE = (Conv2d, DepthwiseConv2d, MaxPool2d, AvgPool2d)
 
 
 def _geometry(layer) -> Tuple[int, int, int]:
-    """(kernel, stride, padding) along H for a streamable layer."""
-    return (layer.kernel_size, layer.stride, layer.padding)
+    """(kernel, stride, padding) along **H** for a streamable layer.
+
+    Only the time axis streams, so the ring-extent recursion consumes the
+    H components of the (possibly rectangular) per-axis geometry; the W
+    axis is handled whole inside each row computation.
+    """
+    return (layer.kernel_size[0], layer.stride[0], layer.padding[0])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -341,15 +349,16 @@ class StreamingExecutor:
         """Apply ``layer`` (+ its ReLU views) to an explicitly-padded block.
 
         The block is pre-padded on H by the window-edge pad counts and on W
-        by the layer's own padding, with the layer's padding identity
-        (zeros for convs, dtype-min for max-pool) — then the layer runs
-        with ``padding=0``, which reuses the stock numerics unchanged.
+        by the layer's own **W-axis** padding, with the layer's padding
+        identity (zeros for convs/avg-pool, dtype-min for max-pool) — then
+        the layer runs with ``padding=0``, which reuses the stock numerics
+        unchanged.
         """
-        _, _, pad = _geometry(layer)
-        if pad_top or pad_bot or pad:
+        pad_w = layer.padding[1]
+        if pad_top or pad_bot or pad_w:
             block = jnp.pad(
                 block,
-                ((0, 0), (pad_top, pad_bot), (pad, pad)),
+                ((0, 0), (pad_top, pad_bot), (pad_w, pad_w)),
                 constant_values=self._pad_fill(layer),
             )
         y = self._apply(dataclasses.replace(layer, padding=0), p, block)
@@ -500,6 +509,62 @@ def make_streaming_executor(
     return StreamingExecutor(
         graph, splan, apply_layer_fn=apply_layer_fn, dtype=dtype
     )
+
+
+class PosteriorSmoother:
+    """Posterior smoothing over streaming emissions (Zhang et al. §5).
+
+    KWS deployments never act on a single window's posterior — the decision
+    is smoothed over the last ``window`` emissions to suppress single-frame
+    flips.  Two modes:
+
+    * ``"mean"`` — running mean of the emission vectors; the prediction is
+      the argmax of the averaged posterior (Zhang et al.'s smoothed
+      confidence).
+    * ``"vote"`` — majority vote over the per-emission argmax labels; ties
+      resolve to the smallest label index (deterministic).
+
+    Host-side and stateful by design: one smoother per stream, fed each
+    emission as it comes out of :meth:`StreamingExecutor.run` /
+    ``StreamServer`` (logits are fine — argmax and mean commute with any
+    monotone per-class calibration the head applies uniformly).
+    """
+
+    def __init__(self, window: int = 3, mode: str = "mean"):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        if mode not in ("mean", "vote"):
+            raise ValueError(f"mode must be 'mean' or 'vote', got {mode!r}")
+        self.window = int(window)
+        self.mode = mode
+        self._buf: List[np.ndarray] = []
+
+    def reset(self) -> None:
+        """Forget all history (stream restart)."""
+        self._buf.clear()
+
+    @property
+    def posterior(self) -> Optional[np.ndarray]:
+        """The current smoothed emission vector (``None`` before the first
+        update; always the running mean, whatever the decision mode)."""
+        if not self._buf:
+            return None
+        return np.mean(np.stack(self._buf), axis=0)
+
+    def update(self, emission) -> int:
+        """Fold in one emission (1-D class vector); return the smoothed label."""
+        e = np.asarray(emission, np.float32).reshape(-1)
+        if self._buf and e.shape != self._buf[-1].shape:
+            raise ValueError(
+                f"emission shape {e.shape} != previous {self._buf[-1].shape}"
+            )
+        self._buf.append(e)
+        if len(self._buf) > self.window:
+            self._buf.pop(0)
+        if self.mode == "mean":
+            return int(np.argmax(self.posterior))
+        labels = [int(np.argmax(v)) for v in self._buf]
+        return int(np.bincount(labels).argmax())
 
 
 def sliding_window_reference(

@@ -27,25 +27,27 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.graph import _pair
 from repro.kernels.conv_pool.kernel import conv_pool_call, has_compiled_pallas_backend
 
 
 def _kernel_dw(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
-               k, activation, out_w, row_block):
-    cs, pk, ps, R = conv_stride, pool_k, pool_stride, row_block
+               k, activation, pool, out_w, row_block):
+    (csh, csw), (pkh, pkw), (psh, psw) = conv_stride, pool_k, pool_stride
+    kh, kw, R = k[0], k[1], row_block
     x = x_ref[0]  # (window_rows, W, C) — this program's halo window
-    w = w_ref[...]  # (k, k, 1, C) — grouped HWIO, one filter tap per channel
+    w = w_ref[...]  # (kh, kw, 1, C) — grouped HWIO, one filter tap per channel
     ow = out_w
     # Conv rows this tile's pooled rows consume, relative to the window start.
-    cr = (R - 1) * ps + pk
+    cr = (R - 1) * psh + pkh
 
-    # depthwise conv: k² static strided slices, one per-channel VPU
+    # depthwise conv: kh·kw static strided slices, one per-channel VPU
     # multiply-add each (no cross-channel contraction to feed the MXU).
     acc = jnp.zeros((cr, ow, x.shape[-1]), jnp.float32)
-    for dz in range(k):
-        rows = x[dz : dz + (cr - 1) * cs + 1 : cs]  # (cr, W, C)
-        for dt in range(k):
-            cols = rows[:, dt : dt + (ow - 1) * cs + 1 : cs]  # (cr, ow, C)
+    for dz in range(kh):
+        rows = x[dz : dz + (cr - 1) * csh + 1 : csh]  # (cr, W, C)
+        for dt in range(kw):
+            cols = rows[:, dt : dt + (ow - 1) * csw + 1 : csw]  # (cr, ow, C)
             acc = acc + cols.astype(jnp.float32) * w[dz, dt].astype(jnp.float32)
     if b_ref is not None:
         acc = acc + b_ref[...].astype(jnp.float32)
@@ -54,27 +56,31 @@ def _kernel_dw(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
 
     # pooling reduction in VMEM, identical to the dense kernel; pk == ps == 1
     # degenerates to the identity (fused conv+act without pooling).
-    pw = (ow - pk) // ps + 1
+    red = jnp.maximum if pool == "max" else jnp.add
+    pw = (ow - pkw) // psw + 1
     pooled_rows = None
-    for j in range(pk):
-        rows = acc[j : j + (R - 1) * ps + 1 : ps]  # (R, ow, C)
-        pooled_rows = rows if pooled_rows is None else jnp.maximum(pooled_rows, rows)
+    for j in range(pkh):
+        rows = acc[j : j + (R - 1) * psh + 1 : psh]  # (R, ow, C)
+        pooled_rows = rows if pooled_rows is None else red(pooled_rows, rows)
     pooled = None
-    for j in range(pk):
-        cols = pooled_rows[:, j : j + (pw - 1) * ps + 1 : ps]  # (R, pw, C)
-        pooled = cols if pooled is None else jnp.maximum(pooled, cols)
+    for j in range(pkw):
+        cols = pooled_rows[:, j : j + (pw - 1) * psw + 1 : psw]  # (R, pw, C)
+        pooled = cols if pooled is None else red(pooled, cols)
+    if pool == "avg":
+        pooled = pooled / (pkh * pkw)
     o_ref[0] = pooled.astype(o_ref.dtype)
 
 
 def depthwise_conv_pool(
     x: jax.Array,  # (H, W, C) or (N, H, W, C), pre-padded
-    w: jax.Array,  # (k, k, 1, C) grouped HWIO
+    w: jax.Array,  # (kh, kw, 1, C) grouped HWIO
     b: jax.Array | None,
     *,
-    conv_stride: int = 1,
-    pool_k: int = 2,
-    pool_stride: int = 2,
+    conv_stride=1,
+    pool_k=2,
+    pool_stride=2,
     activation: str = "relu",
+    pool: str = "max",
     interpret: bool | None = None,
     row_block: int | None = None,
 ) -> jax.Array:
@@ -85,9 +91,9 @@ def depthwise_conv_pool(
     out = conv_pool_call(
         x, w, b,
         kernel_factory=lambda ow, rb: functools.partial(
-            _kernel_dw, conv_stride=conv_stride, pool_k=pool_k,
-            pool_stride=pool_stride, k=w.shape[0], activation=activation,
-            out_w=ow, row_block=rb,
+            _kernel_dw, conv_stride=_pair(conv_stride), pool_k=_pair(pool_k),
+            pool_stride=_pair(pool_stride), k=(w.shape[0], w.shape[1]),
+            activation=activation, pool=pool, out_w=ow, row_block=rb,
         ),
         out_dtype=x.dtype,
         conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride,
@@ -97,7 +103,7 @@ def depthwise_conv_pool(
 
 
 def _xla_depthwise_conv_pool(x, w, b, *, conv_stride, padding, pool_k,
-                             pool_stride, activation):
+                             pool_stride, activation, pool):
     """Batched XLA realization on the NCHW input: the compiled fallback for
     backends without a compiled Pallas lowering (grouped conv + pool fuse
     inside the enclosing jit)."""
@@ -106,29 +112,33 @@ def _xla_depthwise_conv_pool(x, w, b, *, conv_stride, padding, pool_k,
     out = core_nn.depthwise_conv2d(x, w, b, stride=conv_stride, padding=padding)
     if activation == "relu":
         out = jax.nn.relu(out)
+    if pool == "avg":
+        return core_nn.avgpool2d(out, pool_k, pool_stride)
     return core_nn.maxpool2d(out, pool_k, pool_stride)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("conv_stride", "padding", "pool_k", "pool_stride",
-                     "activation", "impl", "interpret", "row_block"),
+                     "activation", "pool", "impl", "interpret", "row_block"),
 )
 def fused_depthwise_conv_pool(
     x: jax.Array,  # (C, H, W) or (N, C, H, W) — paper/PyTorch layout
-    w: jax.Array,  # (C, 1, k, k) grouped OIHW
+    w: jax.Array,  # (C, 1, kh, kw) grouped OIHW
     b: jax.Array | None = None,
     *,
-    conv_stride: int = 1,
-    padding: int = 0,
-    pool_k: int = 1,
-    pool_stride: int = 1,
+    conv_stride=1,
+    padding=0,
+    pool_k=1,
+    pool_stride=1,
     activation: str = "relu",
+    pool: str = "max",
     impl: str = "auto",  # "auto" | "pallas" | "xla"
     interpret: bool | None = None,
     row_block: int | None = None,
 ) -> jax.Array:
-    """Returns (C, PH, PW) or (N, C, PH, PW)."""
+    """Returns (C, PH, PW) or (N, C, PH, PW).  Geometry is per-axis
+    (ints broadcast); ``pool`` selects the fused reduction."""
     squeeze = x.ndim == 3
     if squeeze:
         x = x[None]
@@ -138,20 +148,21 @@ def fused_depthwise_conv_pool(
     if impl == "xla":
         out = _xla_depthwise_conv_pool(
             x, w, b, conv_stride=conv_stride, padding=padding, pool_k=pool_k,
-            pool_stride=pool_stride, activation=activation,
+            pool_stride=pool_stride, activation=activation, pool=pool,
         )
         return out[0] if squeeze else out
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
 
+    ph_, pw_ = _pair(padding)
     xh = jnp.transpose(x, (0, 2, 3, 1))  # NHWC (TPU lanes-last)
-    if padding:
-        xh = jnp.pad(xh, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
-    wh = jnp.transpose(w, (2, 3, 1, 0))  # (k, k, 1, C)
+    if ph_ or pw_:
+        xh = jnp.pad(xh, ((0, 0), (ph_, ph_), (pw_, pw_), (0, 0)))
+    wh = jnp.transpose(w, (2, 3, 1, 0))  # (kh, kw, 1, C)
     out = depthwise_conv_pool(
         xh, wh, b, conv_stride=conv_stride, pool_k=pool_k,
-        pool_stride=pool_stride, activation=activation, interpret=interpret,
-        row_block=row_block,
+        pool_stride=pool_stride, activation=activation, pool=pool,
+        interpret=interpret, row_block=row_block,
     )
     out = jnp.transpose(out, (0, 3, 1, 2))  # NCHW
     return out[0] if squeeze else out

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.graph import _pair
+
 # Backends with a compiled Pallas lowering (Mosaic / Triton).  Anything else
 # (CPU et al.) can only run Pallas through the interpreter.
 _COMPILED_PALLAS_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
@@ -51,7 +53,12 @@ def halo_window_rows(row_block: int, *, conv_stride: int, pool_k: int,
     """Input rows one program's tile of ``row_block`` pooled rows consumes:
     a stride of ``row_block·pool_stride·conv_stride`` plus the conv/pool halo.
     Shared by the float kernel and the int8 q8 kernel
-    (``repro.quant.kernel_q8``) so the two tilings cannot diverge."""
+    (``repro.quant.kernel_q8``) so the two tilings cannot diverge.
+
+    The arguments are the **H-axis** components of the (possibly
+    rectangular) geometry — only rows are halo-tiled; the W axis stays
+    whole inside each program.
+    """
     return ((row_block - 1) * pool_stride * conv_stride
             + (pool_k - 1) * conv_stride + k)
 
@@ -80,22 +87,23 @@ def choose_row_block(
 
 
 def _kernel(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
-            k, activation, out_w, row_block):
-    cs, pk, ps, R = conv_stride, pool_k, pool_stride, row_block
+            k, activation, pool, out_w, row_block):
+    (csh, csw), (pkh, pkw), (psh, psw) = conv_stride, pool_k, pool_stride
+    kh, kw, R = k[0], k[1], row_block
     x = x_ref[0]  # (window_rows, W, Cin) — this program's halo window
-    w = w_ref[...]  # (k, k, Cin, Cout)
+    w = w_ref[...]  # (kh, kw, Cin, Cout)
     cin = x.shape[-1]
     cout = w.shape[-1]
     ow = out_w
     # Conv rows this tile's pooled rows consume, relative to the window start.
-    cr = (R - 1) * ps + pk
+    cr = (R - 1) * psh + pkh
 
-    # conv: k² static strided slices, one MXU dot each, accumulated in f32.
+    # conv: kh·kw static strided slices, one MXU dot each, accumulated in f32.
     acc = jnp.zeros((cr * ow, cout), jnp.float32)
-    for dz in range(k):
-        rows = x[dz : dz + (cr - 1) * cs + 1 : cs]  # (cr, W, Cin)
-        for dt in range(k):
-            cols = rows[:, dt : dt + (ow - 1) * cs + 1 : cs]  # (cr, ow, Cin)
+    for dz in range(kh):
+        rows = x[dz : dz + (cr - 1) * csh + 1 : csh]  # (cr, W, Cin)
+        for dt in range(kw):
+            cols = rows[:, dt : dt + (ow - 1) * csw + 1 : csw]  # (cr, ow, Cin)
             acc = acc + jax.lax.dot_general(
                 cols.reshape(cr * ow, cin).astype(jnp.float32),
                 w[dz, dt].astype(jnp.float32),
@@ -108,17 +116,20 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
     if activation == "relu":
         acc = jnp.maximum(acc, 0.0)
 
-    # pooling reduction in VMEM: running max over the pk×pk window, rows then
-    # columns, all offsets static.
-    pw = (ow - pk) // ps + 1
+    # pooling reduction in VMEM: running max (or sum, for average pooling)
+    # over the pkh×pkw window, rows then columns, all offsets static.
+    red = jnp.maximum if pool == "max" else jnp.add
+    pw = (ow - pkw) // psw + 1
     pooled_rows = None
-    for j in range(pk):
-        rows = acc[j : j + (R - 1) * ps + 1 : ps]  # (R, ow, Cout)
-        pooled_rows = rows if pooled_rows is None else jnp.maximum(pooled_rows, rows)
+    for j in range(pkh):
+        rows = acc[j : j + (R - 1) * psh + 1 : psh]  # (R, ow, Cout)
+        pooled_rows = rows if pooled_rows is None else red(pooled_rows, rows)
     pooled = None
-    for j in range(pk):
-        cols = pooled_rows[:, j : j + (pw - 1) * ps + 1 : ps]  # (R, pw, Cout)
-        pooled = cols if pooled is None else jnp.maximum(pooled, cols)
+    for j in range(pkw):
+        cols = pooled_rows[:, j : j + (pw - 1) * psw + 1 : psw]  # (R, pw, Cout)
+        pooled = cols if pooled is None else red(pooled, cols)
+    if pool == "avg":
+        pooled = pooled / (pkh * pkw)
     o_ref[0] = pooled.astype(o_ref.dtype)
 
 
@@ -129,9 +140,9 @@ def conv_pool_call(
     *,
     kernel_factory,  # (out_w, row_block) -> kern(x_ref, w_ref, b_ref, o_ref)
     out_dtype,
-    conv_stride: int,
-    pool_k: int,
-    pool_stride: int,
+    conv_stride,  # int or (h, w)
+    pool_k,
+    pool_stride,
     interpret: bool | None,
     row_block: int | None,
     extra_args: tuple = (),
@@ -150,27 +161,34 @@ def conv_pool_call(
     depthwise kernel's per-channel requant multipliers — data a Pallas
     kernel cannot capture as a trace constant); their refs are appended to
     the kernel call after ``o_ref``: ``kern(x, w, b, o, *extras)``.
+
+    All geometry arguments are per-axis ``(h, w)`` pairs (ints broadcast);
+    only the H axis is halo-tiled, so the window/stride math below uses the
+    H components and the W axis stays whole inside each program.
     """
     n, H, W, cin = x.shape
-    k = w.shape[0]
+    kh, kw = w.shape[0], w.shape[1]
+    csh, csw = _pair(conv_stride)
+    pkh, pkw = _pair(pool_k)
+    psh, psw = _pair(pool_stride)
     cout = w.shape[-1]
-    oh = (H - k) // conv_stride + 1
-    ow = (W - k) // conv_stride + 1
-    ph = (oh - pool_k) // pool_stride + 1
-    pw = (ow - pool_k) // pool_stride + 1
+    oh = (H - kh) // csh + 1
+    ow = (W - kw) // csw + 1
+    ph = (oh - pkh) // psh + 1
+    pw = (ow - pkw) // psw + 1
 
-    # Input rows per program: a stride of row_block·ps·cs plus the halo.
-    stride_rows = pool_stride * conv_stride
-    geom = dict(conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride, k=k)
+    # Input rows per program: a stride of row_block·psh·csh plus the halo.
+    stride_rows = psh * csh
+    geom = dict(conv_stride=csh, pool_k=pkh, pool_stride=psh, k=kh)
     if row_block is None:
         in_item = x.dtype.itemsize
         out_item = jnp.dtype(out_dtype).itemsize
-        # w.size, not k²·cin·cout: grouped (depthwise) weights are (k,k,1,C).
+        # w.size, not kh·kw·cin·cout: grouped (depthwise) weights are (kh,kw,1,C).
         w_bytes = w.size * w.dtype.itemsize
 
         def _tile_bytes(r: int) -> int:
             window = halo_window_rows(r, **geom)  # input rows resident
-            cr = (r - 1) * pool_stride + pool_k  # conv rows accumulated
+            cr = (r - 1) * psh + pkh  # conv rows accumulated
             return (
                 window * W * cin * in_item  # halo window
                 + cr * ow * cout * 4  # f32/int32 accumulator
@@ -221,26 +239,31 @@ def conv_pool_call(
 
 def conv_pool(
     x: jax.Array,  # (H, W, Cin) or (N, H, W, Cin), pre-padded
-    w: jax.Array,  # (k, k, Cin, Cout)
+    w: jax.Array,  # (kh, kw, Cin, Cout)
     b: jax.Array | None,
     *,
-    conv_stride: int = 1,
-    pool_k: int = 2,
-    pool_stride: int = 2,
+    conv_stride=1,
+    pool_k=2,
+    pool_stride=2,
     activation: str = "relu",
+    pool: str = "max",
     interpret: bool | None = None,
     row_block: int | None = None,
 ) -> jax.Array:
-    """Fused conv+act+pool.  Returns (PH, PW, Cout) or (N, PH, PW, Cout)."""
+    """Fused conv+act+pool.  Returns (PH, PW, Cout) or (N, PH, PW, Cout).
+
+    Geometry is per-axis (ints broadcast to ``(h, w)`` pairs); ``pool``
+    selects the fused reduction (``"max"`` or ``"avg"``).
+    """
     squeeze = x.ndim == 3
     if squeeze:
         x = x[None]
     out = conv_pool_call(
         x, w, b,
         kernel_factory=lambda ow, rb: functools.partial(
-            _kernel, conv_stride=conv_stride, pool_k=pool_k,
-            pool_stride=pool_stride, k=w.shape[0], activation=activation,
-            out_w=ow, row_block=rb,
+            _kernel, conv_stride=_pair(conv_stride), pool_k=_pair(pool_k),
+            pool_stride=_pair(pool_stride), k=(w.shape[0], w.shape[1]),
+            activation=activation, pool=pool, out_w=ow, row_block=rb,
         ),
         out_dtype=x.dtype,
         conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride,

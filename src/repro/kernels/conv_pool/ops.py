@@ -28,12 +28,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.graph import _pair
 from repro.kernels.conv_pool import kernel as _k
 from repro.kernels.conv_pool import ref as _ref
 
 
 def _xla_conv_pool(x, w, b, *, conv_stride, padding, pool_k, pool_stride,
-                   activation):
+                   activation, pool):
     """Batched XLA realization, straight on the NCHW input (no layout
     round-trip): the compiled fallback for backends without a compiled Pallas
     lowering.  Reuses the functional-oracle numerics from ``repro.core.nn``
@@ -43,29 +44,36 @@ def _xla_conv_pool(x, w, b, *, conv_stride, padding, pool_k, pool_stride,
     out = core_nn.conv2d(x, w, b, stride=conv_stride, padding=padding)
     if activation == "relu":
         out = jax.nn.relu(out)
+    if pool == "avg":
+        return core_nn.avgpool2d(out, pool_k, pool_stride)
     return core_nn.maxpool2d(out, pool_k, pool_stride)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("conv_stride", "padding", "pool_k", "pool_stride",
-                     "activation", "impl", "interpret", "row_block"),
+                     "activation", "pool", "impl", "interpret", "row_block"),
 )
 def fused_conv_pool(
     x: jax.Array,  # (Cin, H, W) or (N, Cin, H, W) — paper/PyTorch layout
-    w: jax.Array,  # (Cout, Cin, k, k)
+    w: jax.Array,  # (Cout, Cin, kh, kw)
     b: jax.Array | None = None,
     *,
-    conv_stride: int = 1,
-    padding: int = 0,
-    pool_k: int = 2,
-    pool_stride: int = 2,
+    conv_stride=1,
+    padding=0,
+    pool_k=2,
+    pool_stride=2,
     activation: str = "relu",
+    pool: str = "max",
     impl: str = "auto",  # "auto" | "pallas" | "ref"
     interpret: bool | None = None,
     row_block: int | None = None,
 ) -> jax.Array:
-    """Returns (Cout, PH, PW) or (N, Cout, PH, PW)."""
+    """Returns (Cout, PH, PW) or (N, Cout, PH, PW).
+
+    All geometry arguments are per-axis ``(h, w)`` pairs (plain ints
+    broadcast); ``pool`` selects the fused reduction (``"max"``/``"avg"``).
+    """
     squeeze = x.ndim == 3
     if squeeze:
         x = x[None]
@@ -75,24 +83,25 @@ def fused_conv_pool(
     if impl == "xla":
         out = _xla_conv_pool(
             x, w, b, conv_stride=conv_stride, padding=padding, pool_k=pool_k,
-            pool_stride=pool_stride, activation=activation,
+            pool_stride=pool_stride, activation=activation, pool=pool,
         )
         return out[0] if squeeze else out
 
+    ph_, pw_ = _pair(padding)
     xh = jnp.transpose(x, (0, 2, 3, 1))  # NHWC (TPU lanes-last)
-    if padding:
-        xh = jnp.pad(xh, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    if ph_ or pw_:
+        xh = jnp.pad(xh, ((0, 0), (ph_, ph_), (pw_, pw_), (0, 0)))
     wh = jnp.transpose(w, (2, 3, 1, 0))  # HWIO
     if impl == "pallas":
         out = _k.conv_pool(
             xh, wh, b, conv_stride=conv_stride, pool_k=pool_k,
-            pool_stride=pool_stride, activation=activation, interpret=interpret,
-            row_block=row_block,
+            pool_stride=pool_stride, activation=activation, pool=pool,
+            interpret=interpret, row_block=row_block,
         )
     elif impl == "ref":
         fn = functools.partial(
             _ref.conv_pool_ref, conv_stride=conv_stride, pool_k=pool_k,
-            pool_stride=pool_stride, activation=activation,
+            pool_stride=pool_stride, activation=activation, pool=pool,
         )
         out = jax.vmap(lambda img: fn(img, wh, b))(xh)
     else:

@@ -4,22 +4,26 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.graph import _pair
+
 
 def conv_pool_ref(
     x: jax.Array,  # (H, W, Cin)   — already padded
-    w: jax.Array,  # (k, k, Cin, Cout)
+    w: jax.Array,  # (kh, kw, Cin, Cout)
     b: jax.Array | None,  # (Cout,)
     *,
-    conv_stride: int = 1,
-    pool_k: int = 2,
-    pool_stride: int = 2,
+    conv_stride=1,
+    pool_k=2,
+    pool_stride=2,
     activation: str = "relu",
+    pool: str = "max",
 ) -> jax.Array:
-    """Returns (PH, PW, Cout)."""
+    """Returns (PH, PW, Cout).  All geometry is per-axis (ints broadcast)."""
+    pkh, pkw = _pair(pool_k)
     out = jax.lax.conv_general_dilated(
         x[None],
         w,
-        window_strides=(conv_stride, conv_stride),
+        window_strides=_pair(conv_stride),
         padding="VALID",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )[0]
@@ -27,12 +31,15 @@ def conv_pool_ref(
         out = out + b
     if activation == "relu":
         out = jax.nn.relu(out)
+    init, op = (-jnp.inf, jax.lax.max) if pool == "max" else (0.0, jax.lax.add)
     out = jax.lax.reduce_window(
         out,
-        -jnp.inf,
-        jax.lax.max,
-        window_dimensions=(pool_k, pool_k, 1),
-        window_strides=(pool_stride, pool_stride, 1),
+        init,
+        op,
+        window_dimensions=(pkh, pkw, 1),
+        window_strides=_pair(pool_stride) + (1,),
         padding="VALID",
     )
+    if pool == "avg":
+        out = out / (pkh * pkw)
     return out

@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-WORKLOADS = ("lenet", "residual_cifar", "ds_cnn")
+WORKLOADS = ("lenet", "residual_cifar", "ds_cnn", "ds_cnn_kws",
+             "mobilenet_v1_025")
 
 _CALIB_BATCH = 16
 
@@ -59,12 +60,15 @@ def build_workload(name: str, *, int8: bool = False, seed: int = 0) -> dict:
     pytree), and ``make_input(rng)`` produces one wire-format input image.
     """
     from repro.core import fusion, nn, quantize, schedule
-    from repro.core.graph import DAGGraph, ds_cnn, lenet5, residual_cifar
+    from repro.core.graph import (
+        DAGGraph, ds_cnn, ds_cnn_kws, lenet5, mobilenet_v1, residual_cifar,
+    )
 
     if name not in WORKLOADS:
         raise ValueError(f"unknown workload {name!r}; pick from {WORKLOADS}")
     g = {"lenet": lenet5, "residual_cifar": residual_cifar,
-         "ds_cnn": ds_cnn}[name]()
+         "ds_cnn": ds_cnn, "ds_cnn_kws": ds_cnn_kws,
+         "mobilenet_v1_025": lambda: mobilenet_v1(width=0.25)}[name]()
     if not isinstance(g, DAGGraph):
         g = DAGGraph.from_sequential(g)
     in_shape = tuple(g.nodes[0].layer.shape)

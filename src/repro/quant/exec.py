@@ -30,6 +30,7 @@ from repro.core import nn, pingpong
 from repro.core import segments as segments_mod
 from repro.core.graph import (
     Add,
+    AvgPool2d,
     Concat,
     Conv2d,
     DAGGraph,
@@ -45,6 +46,7 @@ from repro.core.graph import (
 from repro.core.planner import MemoryPlan
 from repro.core.quantize import (
     QuantizedModel,
+    int8_avgpool,
     requantize,
     requantize_concat,
     requantize_join,
@@ -93,6 +95,8 @@ def apply_int8_layer(layer, p, x: jax.Array) -> jax.Array:
         return x.reshape(x.shape[:-3] + (-1,)) if x.ndim > 3 else x.reshape(-1)
     if isinstance(layer, MaxPool2d):
         return nn.maxpool2d(x, layer.kernel_size, layer.stride, layer.padding)
+    if isinstance(layer, AvgPool2d):
+        return int8_avgpool(x, layer.kernel_size, layer.stride, layer.padding)
     if isinstance(layer, (Conv2d, DepthwiseConv2d, FusedConvPool)):
         conv = layer.conv if isinstance(layer, FusedConvPool) else layer
         depthwise = isinstance(conv, DepthwiseConv2d)
@@ -100,8 +104,8 @@ def apply_int8_layer(layer, p, x: jax.Array) -> jax.Array:
         acc = jax.lax.conv_general_dilated(
             x.astype(jnp.int32)[None] if squeeze else x.astype(jnp.int32),
             p["w"].astype(jnp.int32),
-            window_strides=(conv.stride, conv.stride),
-            padding=[(conv.padding, conv.padding)] * 2,
+            window_strides=conv.stride,
+            padding=[(p_, p_) for p_ in conv.padding],
             dimension_numbers=("NCHW", "OIHW", "NCHW"),
             feature_group_count=conv.channels if depthwise else 1,
         )
@@ -113,6 +117,15 @@ def apply_int8_layer(layer, p, x: jax.Array) -> jax.Array:
         if isinstance(layer, FusedConvPool):
             if layer.activation == "relu":
                 acc = jnp.maximum(acc, 0)  # relu in accumulator domain
+            if layer.pool == "avg":
+                # Canonical fused-avg order: int32 window SUM, then one
+                # requantization with the divisor folded in (f32 division —
+                # same single rounding as the simulator/Pallas/C backends).
+                pkh, pkw = layer.pool_kernel
+                s = nn.sumpool2d(acc, layer.pool_kernel, layer.pool_stride)
+                m = p["m"] / jnp.float32(pkh * pkw)
+                return (requantize_per_channel(s, m) if depthwise
+                        else requantize(s, m))
             y = (requantize_per_channel(acc, p["m"]) if depthwise
                  else requantize(acc, p["m"]))
             return nn.maxpool2d(y, layer.pool_kernel, layer.pool_stride)

@@ -15,11 +15,15 @@ body differs.  Differences:
 * operands are int8; the k² MXU dots request ``preferred_element_type=
   jnp.int32`` (the TPU int8 matmul path);
 * bias is added in the int32 accumulator scale (CMSIS-NN bias convention);
-* the pooling max runs in the *accumulator* domain and the requantization
-  (``repro.core.quantize.requantize`` — shared with the eager simulator and
-  the C emitter) runs once on the pooled tile.  Requantization is monotone
-  (positive multiplier, round-half-even, saturate), so max-then-requant is
-  bit-identical to the simulator's requant-then-max order.
+* the pooling reduction runs in the *accumulator* domain and the
+  requantization (``repro.core.quantize.requantize`` — shared with the eager
+  simulator and the C emitter) runs once on the pooled tile.  For max
+  pooling, requantization is monotone (positive multiplier, round-half-even,
+  saturate), so max-then-requant is bit-identical to the simulator's
+  requant-then-max order.  For **average** pooling the kernel takes the
+  int32 window *sum* and folds the ``1/(pkh·pkw)`` divisor into the requant
+  multiplier (single f32 division — the canonical fused-avg order every
+  int8 backend shares), CMSIS-style.
 
 ``fused_conv_pool_q8`` is the jitted entry point with the same ``impl``
 contract as the float ops wrapper: ``"auto"`` is always a *compiled* path —
@@ -32,28 +36,31 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.graph import _pair
 from repro.core.quantize import requantize, requantize_per_channel
 from repro.kernels.conv_pool.kernel import conv_pool_call, has_compiled_pallas_backend
 
 
 def _kernel_q8(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
-               k, activation, multiplier, out_w, row_block):
-    cs, pk, ps, R = conv_stride, pool_k, pool_stride, row_block
+               k, activation, pool, multiplier, out_w, row_block):
+    (csh, csw), (pkh, pkw), (psh, psw) = conv_stride, pool_k, pool_stride
+    kh, kw, R = k[0], k[1], row_block
     x = x_ref[0]  # (window_rows, W, Cin) int8 — this program's halo window
-    w = w_ref[...]  # (k, k, Cin, Cout) int8
+    w = w_ref[...]  # (kh, kw, Cin, Cout) int8
     cin = x.shape[-1]
     cout = w.shape[-1]
     ow = out_w
     # Conv rows this tile's pooled rows consume, relative to the window start.
-    cr = (R - 1) * ps + pk
+    cr = (R - 1) * psh + pkh
 
-    # conv: k² static strided slices, one int8×int8→int32 MXU dot each.
+    # conv: kh·kw static strided slices, one int8×int8→int32 MXU dot each.
     acc = jnp.zeros((cr * ow, cout), jnp.int32)
-    for dz in range(k):
-        rows = x[dz : dz + (cr - 1) * cs + 1 : cs]  # (cr, W, Cin)
-        for dt in range(k):
-            cols = rows[:, dt : dt + (ow - 1) * cs + 1 : cs]  # (cr, ow, Cin)
+    for dz in range(kh):
+        rows = x[dz : dz + (cr - 1) * csh + 1 : csh]  # (cr, W, Cin)
+        for dt in range(kw):
+            cols = rows[:, dt : dt + (ow - 1) * csw + 1 : csw]  # (cr, ow, Cin)
             acc = acc + jax.lax.dot_general(
                 cols.reshape(cr * ow, cin),
                 w[dz, dt],
@@ -67,54 +74,65 @@ def _kernel_q8(x_ref, w_ref, b_ref, o_ref, *, conv_stride, pool_k, pool_stride,
         acc = jnp.maximum(acc, 0)
 
     # pooling reduction in the int32 accumulator domain, all offsets static.
-    pw = (ow - pk) // ps + 1
+    red = jnp.maximum if pool == "max" else jnp.add
+    pw = (ow - pkw) // psw + 1
     pooled_rows = None
-    for j in range(pk):
-        rows = acc[j : j + (R - 1) * ps + 1 : ps]  # (R, ow, Cout)
-        pooled_rows = rows if pooled_rows is None else jnp.maximum(pooled_rows, rows)
+    for j in range(pkh):
+        rows = acc[j : j + (R - 1) * psh + 1 : psh]  # (R, ow, Cout)
+        pooled_rows = rows if pooled_rows is None else red(pooled_rows, rows)
     pooled = None
-    for j in range(pk):
-        cols = pooled_rows[:, j : j + (pw - 1) * ps + 1 : ps]  # (R, pw, Cout)
-        pooled = cols if pooled is None else jnp.maximum(pooled, cols)
-    # In-kernel requantization: int32 → int8 once, on the pooled tile.
-    o_ref[0] = requantize(pooled, multiplier)
+    for j in range(pkw):
+        cols = pooled_rows[:, j : j + (pw - 1) * psw + 1 : psw]  # (R, pw, Cout)
+        pooled = cols if pooled is None else red(pooled, cols)
+    # In-kernel requantization: int32 → int8 once, on the pooled tile.  Avg
+    # folds 1/(pkh·pkw) into the multiplier by f32 division.
+    m = np.float32(multiplier)
+    if pool == "avg":
+        m = m / np.float32(pkh * pkw)
+    o_ref[0] = requantize(pooled, m)
 
 
 def _kernel_dw_q8(x_ref, w_ref, b_ref, o_ref, m_ref, *, conv_stride, pool_k,
-                  pool_stride, k, activation, out_w, row_block):
+                  pool_stride, k, activation, pool, out_w, row_block):
     """Depthwise sibling of :func:`_kernel_q8`: per-channel int8 VPU
-    multiply-adds instead of the k² MXU dots, and per-*channel* requant
+    multiply-adds instead of the kh·kw MXU dots, and per-*channel* requant
     multipliers (``m_ref``, a (C,) f32 operand — Pallas kernels cannot bake
     array constants in at trace time) broadcast over the pooled tile's lane
     dimension."""
-    cs, pk, ps, R = conv_stride, pool_k, pool_stride, row_block
+    (csh, csw), (pkh, pkw), (psh, psw) = conv_stride, pool_k, pool_stride
+    kh, kw, R = k[0], k[1], row_block
     x = x_ref[0]  # (window_rows, W, C) int8
-    w = w_ref[...]  # (k, k, 1, C) int8
+    w = w_ref[...]  # (kh, kw, 1, C) int8
     ow = out_w
-    cr = (R - 1) * ps + pk
+    cr = (R - 1) * psh + pkh
 
     acc = jnp.zeros((cr, ow, x.shape[-1]), jnp.int32)
-    for dz in range(k):
-        rows = x[dz : dz + (cr - 1) * cs + 1 : cs]  # (cr, W, C)
-        for dt in range(k):
-            cols = rows[:, dt : dt + (ow - 1) * cs + 1 : cs]  # (cr, ow, C)
+    for dz in range(kh):
+        rows = x[dz : dz + (cr - 1) * csh + 1 : csh]  # (cr, W, C)
+        for dt in range(kw):
+            cols = rows[:, dt : dt + (ow - 1) * csw + 1 : csw]  # (cr, ow, C)
             acc = acc + cols.astype(jnp.int32) * w[dz, dt].astype(jnp.int32)
     if b_ref is not None:
         acc = acc + b_ref[...]  # int32, accumulator scale
     if activation == "relu":
         acc = jnp.maximum(acc, 0)
 
-    pw = (ow - pk) // ps + 1
+    red = jnp.maximum if pool == "max" else jnp.add
+    pw = (ow - pkw) // psw + 1
     pooled_rows = None
-    for j in range(pk):
-        rows = acc[j : j + (R - 1) * ps + 1 : ps]
-        pooled_rows = rows if pooled_rows is None else jnp.maximum(pooled_rows, rows)
+    for j in range(pkh):
+        rows = acc[j : j + (R - 1) * psh + 1 : psh]
+        pooled_rows = rows if pooled_rows is None else red(pooled_rows, rows)
     pooled = None
-    for j in range(pk):
-        cols = pooled_rows[:, j : j + (pw - 1) * ps + 1 : ps]
-        pooled = cols if pooled is None else jnp.maximum(pooled, cols)
-    # per-channel requantization: (C,) multipliers broadcast over (R, pw, C).
-    o_ref[0] = requantize(pooled, m_ref[...])
+    for j in range(pkw):
+        cols = pooled_rows[:, j : j + (pw - 1) * psw + 1 : psw]
+        pooled = cols if pooled is None else red(pooled, cols)
+    # per-channel requantization: (C,) multipliers broadcast over (R, pw, C);
+    # avg folds the divisor in by (traced) f32 division.
+    m = m_ref[...]
+    if pool == "avg":
+        m = m / np.float32(pkh * pkw)
+    o_ref[0] = requantize(pooled, m)
 
 
 def conv_pool_q8(
@@ -123,10 +141,11 @@ def conv_pool_q8(
     b: jax.Array | None,  # (Cout,) int32, accumulator scale
     *,
     multiplier: float,  # requant multiplier in_scale·w_scale/out_scale
-    conv_stride: int = 1,
-    pool_k: int = 2,
-    pool_stride: int = 2,
+    conv_stride=1,
+    pool_k=2,
+    pool_stride=2,
     activation: str = "relu",
+    pool: str = "max",
     interpret: bool | None = None,
     row_block: int | None = None,
 ) -> jax.Array:
@@ -137,8 +156,9 @@ def conv_pool_q8(
     out = conv_pool_call(
         x, w, b,
         kernel_factory=lambda ow, rb: functools.partial(
-            _kernel_q8, conv_stride=conv_stride, pool_k=pool_k,
-            pool_stride=pool_stride, k=w.shape[0], activation=activation,
+            _kernel_q8, conv_stride=_pair(conv_stride), pool_k=_pair(pool_k),
+            pool_stride=_pair(pool_stride), k=(w.shape[0], w.shape[1]),
+            activation=activation, pool=pool,
             multiplier=float(multiplier), out_w=ow, row_block=rb,
         ),
         out_dtype=jnp.int8,
@@ -149,16 +169,20 @@ def conv_pool_q8(
 
 
 def _xla_conv_pool_q8(x, w, b, *, multiplier, conv_stride, padding, pool_k,
-                      pool_stride, activation):
+                      pool_stride, activation, pool):
     """Fused XLA int8 realization on the NCHW input: the compiled fallback
     for backends without a compiled Pallas lowering.  Follows the simulator's
-    op order (conv → bias → act → requant → pool) so bit-exactness is by
-    construction, and XLA fuses the chain inside the enclosing jit."""
+    op order (max: conv → bias → act → requant → pool; avg: conv → bias →
+    act → int32 window sum → one requant with the divisor folded in) so
+    bit-exactness is by construction, and XLA fuses the chain inside the
+    enclosing jit."""
+    sh, sw = _pair(conv_stride)
+    ph, pw = _pair(padding)
     acc = jax.lax.conv_general_dilated(
         x.astype(jnp.int32),
         w.astype(jnp.int32),
-        window_strides=(conv_stride, conv_stride),
-        padding=[(padding, padding)] * 2,
+        window_strides=(sh, sw),
+        padding=[(ph, ph), (pw, pw)],
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
     )
     if b is not None:
@@ -167,31 +191,37 @@ def _xla_conv_pool_q8(x, w, b, *, multiplier, conv_stride, padding, pool_k,
         acc = jnp.maximum(acc, 0)
     from repro.core import nn as core_nn
 
+    if pool == "avg":
+        pkh, pkw = _pair(pool_k)
+        s = core_nn.sumpool2d(acc, pool_k, pool_stride)
+        return requantize(s, np.float32(multiplier) / np.float32(pkh * pkw))
     return core_nn.maxpool2d(requantize(acc, multiplier), pool_k, pool_stride)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("multiplier", "conv_stride", "padding", "pool_k",
-                     "pool_stride", "activation", "impl", "interpret",
+                     "pool_stride", "activation", "pool", "impl", "interpret",
                      "row_block"),
 )
 def fused_conv_pool_q8(
     x: jax.Array,  # (Cin, H, W) or (N, Cin, H, W) int8 — paper/PyTorch layout
-    w: jax.Array,  # (Cout, Cin, k, k) int8
+    w: jax.Array,  # (Cout, Cin, kh, kw) int8
     b: jax.Array | None = None,  # (Cout,) int32
     *,
     multiplier: float = 1.0,
-    conv_stride: int = 1,
-    padding: int = 0,
-    pool_k: int = 2,
-    pool_stride: int = 2,
+    conv_stride=1,
+    padding=0,
+    pool_k=2,
+    pool_stride=2,
     activation: str = "relu",
+    pool: str = "max",
     impl: str = "auto",  # "auto" | "pallas" | "xla"
     interpret: bool | None = None,
     row_block: int | None = None,
 ) -> jax.Array:
-    """Returns int8 (Cout, PH, PW) or (N, Cout, PH, PW)."""
+    """Returns int8 (Cout, PH, PW) or (N, Cout, PH, PW).  Geometry is
+    per-axis (ints broadcast); ``pool`` selects the fused reduction."""
     squeeze = x.ndim == 3
     if squeeze:
         x = x[None]
@@ -202,22 +232,23 @@ def fused_conv_pool_q8(
         out = _xla_conv_pool_q8(
             x, w, b, multiplier=multiplier, conv_stride=conv_stride,
             padding=padding, pool_k=pool_k, pool_stride=pool_stride,
-            activation=activation,
+            activation=activation, pool=pool,
         )
         return out[0] if squeeze else out
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
 
+    ph_, pw_ = _pair(padding)
     xh = jnp.transpose(x, (0, 2, 3, 1))  # NHWC (TPU lanes-last)
-    if padding:
+    if ph_ or pw_:
         # Symmetric quantization: the int8 zero point is 0, so zero padding
         # is exact.
-        xh = jnp.pad(xh, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+        xh = jnp.pad(xh, ((0, 0), (ph_, ph_), (pw_, pw_), (0, 0)))
     wh = jnp.transpose(w, (2, 3, 1, 0))  # HWIO
     out = conv_pool_q8(
         xh, wh, b, multiplier=multiplier, conv_stride=conv_stride,
         pool_k=pool_k, pool_stride=pool_stride, activation=activation,
-        interpret=interpret, row_block=row_block,
+        pool=pool, interpret=interpret, row_block=row_block,
     )
     out = jnp.transpose(out, (0, 3, 1, 2))  # NCHW
     return out[0] if squeeze else out
@@ -234,10 +265,11 @@ def depthwise_conv_pool_q8(
     b: jax.Array | None,  # (C,) int32, accumulator scale
     *,
     multiplier,  # tuple of C floats: per-channel requant multipliers
-    conv_stride: int = 1,
-    pool_k: int = 1,
-    pool_stride: int = 1,
+    conv_stride=1,
+    pool_k=1,
+    pool_stride=1,
     activation: str = "relu",
+    pool: str = "max",
     interpret: bool | None = None,
     row_block: int | None = None,
 ) -> jax.Array:
@@ -253,9 +285,9 @@ def depthwise_conv_pool_q8(
     out = conv_pool_call(
         x, w, b,
         kernel_factory=lambda ow, rb: functools.partial(
-            _kernel_dw_q8, conv_stride=conv_stride, pool_k=pool_k,
-            pool_stride=pool_stride, k=w.shape[0], activation=activation,
-            out_w=ow, row_block=rb,
+            _kernel_dw_q8, conv_stride=_pair(conv_stride), pool_k=_pair(pool_k),
+            pool_stride=_pair(pool_stride), k=(w.shape[0], w.shape[1]),
+            activation=activation, pool=pool, out_w=ow, row_block=rb,
         ),
         out_dtype=jnp.int8,
         conv_stride=conv_stride, pool_k=pool_k, pool_stride=pool_stride,
@@ -266,16 +298,19 @@ def depthwise_conv_pool_q8(
 
 
 def _xla_depthwise_conv_pool_q8(x, w, b, *, multiplier, conv_stride, padding,
-                                pool_k, pool_stride, activation):
+                                pool_k, pool_stride, activation, pool):
     """Fused XLA int8 grouped-conv realization on the NCHW input: the
     compiled fallback for backends without a compiled Pallas lowering.
-    Simulator op order (conv → bias → act → requant → pool), per-channel
+    Simulator op order (max: conv → bias → act → requant → pool; avg:
+    window sum in the accumulator then one requant), per-channel
     requantization."""
+    sh, sw = _pair(conv_stride)
+    ph, pw = _pair(padding)
     acc = jax.lax.conv_general_dilated(
         x.astype(jnp.int32),
         w.astype(jnp.int32),
-        window_strides=(conv_stride, conv_stride),
-        padding=[(padding, padding)] * 2,
+        window_strides=(sh, sw),
+        padding=[(ph, ph), (pw, pw)],
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
         feature_group_count=w.shape[0],
     )
@@ -285,6 +320,11 @@ def _xla_depthwise_conv_pool_q8(x, w, b, *, multiplier, conv_stride, padding,
         acc = jnp.maximum(acc, 0)
     from repro.core import nn as core_nn
 
+    if pool == "avg":
+        pkh, pkw = _pair(pool_k)
+        s = core_nn.sumpool2d(acc, pool_k, pool_stride)
+        m = np.asarray(multiplier, np.float32) / np.float32(pkh * pkw)
+        return requantize_per_channel(s, m)
     y = requantize_per_channel(acc, jnp.asarray(multiplier, jnp.float32))
     return core_nn.maxpool2d(y, pool_k, pool_stride)
 
@@ -292,20 +332,21 @@ def _xla_depthwise_conv_pool_q8(x, w, b, *, multiplier, conv_stride, padding,
 @functools.partial(
     jax.jit,
     static_argnames=("multiplier", "conv_stride", "padding", "pool_k",
-                     "pool_stride", "activation", "impl", "interpret",
+                     "pool_stride", "activation", "pool", "impl", "interpret",
                      "row_block"),
 )
 def fused_depthwise_conv_pool_q8(
     x: jax.Array,  # (C, H, W) or (N, C, H, W) int8 — paper/PyTorch layout
-    w: jax.Array,  # (C, 1, k, k) int8, grouped OIHW
+    w: jax.Array,  # (C, 1, kh, kw) int8, grouped OIHW
     b: jax.Array | None = None,  # (C,) int32
     *,
     multiplier=(1.0,),  # tuple of C floats (per-channel; static/hashable)
-    conv_stride: int = 1,
-    padding: int = 0,
-    pool_k: int = 1,
-    pool_stride: int = 1,
+    conv_stride=1,
+    padding=0,
+    pool_k=1,
+    pool_stride=1,
     activation: str = "relu",
+    pool: str = "max",
     impl: str = "auto",  # "auto" | "pallas" | "xla"
     interpret: bool | None = None,
     row_block: int | None = None,
@@ -314,7 +355,8 @@ def fused_depthwise_conv_pool_q8(
 
     ``pool_k == pool_stride == 1`` (the default) runs the un-pooled
     depthwise+act+requant block — DS-CNN's shape — through the same fused
-    kernel; the int32 accumulator still never leaves VMEM/VREGs.
+    kernel; the int32 accumulator still never leaves VMEM/VREGs.  Geometry
+    is per-axis (ints broadcast); ``pool`` selects the fused reduction.
     """
     squeeze = x.ndim == 3
     if squeeze:
@@ -326,20 +368,21 @@ def fused_depthwise_conv_pool_q8(
         out = _xla_depthwise_conv_pool_q8(
             x, w, b, multiplier=multiplier, conv_stride=conv_stride,
             padding=padding, pool_k=pool_k, pool_stride=pool_stride,
-            activation=activation,
+            activation=activation, pool=pool,
         )
         return out[0] if squeeze else out
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
 
+    ph_, pw_ = _pair(padding)
     xh = jnp.transpose(x, (0, 2, 3, 1))  # NHWC (TPU lanes-last)
-    if padding:
-        xh = jnp.pad(xh, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
-    wh = jnp.transpose(w, (2, 3, 1, 0))  # (k, k, 1, C)
+    if ph_ or pw_:
+        xh = jnp.pad(xh, ((0, 0), (ph_, ph_), (pw_, pw_), (0, 0)))
+    wh = jnp.transpose(w, (2, 3, 1, 0))  # (kh, kw, 1, C)
     out = depthwise_conv_pool_q8(
         xh, wh, b, multiplier=multiplier, conv_stride=conv_stride,
         pool_k=pool_k, pool_stride=pool_stride, activation=activation,
-        interpret=interpret, row_block=row_block,
+        pool=pool, interpret=interpret, row_block=row_block,
     )
     out = jnp.transpose(out, (0, 3, 1, 2))  # NCHW
     return out[0] if squeeze else out

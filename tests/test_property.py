@@ -38,6 +38,7 @@ import numpy as np
 from repro.core import fusion, nn, pingpong, planner, schedule
 from repro.core.graph import (
     Add,
+    AvgPool2d,
     Concat,
     Conv2d,
     DAGGraph,
@@ -57,7 +58,13 @@ jax.config.update("jax_platform_name", "cpu")
 
 @st.composite
 def random_convnet(draw):
-    """Random (valid) conv/pool/linear chains in the paper's layer family."""
+    """Random (valid) conv/pool/linear chains in the paper's layer family.
+
+    Kernels, strides and pool windows are drawn *per axis* (rectangular
+    geometry, ISSUE 10) and pools draw Max or Avg — including per-axis
+    overlap mixes (``sh ≥ kh`` with ``sw < kw``) the fusion pass must
+    decline without changing the network's output.
+    """
     h = draw(st.sampled_from([16, 20, 24, 32]))
     c = draw(st.integers(1, 3))
     layers = [Input(shape=(c, h, h), name="input")]
@@ -65,21 +72,28 @@ def random_convnet(draw):
     n_blocks = draw(st.integers(1, 3))
     i = 0
     for _ in range(n_blocks):
-        k = draw(st.sampled_from([3, 5]))
-        if cur[1] < k + 2:
+        kh = draw(st.sampled_from([3, 5]))
+        kw = draw(st.sampled_from([3, 5]))
+        if cur[1] < kh + 2 or cur[2] < kw + 2:
             break
         out_c = draw(st.sampled_from([2, 4, 6, 8]))
-        conv = Conv2d(cur[0], out_c, kernel_size=k, stride=1,
-                      padding=draw(st.sampled_from([0, k // 2])), name=f"conv{i}")
+        conv = Conv2d(cur[0], out_c, kernel_size=(kh, kw), stride=1,
+                      padding=(draw(st.sampled_from([0, kh // 2])),
+                               draw(st.sampled_from([0, kw // 2]))),
+                      name=f"conv{i}")
         layers.append(conv)
         cur = conv.out_shape(cur)
         if draw(st.booleans()):
             layers.append(ReLU(name=f"relu{i}"))
         pk = draw(st.sampled_from([2, 3]))
-        ps = draw(st.sampled_from([pk, pk - 1])) or pk  # stride ≥ or < kernel
-        ps = max(ps, 1)
-        if cur[1] >= pk:
-            layers.append(MaxPool2d(kernel_size=pk, stride=ps, name=f"pool{i}"))
+        # per-axis strides: ≥ kernel (in-place eligible), < kernel (overlap),
+        # or mixed (W-only overlap — the fusion pass must decline in-place)
+        psh = max(draw(st.sampled_from([pk, pk - 1])), 1)
+        psw = max(draw(st.sampled_from([pk, pk - 1])), 1)
+        pool_cls = draw(st.sampled_from([MaxPool2d, AvgPool2d]))
+        if cur[1] >= pk and cur[2] >= pk:
+            layers.append(pool_cls(kernel_size=pk, stride=(psh, psw),
+                                   name=f"pool{i}"))
             cur = layers[-1].out_shape(cur)
         i += 1
     layers.append(Flatten(name="flatten"))
@@ -380,18 +394,23 @@ def random_streaming_chain(draw):
     for i in range(draw(st.integers(1, 3))):
         kind = draw(st.sampled_from(["conv", "dw", "pool"]))
         if kind == "conv":
-            k = draw(st.sampled_from([1, 3]))
+            kh = draw(st.sampled_from([1, 3]))
+            kw = draw(st.sampled_from([1, 3]))
             layer = Conv2d(cur[0], draw(st.sampled_from([2, 4])),
-                           kernel_size=k, stride=draw(st.sampled_from([1, 2])),
-                           padding=draw(st.integers(0, k - 1)), name=f"conv{i}")
+                           kernel_size=(kh, kw),
+                           stride=draw(st.sampled_from([1, 2])),
+                           padding=(draw(st.integers(0, kh - 1)),
+                                    draw(st.integers(0, kw - 1))),
+                           name=f"conv{i}")
         elif kind == "dw":
             layer = DepthwiseConv2d(cur[0], kernel_size=3, stride=1,
                                     padding=draw(st.integers(0, 1)),
                                     name=f"dw{i}")
         else:
             k = draw(st.sampled_from([2, 3]))
-            layer = MaxPool2d(kernel_size=k, stride=draw(st.sampled_from([1, 2])),
-                              name=f"pool{i}")
+            pool_cls = draw(st.sampled_from([MaxPool2d, AvgPool2d]))
+            layer = pool_cls(kernel_size=k, stride=draw(st.sampled_from([1, 2])),
+                             name=f"pool{i}")
         nxt = layer.out_shape(cur)
         if nxt[1] < 2 or nxt[2] < 1:
             break

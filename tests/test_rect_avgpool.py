@@ -1,0 +1,595 @@
+"""Rectangular kernels + AvgPool2d through every layer of the stack (ISSUE 10).
+
+Covers the acceptance criteria:
+  * per-axis ``(kh, kw)`` geometry: ints and pairs normalize to the same
+    spec (equality, ``spec_key``), so all pre-ISSUE square call sites and
+    their pinned plans are byte-identical;
+  * ``AvgPool2d`` semantics pinned against PyTorch's defaults
+    (``count_include_pad=True``): zero-padded window sums divided by the
+    *full* ``kh·kw`` — hand-computed expected values, not a re-derivation;
+  * int8 average pooling: int32 window sum, single requantize with the
+    ``1/(kh·kw)`` divisor folded into the f32 multiplier (round-half-even),
+    pinned on hand values and bit-exact through kernels, C and serving;
+  * fusion eligibility is per-axis: ``sh ≥ kh`` with ``sw < kw`` (W-only
+    overlap) must NOT fuse — the ISSUE-10 satellite regression — while
+    H-only overlap line-buffers and ``s ≥ k`` (both axes) fuses in place,
+    for avg as well as max;
+  * the payoff workloads — ``ds_cnn_kws()`` (true Zhang et al. DS-CNN:
+    rectangular ``(10,4)`` stem, AvgPool head) and ``mobilenet_v1(0.25)``
+    — run end-to-end on all four paths: float executor, int8 (bit-exact vs
+    the simulator), gcc-compiled C (differential / bit-exact) and the
+    serving engine, with planner byte rows pinned (reordered ≤ CMSIS);
+  * ``PosteriorSmoother`` (streaming KWS posterior smoothing) and streaming
+    AvgPool2d chains against the sliding-window oracle.
+"""
+import shutil
+import subprocess
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    export_c,
+    fusion,
+    nn,
+    pingpong,
+    planner,
+    quantize,
+    schedule,
+    streaming,
+)
+from repro.core.graph import (
+    AvgPool2d,
+    Conv2d,
+    DepthwiseConv2d,
+    Flatten,
+    FusedConvPool,
+    Input,
+    Linear,
+    MaxPool2d,
+    SequentialGraph,
+    ds_cnn_kws,
+    mobilenet_v1,
+    spec_key,
+)
+from repro.quant import exec as qexec
+
+jax.config.update("jax_platform_name", "cpu")
+
+needs_gcc = pytest.mark.skipif(shutil.which("gcc") is None, reason="gcc not available")
+
+
+def _gcc_run(src: str, x: np.ndarray, dtype) -> np.ndarray:
+    with tempfile.TemporaryDirectory() as td:
+        c, b = Path(td) / "net.c", Path(td) / "net"
+        c.write_text(src)
+        subprocess.run(["gcc", "-O2", "-std=c99", str(c), "-o", str(b), "-lm"],
+                       check=True, capture_output=True)
+        out = subprocess.run([str(b)], input=np.asarray(x, dtype).tobytes(),
+                             capture_output=True, check=True).stdout
+    return np.frombuffer(out, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-axis spec normalization
+# ---------------------------------------------------------------------------
+
+
+def test_int_and_pair_geometry_are_the_same_spec():
+    """Int shorthand and explicit pairs are one spec: equality and spec_key
+    agree, so every pre-existing square call site (and its pinned plan) is
+    untouched by the per-axis refactor."""
+    assert Conv2d(1, 8, kernel_size=5) == Conv2d(1, 8, kernel_size=(5, 5))
+    assert spec_key(Conv2d(1, 8, kernel_size=5, stride=2, padding=2)) == \
+        spec_key(Conv2d(1, 8, kernel_size=(5, 5), stride=(2, 2), padding=(2, 2)))
+    assert MaxPool2d(2) == MaxPool2d((2, 2), (2, 2))
+    assert AvgPool2d(2) == AvgPool2d((2, 2), (2, 2))
+    assert DepthwiseConv2d(4, kernel_size=3) == DepthwiseConv2d(4, kernel_size=(3, 3))
+    # rectangular specs differ from their transposes
+    assert spec_key(Conv2d(1, 8, kernel_size=(10, 4))) != \
+        spec_key(Conv2d(1, 8, kernel_size=(4, 10)))
+    # pool family kinds never collide
+    assert spec_key(MaxPool2d(2)) != spec_key(AvgPool2d(2))
+
+
+def test_rect_out_shapes_and_macs():
+    conv = Conv2d(1, 64, kernel_size=(10, 4), stride=(2, 2), padding=(5, 1))
+    assert conv.out_shape((1, 49, 10)) == (64, 25, 5)
+    assert conv.macs((1, 49, 10)) == 64 * 25 * 5 * 1 * 10 * 4
+    assert conv.weight_count() == 64 * 1 * 10 * 4
+    pool = AvgPool2d(kernel_size=(25, 5), stride=(25, 5))
+    assert pool.out_shape((64, 25, 5)) == (64, 1, 1)
+    assert pool.macs((64, 25, 5)) == 0  # data movement costs 0 MACs
+    dw = DepthwiseConv2d(8, kernel_size=(3, 1), padding=(1, 0))
+    assert dw.out_shape((8, 6, 5)) == (8, 6, 5)
+    assert dw.macs((8, 6, 5)) == 8 * 6 * 5 * 3 * 1
+
+
+# ---------------------------------------------------------------------------
+# AvgPool2d float semantics: pinned against PyTorch's defaults
+# ---------------------------------------------------------------------------
+
+
+def test_padded_avgpool_pinned_pytorch_count_include_pad():
+    """Hand-pinned values for AvgPool2d(2, 2, padding=1) on a 4×4 ramp —
+    exactly ``torch.nn.AvgPool2d(2, 2, 1)`` (count_include_pad=True):
+    zero-pad, window-sum, divide by the full 4 even on padded borders."""
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4)
+    y = nn.apply_layer(AvgPool2d(kernel_size=2, stride=2, padding=1), {}, x)
+    expected = np.array([[[0.0, 0.75, 0.75],
+                          [3.0, 7.5, 4.5],
+                          [3.0, 6.75, 3.75]]], np.float32)
+    np.testing.assert_array_equal(np.asarray(y), expected)
+
+
+def test_unpadded_avgpool_matches_mean():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 6, 4))
+    y = nn.avgpool2d(x, (3, 2), (3, 2))
+    ref = np.asarray(x).reshape(3, 2, 3, 2, 2).mean(axis=(2, 4))
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-6, atol=1e-6)
+
+
+def test_int8_avgpool_pinned_round_half_even():
+    """int32 window sum, requantize with M = f32(1)/f32(k·k): ties round to
+    even (CMSIS/nearbyintf semantics), pinned by hand."""
+    def pool(vals):
+        x = jnp.asarray(np.array(vals, np.int8).reshape(1, 2, 2))
+        return int(np.asarray(quantize.int8_avgpool(x, 2, 2))[0, 0, 0])
+
+    assert pool([1, 2, 3, 4]) == 2    # 10/4 = 2.5  -> 2 (to even)
+    assert pool([1, 2, 3, 5]) == 3    # 11/4 = 2.75 -> 3
+    assert pool([1, 1, 2, 2]) == 2    # 6/4  = 1.5  -> 2 (to even)
+    assert pool([-1, -2, -3, -4]) == -2   # -2.5 -> -2 (to even)
+    assert pool([127, 127, 127, 127]) == 127
+
+
+# ---------------------------------------------------------------------------
+# Rectangular fused kernels vs the oracle (XLA fallback + Pallas interpret)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl,interpret", [("xla", None), ("pallas", True)])
+@pytest.mark.parametrize("pool", ["max", "avg"])
+def test_rect_fused_conv_pool_kernel_matches_oracle(impl, interpret, pool):
+    """The true-DS-CNN stem geometry — (10,4) kernel, (2,2) stride, (5,1)
+    padding — plus a rectangular (5,1)-window pool, both reductions."""
+    from repro.kernels.conv_pool.ops import fused_conv_pool
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 49, 10)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 1, 10, 4)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    y = fused_conv_pool(x, w, b, conv_stride=(2, 2), padding=(5, 1),
+                        pool_k=(5, 1), pool_stride=(5, 1), activation="relu",
+                        pool=pool, impl=impl, interpret=interpret)
+    ref = jax.nn.relu(nn.conv2d(x, w, b, stride=(2, 2), padding=(5, 1)))
+    ref = (nn.avgpool2d if pool == "avg" else nn.maxpool2d)(ref, (5, 1), (5, 1))
+    assert y.shape == (8, 5, 5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl,interpret", [("xla", None), ("pallas", True)])
+def test_rect_depthwise_avg_kernel_matches_oracle(impl, interpret):
+    from repro.kernels.conv_pool.depthwise import fused_depthwise_conv_pool
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((4, 12, 6)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 1, 3, 1)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4,)), jnp.float32)
+    y = fused_depthwise_conv_pool(x, w, b, conv_stride=1, padding=(1, 0),
+                                  pool_k=(2, 3), pool_stride=(2, 3),
+                                  activation="relu", pool="avg",
+                                  impl=impl, interpret=interpret)
+    ref = jax.nn.relu(nn.depthwise_conv2d(x, w, b, stride=1, padding=(1, 0)))
+    ref = nn.avgpool2d(ref, (2, 3), (2, 3))
+    assert y.shape == (4, 6, 2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("pool", ["max", "avg"])
+def test_rect_q8_kernel_bit_exact_vs_xla_fallback(pool):
+    """The int8 Pallas kernel (interpret) and the XLA q8 fallback agree
+    bit-for-bit on rectangular fused windows — same int32-sum +
+    single-requant order."""
+    from repro.quant.kernel_q8 import fused_conv_pool_q8
+
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.integers(-128, 128, (2, 20, 8)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 128, (4, 2, 5, 3)), jnp.int8)
+    b = jnp.asarray(rng.integers(-1000, 1000, (4,)), jnp.int32)
+    kw = dict(conv_stride=(2, 1), padding=(2, 1), pool_k=(2, 2),
+              pool_stride=(2, 2), activation="relu", pool=pool,
+              multiplier=0.003173828125)
+    y_pl = fused_conv_pool_q8(x, w, b, impl="pallas", interpret=True, **kw)
+    y_xla = fused_conv_pool_q8(x, w, b, impl="xla", **kw)
+    np.testing.assert_array_equal(np.asarray(y_pl), np.asarray(y_xla))
+
+
+# ---------------------------------------------------------------------------
+# Per-axis fusion eligibility (satellite: W-only overlap regression)
+# ---------------------------------------------------------------------------
+
+
+def _pool_net(pool_layer):
+    return SequentialGraph([
+        Input(shape=(2, 12, 12), name="input"),
+        Conv2d(2, 4, kernel_size=3, padding=1, name="conv"),
+        ReLU_named("relu"),
+        pool_layer,
+        Flatten(name="flatten"),
+        Linear(int(np.prod(pool_layer.out_shape((4, 12, 12)))), 3, name="fc"),
+    ])
+
+
+def ReLU_named(name):
+    from repro.core.graph import ReLU
+    return ReLU(name=name)
+
+
+def test_w_only_overlap_pool_is_never_fused():
+    """REGRESSION (ISSUE 10 satellite): ``sh ≥ kh`` but ``sw < kw`` has no
+    in-place or line-buffer formulation — the fusion pass must keep the pool
+    standalone on both the sequential and DAG paths, and the fused graph
+    must still match the oracle."""
+    from repro.core.graph import DAGGraph
+
+    g = _pool_net(MaxPool2d(kernel_size=(2, 3), stride=(2, 1), name="pool"))
+    fused = fusion.fuse(g)
+    assert all(l.kind != "FusedConvPool" for l in fused.layers)
+    fused_dag = fusion.fuse_dag(DAGGraph.from_sequential(g))
+    assert all(n.layer.kind != "FusedConvPool" for n in fused_dag.nodes)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 12))
+    np.testing.assert_allclose(
+        np.asarray(nn.forward(fused, params, x)),
+        np.asarray(nn.forward(g, params, x)), rtol=1e-5, atol=1e-5)
+
+
+def test_h_only_overlap_still_line_buffers():
+    """The transpose case (sh < kh, sw ≥ kw) keeps the ISSUE-7 line-buffer
+    fusion, with rows priced from the H components."""
+    g = _pool_net(MaxPool2d(kernel_size=(3, 2), stride=(1, 2), name="pool"))
+    fused = fusion.fuse(g)
+    assert fused.layers[1].kind == "FusedConvPool"
+    assert fused.layers[1].line_buffer_rows == 2  # kh - sh
+    plan = planner.plan_pingpong(g)
+    planner.verify_plan(plan)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(2)))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 12, 12))
+    y_arena, _ = pingpong.run_with_arena(fused, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_arena),
+                               np.asarray(nn.forward(g, params, x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_avgpool_fusion_eligibility():
+    """Avg fuses only at stride ≥ kernel on BOTH axes (sum-then-requant has
+    no line-buffer form); overlapping avg stays standalone."""
+    g_ok = _pool_net(AvgPool2d(kernel_size=2, stride=2, name="pool"))
+    fused = fusion.fuse(g_ok)
+    assert fused.layers[1].kind == "FusedConvPool"
+    assert fused.layers[1].pool == "avg"
+    assert fused.layers[1].line_buffer_rows == 0
+
+    g_overlap = _pool_net(AvgPool2d(kernel_size=3, stride=2, name="pool"))
+    assert all(l.kind != "FusedConvPool" for l in fusion.fuse(g_overlap).layers)
+
+    params = fusion.rename_params(fused, nn.init_params(g_ok, jax.random.PRNGKey(4)))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 12, 12))
+    np.testing.assert_allclose(np.asarray(nn.forward(fused, params, x)),
+                               np.asarray(nn.forward(g_ok, params, x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_conv_pool_constructor_guards():
+    conv = Conv2d(2, 4, kernel_size=3, padding=1, name="c")
+    with pytest.raises(ValueError, match="W-only pool overlap"):
+        FusedConvPool(conv=conv, pool_kernel=(2, 3), pool_stride=(2, 1))
+    with pytest.raises(ValueError, match="fused average pooling"):
+        FusedConvPool(conv=conv, pool="avg", pool_kernel=3, pool_stride=2)
+    with pytest.raises(ValueError, match="pool must be"):
+        FusedConvPool(conv=conv, pool="median")
+    # valid rectangular forms construct
+    FusedConvPool(conv=conv, pool_kernel=(2, 3), pool_stride=(2, 3), pool="avg")
+    FusedConvPool(conv=conv, pool_kernel=(3, 2), pool_stride=(1, 2))  # H line-buffer
+
+
+# ---------------------------------------------------------------------------
+# Standalone AvgPool2d through executors + C (int8 bit-exact)
+# ---------------------------------------------------------------------------
+
+
+def _avg_head_net():
+    return SequentialGraph([
+        Input(shape=(2, 9, 9), name="input"),
+        Conv2d(2, 4, kernel_size=3, name="conv"),
+        ReLU_named("relu"),
+        AvgPool2d(kernel_size=3, stride=2, padding=1, name="pool"),  # overlapped+padded
+        Flatten(name="flatten"),
+        Linear(4 * 4 * 4, 3, name="fc"),
+    ])
+
+
+@needs_gcc
+def test_standalone_padded_avgpool_c_float_and_int8():
+    """Overlapping padded AvgPool2d never fuses — the standalone emitter
+    must match the oracle (float) and the simulator (int8, bit-exact)."""
+    g = _avg_head_net()
+    fused = fusion.fuse(g)
+    assert all(l.kind != "FusedConvPool" for l in fused.layers)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(6)))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(7), (2, 9, 9)), np.float32)
+    y = np.asarray(nn.forward(fused, params, jnp.asarray(x)))
+    src = export_c.generate_c(fused, planner.plan_pingpong(g), params, with_main=True)
+    np.testing.assert_allclose(_gcc_run(src, x, np.float32), y,
+                               rtol=1e-4, atol=1e-5)
+
+    calib = jax.random.normal(jax.random.PRNGKey(8), (8, 2, 9, 9))
+    qm = quantize.quantize(fused, params, calib)
+    x_q = np.asarray(quantize.quantize_input(qm, jnp.asarray(x)), np.int8)
+    y_sim = np.asarray(quantize.simulate_int8_forward(qm, jnp.asarray(x_q)))
+    src8 = export_c.generate_c_int8(
+        qm, planner.plan_pingpong(g, io_dtype_bytes=1), with_main=True)
+    np.testing.assert_array_equal(_gcc_run(src8, x_q, np.int8), y_sim)
+
+
+# ---------------------------------------------------------------------------
+# ds_cnn_kws: the true Zhang et al. DS-CNN, end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def kws_setup():
+    g = ds_cnn_kws()
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(0)))
+    plan = schedule.plan_dag(g)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 49, 10))
+    return g, fused, params, plan, x
+
+
+@pytest.fixture(scope="module")
+def kws_int8(kws_setup):
+    g, fused, params, plan, x = kws_setup
+    calib = jax.random.normal(jax.random.PRNGKey(2), (8, 1, 49, 10))
+    qm = quantize.quantize_dag(fused, params, calib)
+    plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+    x_q = quantize.quantize_input(qm, x)
+    return qm, plan_q, x_q
+
+
+def test_kws_shapes_params_and_avg_fusion(kws_setup):
+    g, fused, *_ = kws_setup
+    shapes = g.shapes()
+    assert shapes["conv1"] == (64, 25, 5)          # (10,4)/s(2,2)/p(5,1) stem
+    assert shapes["dw4"] == shapes["pw4"] == (64, 25, 5)
+    assert shapes["pool"] == (64, 1, 1)            # global AvgPool (25,5)
+    assert shapes["fc"] == (12,)
+    # the head fuses as an average-pool FusedConvPool (s >= k on both axes)
+    heads = [n.layer for n in fused.nodes if n.layer.kind == "FusedConvPool"]
+    assert heads and heads[-1].pool == "avg"
+    assert heads[-1].pool_kernel == (25, 5)
+
+
+def test_kws_planner_bytes_beat_cmsis(kws_setup):
+    g = kws_setup[0]
+    naive = planner.plan_naive(g.to_sequential(), io_dtype_bytes=1)
+    pp = planner.plan_pingpong(g, io_dtype_bytes=1)
+    rd = schedule.plan_dag(g, io_dtype_bytes=1)
+    cm = planner.plan_cmsis_baseline(g)
+    for p in (naive, pp, rd):
+        planner.verify_plan(p)
+    assert naive.activation_bytes() == 72566
+    assert pp.activation_bytes() == 16000
+    assert rd.activation_bytes() == 16000
+    assert cm.activation_bytes() == 18304  # 2×8000 + 2304 B dw im2col scratch
+    assert rd.activation_bytes() < cm.activation_bytes()
+    assert schedule.plan_dag(g).activation_bytes() == 64000  # f32
+    # the rect stride-(2,2) stem rides the H-axis ring extents unchanged
+    sp = streaming.plan_streaming(g, io_dtype_bytes=1)
+    assert sp.emit_stride == 2
+    assert sp.plan.activation_bytes() == 57770
+
+
+def test_kws_float_walker_matches_oracle(kws_setup):
+    g, fused, params, plan, x = kws_setup
+    y_ref = nn.forward_dag(g, params, x)
+    y_walk, _ = pingpong.run_dag_with_arena(fused, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_walk), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kws_int8_walker_bit_exact(kws_int8):
+    qm, plan_q, x_q = kws_int8
+    y_sim = np.asarray(quantize.simulate_int8_dag_forward(qm, x_q))
+    y_walk, _ = qexec.run_int8_dag_with_arena(qm, plan_q, x_q)
+    np.testing.assert_array_equal(np.asarray(y_walk), y_sim)
+
+
+@needs_gcc
+def test_kws_c_float_roundtrip(kws_setup):
+    g, fused, params, plan, x = kws_setup
+    src = export_c.generate_c_dag(fused, plan, params, with_main=True)
+    assert "avgpool" in src  # the fused head renders as an avg reduction
+    y_c = _gcc_run(src, np.asarray(x, np.float32), np.float32)
+    np.testing.assert_allclose(y_c, np.asarray(nn.forward_dag(g, params, x)),
+                               rtol=1e-4, atol=1e-5)
+
+
+@needs_gcc
+def test_kws_c_int8_bit_exact(kws_int8):
+    qm, plan_q, x_q = kws_int8
+    src = export_c.generate_c_int8_dag(qm, plan_q, with_main=True)
+    y_c = _gcc_run(src, np.asarray(x_q, np.int8), np.int8)
+    y_sim = np.asarray(quantize.simulate_int8_dag_forward(qm, x_q))
+    np.testing.assert_array_equal(y_c, y_sim)
+
+
+def test_kws_serving_engine_bit_exact(kws_int8):
+    from repro.serve.cnn_engine import CNNEngine, CoalescePolicy
+
+    qm, plan_q, _ = kws_int8
+    rng = np.random.default_rng(13)
+    xs = jnp.asarray(rng.standard_normal((3, 1, 49, 10)), jnp.float32)
+    xq = np.asarray(quantize.quantize_input(qm, xs))
+    eng = CNNEngine.from_quantized(
+        qm, plan_q, buckets=(1, 2),
+        policy=CoalescePolicy(max_batch=2, max_wait_s=0.001))
+    with eng:
+        reqs, _ = eng.serve(xq)
+    oracle = np.stack([
+        np.asarray(quantize.simulate_int8_dag_forward(qm, jnp.asarray(xq[i])))
+        for i in range(len(xq))])
+    np.testing.assert_array_equal(np.stack([r.y for r in reqs]), oracle)
+
+
+# ---------------------------------------------------------------------------
+# mobilenet_v1(0.25): stride-2 depthwise ladder, end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mbn_setup():
+    g = mobilenet_v1(width=0.25)
+    fused = fusion.fuse_dag(g)
+    params = fusion.rename_params(fused, nn.init_params(g, jax.random.PRNGKey(3)))
+    plan = schedule.plan_dag(g)
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 64, 64))
+    return g, fused, params, plan, x
+
+
+def test_mobilenet_shapes_params_and_plan(mbn_setup):
+    g = mbn_setup[0]
+    shapes = g.shapes()
+    assert shapes["conv0"] == (8, 32, 32)
+    assert shapes["pool"] == (256, 1, 1)
+    assert shapes["fc"] == (10,)
+    assert g.to_sequential().param_count() == 212_906
+    # four stride-2 depthwise stages walk the resolution 32 -> 2
+    s2 = [n.layer for n in g.nodes
+          if n.layer.kind == "DepthwiseConv2d" and n.layer.stride == (2, 2)]
+    assert len(s2) == 4
+    pp = planner.plan_pingpong(g, io_dtype_bytes=1)
+    rd = schedule.plan_dag(g, io_dtype_bytes=1)
+    cm = planner.plan_cmsis_baseline(g)
+    planner.verify_plan(pp)
+    planner.verify_plan(rd)
+    assert pp.activation_bytes() == 28672
+    assert rd.activation_bytes() == 24576
+    assert cm.activation_bytes() == 37888
+    assert rd.activation_bytes() < cm.activation_bytes()
+    assert schedule.plan_dag(g).activation_bytes() == 98304  # f32
+
+
+def test_mobilenet_float_walker_matches_oracle(mbn_setup):
+    g, fused, params, plan, x = mbn_setup
+    y_ref = nn.forward_dag(g, params, x)
+    y_walk, _ = pingpong.run_dag_with_arena(fused, plan, params, x)
+    np.testing.assert_allclose(np.asarray(y_walk), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mobilenet_int8_walker_bit_exact(mbn_setup):
+    g, fused, params, plan, x = mbn_setup
+    calib = jax.random.normal(jax.random.PRNGKey(5), (4, 3, 64, 64))
+    qm = quantize.quantize_dag(fused, params, calib)
+    plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+    x_q = quantize.quantize_input(qm, x)
+    y_sim = np.asarray(quantize.simulate_int8_dag_forward(qm, x_q))
+    y_walk, _ = qexec.run_int8_dag_with_arena(qm, plan_q, x_q)
+    np.testing.assert_array_equal(np.asarray(y_walk), y_sim)
+
+
+@needs_gcc
+def test_mobilenet_c_int8_bit_exact(mbn_setup):
+    g, fused, params, plan, x = mbn_setup
+    calib = jax.random.normal(jax.random.PRNGKey(5), (4, 3, 64, 64))
+    qm = quantize.quantize_dag(fused, params, calib)
+    plan_q = schedule.plan_dag(g, io_dtype_bytes=1)
+    x_q = quantize.quantize_input(qm, x)
+    src = export_c.generate_c_int8_dag(qm, plan_q, with_main=True)
+    y_c = _gcc_run(src, np.asarray(x_q, np.int8), np.int8)
+    y_sim = np.asarray(quantize.simulate_int8_dag_forward(qm, x_q))
+    np.testing.assert_array_equal(y_c, y_sim)
+
+
+# ---------------------------------------------------------------------------
+# PosteriorSmoother (streaming KWS decision smoothing)
+# ---------------------------------------------------------------------------
+
+
+def test_posterior_smoother_mean_mode():
+    sm = streaming.PosteriorSmoother(window=3, mode="mean")
+    assert sm.posterior is None
+    assert sm.update([0.0, 1.0]) == 1
+    # a single flipped frame is outvoted by the running mean
+    assert sm.update([0.6, 0.4]) == 1       # mean (0.3, 0.7)
+    assert sm.update([0.9, 0.1]) == 0       # mean (0.5, 0.5) -> argmax ties to 0
+    np.testing.assert_allclose(sm.posterior, [0.5, 0.5])
+    # window slides: the first frame drops out
+    assert sm.update([0.9, 0.1]) == 0       # mean of last 3: (0.8, 0.2)
+    sm.reset()
+    assert sm.posterior is None
+
+
+def test_posterior_smoother_vote_mode():
+    sm = streaming.PosteriorSmoother(window=3, mode="vote")
+    assert sm.update([0.0, 1.0, 0.0]) == 1
+    assert sm.update([1.0, 0.0, 0.0]) == 0  # 1-1 tie -> smallest label
+    assert sm.update([0.0, 1.0, 0.0]) == 1  # 2 votes for 1
+    assert sm.update([0.0, 0.0, 1.0]) == 0  # window [0,1,2]: 3-way tie -> smallest
+    assert sm.update([0.0, 0.0, 1.0]) == 2  # window [1,2,2] -> label 2
+
+
+def test_posterior_smoother_validation():
+    with pytest.raises(ValueError, match="window"):
+        streaming.PosteriorSmoother(window=0)
+    with pytest.raises(ValueError, match="mode"):
+        streaming.PosteriorSmoother(mode="median")
+    sm = streaming.PosteriorSmoother()
+    sm.update([0.1, 0.9])
+    with pytest.raises(ValueError, match="shape"):
+        sm.update([0.1, 0.2, 0.7])
+
+
+def test_smoothed_stream_suppresses_single_frame_flips():
+    """Majority smoothing over a noisy emission sequence: one corrupted
+    frame must not flip the smoothed decision (Zhang et al. §5)."""
+    emissions = [[0.1, 0.9]] * 3 + [[0.8, 0.2]] + [[0.1, 0.9]] * 3
+    for mode in ("mean", "vote"):
+        sm = streaming.PosteriorSmoother(window=3, mode=mode)
+        labels = [sm.update(e) for e in emissions]
+        assert labels == [1] * len(emissions), mode
+
+
+# ---------------------------------------------------------------------------
+# Streaming AvgPool2d chains vs the sliding oracle
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_chain_with_avgpool_matches_oracle():
+    g = SequentialGraph([
+        Input(shape=(1, 8, 4), name="input"),
+        Conv2d(1, 3, kernel_size=3, padding=1, name="conv"),
+        ReLU_named("relu"),
+        AvgPool2d(kernel_size=2, stride=2, name="pool"),
+        Flatten(name="flatten"),
+        Linear(3 * 4 * 2, 4, name="fc"),
+    ])
+    params = nn.init_params(g, jax.random.PRNGKey(9))
+    frames = np.asarray(
+        np.random.default_rng(10).standard_normal((7, 1, 4)), np.float32)
+    ex = streaming.make_streaming_executor(g)
+    state = ex.init_state(params)
+    ref_outs, ref_em = streaming.sliding_window_reference(g, params, frames)
+    for t in range(frames.shape[0]):
+        state, out, em = ex.step(params, state, jnp.asarray(frames[t]))
+        assert bool(em) == bool(ref_em[t])
+        np.testing.assert_allclose(np.asarray(out), ref_outs[t],
+                                   rtol=1e-4, atol=1e-4)
